@@ -1,0 +1,28 @@
+"""Paper Figure 7: component breakdown ladder —
+vLLM-sarathi → vLLM-vanilla → FB-FixBatch → FB-TokenBudget → FB-vanilla →
+FB-PAB, peak goodput each."""
+from __future__ import annotations
+
+from .common import DEFAULT_HW, HARDWARE, peak_goodput
+
+LADDER = ["vllm-sarathi", "vllm-vanilla", "fb-fix-batch", "fb-token-budget",
+          "fb-vanilla", "fb-pab"]
+
+
+def run(quick: bool = True) -> list[dict]:
+    hw = HARDWARE[DEFAULT_HW]
+    from .common import LOAD_GRID_FULL, LOAD_GRID_QUICK
+    grid = LOAD_GRID_QUICK if quick else LOAD_GRID_FULL
+    rows = []
+    prev = None
+    for s in LADDER:
+        best = peak_goodput(s, "qwentrace", hw, grid,
+                            duration=90.0 if quick else 150.0)
+        row = {"bench": "breakdown", "system": s,
+               "peak_effective_rps": round(best["effective_rps"], 3)}
+        if prev:
+            row["vs_prev_pct"] = round(
+                100 * (best["effective_rps"] / max(prev, 1e-9) - 1), 1)
+        prev = best["effective_rps"]
+        rows.append(row)
+    return rows

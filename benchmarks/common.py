@@ -1,0 +1,129 @@
+"""Shared benchmark harness: hardware profiles (paper Table 1), system
+runners, Sarathi token-budget tuning, peak-goodput search."""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import LinearCostModel, PABAdmissionController, make_scheduler
+from repro.data.traces import TRACE_PROFILES, make_trace, scale_trace
+from repro.engine import Engine, EngineConfig, Request, SimExecutor
+from repro.engine.metrics import summarize
+
+SYSTEMS = ["vllm-vanilla", "vllm-sarathi", "fb-vanilla", "fb-pab"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    """Ground-truth linear step-time coefficients for a (model, GPU) pair.
+
+    Derived from paper Table 1 configs: b = 2·N_active / (TFLOPs·eff),
+    c = KV-bytes-per-ctx-token / (HBM·eff), a = launch+sync overhead.
+    """
+    name: str
+    a: float
+    b: float
+    c: float
+
+    def model(self) -> LinearCostModel:
+        return LinearCostModel(self.a, self.b, self.c)
+
+
+def _mk(name, n_active, kv_bytes_tok, tflops, hbm_tbs, n_gpus=1,
+        eff_f=0.55, eff_m=0.65):
+    return HardwareProfile(
+        name=name,
+        a=0.002 + 0.0008 * n_gpus,
+        b=2 * n_active / (tflops * 1e12 * eff_f * n_gpus),
+        c=kv_bytes_tok / (hbm_tbs * 1e12 * eff_m * n_gpus),
+    )
+
+
+# paper Table 1: model ↔ GPU pairs
+HARDWARE = {
+    "llama31-8b@a800": _mk("llama31-8b@a800", 8e9,
+                           32 * 8 * 128 * 2 * 2, 312, 2.0),
+    "qwen3-14b@h20": _mk("qwen3-14b@h20", 14e9,
+                         40 * 8 * 128 * 2 * 2, 148, 4.0),
+    "qwen3-32b@2xh20": _mk("qwen3-32b@2xh20", 32e9,
+                           64 * 8 * 128 * 2 * 2, 148, 4.0, n_gpus=2),
+    "llama33-70b@4xh20": _mk("llama33-70b@4xh20", 70e9,
+                             80 * 8 * 128 * 2 * 2, 148, 4.0, n_gpus=4),
+}
+DEFAULT_HW = "qwen3-14b@h20"
+
+
+def initial_estimate(hw: HardwareProfile) -> LinearCostModel:
+    """Deliberately-imperfect offline fit (±25%) — online calibration must
+    close the gap, as in the paper's continuous-calibration design."""
+    return LinearCostModel(hw.a, hw.b * 0.8, hw.c * 0.6)
+
+
+def run_system(system: str, trace, hw: HardwareProfile, ttft_slo: float,
+               tpot_slo: float, seed: int = 0, sarathi_budget: int = 0) -> dict:
+    admission = None
+    if system == "fb-pab":
+        sched = make_scheduler("fairbatching", initial_estimate(hw))
+        admission = PABAdmissionController(ttft_slo, tpot_slo)
+    elif system == "fb-vanilla":
+        sched = make_scheduler("fairbatching", initial_estimate(hw))
+    elif system == "vllm-sarathi":
+        budget = sarathi_budget or sarathi_auto_budget(hw, tpot_slo)
+        sched = make_scheduler("sarathi", initial_estimate(hw),
+                               token_budget=budget)
+    elif system in ("fb-fix-batch", "fb-token-budget"):
+        sched = make_scheduler(system, initial_estimate(hw))
+    else:
+        sched = make_scheduler("vllm-vanilla", initial_estimate(hw))
+    eng = Engine(sched, SimExecutor(hw.model(), seed=seed),
+                 EngineConfig(ttft_slo, tpot_slo), admission=admission)
+    for i, tr in enumerate(trace):
+        eng.submit(Request(i, tr.arrival, tr.prompt_len, tr.output_len,
+                           ttft_slo, tpot_slo))
+    done = eng.run()
+    out = summarize(done, duration=max(eng.now, 1e-9))
+    out["system"] = system
+    return out
+
+
+def sarathi_auto_budget(hw: HardwareProfile, tpot_slo: float) -> int:
+    """Stall-free bound: step_time(budget) ≤ TPOT SLO ('best tuned')."""
+    return max(32, int((tpot_slo * 0.9 - hw.a) / hw.b))
+
+
+def capacity_rps(hw: HardwareProfile, trace_name: str) -> float:
+    """Rough node capacity for a trace: 1 / mean per-request compute time."""
+    p = TRACE_PROFILES[trace_name]
+    ctx_avg = p.prompt_avg + p.output_avg / 2
+    per_req = (hw.b * (p.prompt_avg + p.output_avg)
+               + hw.c * p.output_avg * ctx_avg)
+    return 1.0 / per_req
+
+
+# Relative load points swept for peak-goodput search.
+LOAD_GRID_QUICK = (0.5, 0.75, 1.0, 1.25)
+LOAD_GRID_FULL = (0.4, 0.55, 0.7, 0.85, 1.0, 1.15, 1.3, 1.6)
+
+
+def peak_goodput(system: str, trace_name: str, hw: HardwareProfile,
+                 load_grid, duration: float = 120.0, seed: int = 0) -> dict:
+    """Sweep offered load as a fraction of estimated node capacity; return
+    the best effective-RPS point (the paper's peak-goodput protocol)."""
+    prof = TRACE_PROFILES[trace_name]
+    cap = capacity_rps(hw, trace_name)
+    best = {"effective_rps": -1.0}
+    base = make_trace(trace_name, rps=1.0, duration=duration * cap, seed=seed)
+    for frac in load_grid:
+        rps = frac * cap
+        trace = [t for t in scale_trace(base, rps) if t.arrival < duration]
+        res = run_system(system, trace, hw, prof.ttft_slo, prof.tpot_slo,
+                         seed=seed)
+        res["offered_rps"] = rps
+        if res["effective_rps"] > best["effective_rps"]:
+            best = res
+    return best
+
+
+def geomean(xs) -> float:
+    xs = [max(x, 1e-12) for x in xs]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))

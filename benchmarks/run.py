@@ -1,0 +1,112 @@
+"""Benchmark driver — one function per paper table/figure.
+
+``python -m benchmarks.run [--full] [--only NAME]``
+
+Prints one CSV line per bench: ``name,us_per_call,derived`` (derived =
+headline metric), followed by detail rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def _headline(name: str, rows: list[dict]) -> str:
+    try:
+        if name == "goodput":
+            g = {r["system"]: r["peak_effective_rps"] for r in rows
+                 if r.get("trace") == "GEOMEAN"}
+            return (f"geomean_peak_rps fb-pab={g.get('fb-pab')} "
+                    f"fb-vanilla={g.get('fb-vanilla')} "
+                    f"sarathi={g.get('vllm-sarathi')} "
+                    f"vanilla={g.get('vllm-vanilla')}")
+        if name == "latency":
+            fb = next(r for r in rows if r["system"] == "fb-vanilla")
+            sa = next(r for r in rows if r["system"] == "vllm-sarathi")
+            return (f"p99_ttft fb={fb['ttft_p99_ms']}ms "
+                    f"sarathi={sa['ttft_p99_ms']}ms "
+                    f"(x{sa['ttft_p99_ms']/max(fb['ttft_p99_ms'],1e-9):.2f})")
+        if name == "slo_grid":
+            return ("fb_vanilla_avg=+" + str(round(sum(
+                r["fb_vanilla_improvement_pct"] for r in rows) / len(rows), 1))
+                + "% fb_pab_avg=+" + str(round(sum(
+                    r["fb_pab_improvement_pct"] for r in rows) / len(rows), 1))
+                + "%")
+        if name == "breakdown":
+            return " -> ".join(f"{r['system']}={r['peak_effective_rps']}"
+                               for r in rows)
+        if name == "cluster":
+            dp8 = [r for r in rows if r.get("dp") == max(r2.get("dp", 0)
+                                                         for r2 in rows)]
+            pab = next((r for r in dp8 if r["lb"] == "pab-lb"
+                        and "failure" not in r["scheduler"]), None)
+            base = max((r["peak_effective_rps"] for r in dp8
+                        if r["lb"] == "vllm-lb"), default=0)
+            if pab and base:
+                return (f"dp8 pab-lb={pab['peak_effective_rps']} "
+                        f"best_count_lb={base} "
+                        f"(+{100*(pab['peak_effective_rps']/base-1):.1f}%)")
+        if name == "unfairness":
+            sa = next(r for r in rows if r["system"] == "sarathi")
+            fb = next(r for r in rows if r["system"] == "fairbatching")
+            return (f"decode_ahead sarathi={sa['decode_tokens_ahead_mean']:.0f}tok"
+                    f"/ttft_viol={sa['ttft_violations']} "
+                    f"fb={fb['decode_tokens_ahead_mean']:.0f}tok"
+                    f"/ttft_viol={fb['ttft_violations']}")
+        if name == "cost_model":
+            r = rows[0]
+            return (f"token_only_p95={r['token_only_p95_err_pct']}% "
+                    f"linear_p95={r['linear_p95_err_pct']}%")
+        if name == "roofline":
+            n = len(rows)
+            dom = {}
+            for r in rows:
+                dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+            return f"cells={n} dominant={dom}"
+    except (StopIteration, KeyError, ZeroDivisionError):
+        pass
+    return f"rows={len(rows)}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only")
+    ap.add_argument("--json-out", default="experiments/bench_results.json")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (breakdown_bench, cluster_bench, cost_model_bench,
+                   goodput_bench, latency_bench, roofline_report,
+                   slo_grid_bench, unfairness_bench)
+    benches = {
+        "cost_model": cost_model_bench.run,      # paper §3.2 accuracy claim
+        "unfairness": unfairness_bench.run,      # Fig 1/2
+        "goodput": goodput_bench.run,            # Table 3 / Fig 5
+        "latency": latency_bench.run,            # Table 4 / Fig 6
+        "slo_grid": slo_grid_bench.run,          # Table 5
+        "breakdown": breakdown_bench.run,        # Fig 7
+        "cluster": cluster_bench.run,            # Fig 8
+        "roofline": roofline_report.run,         # deliverable (g)
+    }
+    all_rows = {}
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        rows = fn(quick=quick)
+        dt_us = (time.time() - t0) * 1e6
+        all_rows[name] = rows
+        print(f"{name},{dt_us:.0f},{_headline(name, rows)}")
+        for r in rows:
+            print("  " + json.dumps(r))
+    if args.json_out:
+        import os
+        os.makedirs(os.path.dirname(args.json_out), exist_ok=True)
+        with open(args.json_out, "w") as f:
+            json.dump(all_rows, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Table 5: FB-vanilla & FB-PAB goodput improvement over the best
+baseline across a TTFT × TPOT SLO grid."""
+from __future__ import annotations
+
+from .common import DEFAULT_HW, HARDWARE, peak_goodput
+
+GRID_QUICK = [(0.5, 0.05), (0.5, 0.2), (2.0, 0.05), (2.0, 0.2)]
+GRID_FULL = [(t, p) for t in (0.5, 1.0, 1.5, 2.0)
+             for p in (0.05, 0.1, 0.15, 0.2)]
+
+
+def run(quick: bool = True) -> list[dict]:
+    import dataclasses
+
+    from repro.data.traces import TRACE_PROFILES
+    hw = HARDWARE[DEFAULT_HW]
+    from .common import LOAD_GRID_FULL, LOAD_GRID_QUICK
+    rps_grid = LOAD_GRID_QUICK if quick else LOAD_GRID_FULL
+    rows = []
+    for ttft, tpot in (GRID_QUICK if quick else GRID_FULL):
+        prof = dataclasses.replace(TRACE_PROFILES["qwentrace"],
+                                   ttft_slo=ttft, tpot_slo=tpot)
+        import repro.data.traces as T
+        orig = T.TRACE_PROFILES["qwentrace"]
+        T.TRACE_PROFILES["qwentrace"] = prof
+        try:
+            peaks = {s: peak_goodput(s, "qwentrace", hw, rps_grid,
+                                     duration=80.0)["effective_rps"]
+                     for s in ("vllm-vanilla", "vllm-sarathi",
+                               "fb-vanilla", "fb-pab")}
+        finally:
+            T.TRACE_PROFILES["qwentrace"] = orig
+        best_base = max(peaks["vllm-vanilla"], peaks["vllm-sarathi"])
+        rows.append({
+            "bench": "slo_grid", "ttft_slo": ttft, "tpot_slo": tpot,
+            "fb_vanilla_improvement_pct":
+                round(100 * (peaks["fb-vanilla"] / max(best_base, 1e-9) - 1), 1),
+            "fb_pab_improvement_pct":
+                round(100 * (peaks["fb-pab"] / max(best_base, 1e-9) - 1), 1),
+        })
+    return rows

@@ -1,0 +1,64 @@
+"""Paper Figures 1–2: the unfairness characterization.
+
+Runs Sarathi at medium load and measures (a) aggregate decode slack — tokens
+generated AHEAD of the envelope deadline — and (b) concurrent prefill TTFT
+violations. FairBatching on the same trace shows the slack being reclaimed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import LinearCostModel, make_scheduler, slack
+from repro.data.traces import TRACE_PROFILES, make_trace
+from repro.engine import Engine, EngineConfig, Request, SimExecutor
+
+from .common import DEFAULT_HW, HARDWARE, initial_estimate
+
+
+def _run(system: str, trace, hw) -> dict:
+    prof = TRACE_PROFILES["qwentrace"]
+    sched = make_scheduler("sarathi" if system == "sarathi" else "fairbatching",
+                           initial_estimate(hw),
+                           **({"token_budget": 256} if system == "sarathi" else {}))
+    eng = Engine(sched, SimExecutor(hw.model(), seed=3),
+                 EngineConfig(prof.ttft_slo, prof.tpot_slo))
+    for i, tr in enumerate(trace):
+        eng.submit(Request(i, tr.arrival, tr.prompt_len, tr.output_len,
+                           prof.ttft_slo, prof.tpot_slo))
+    slack_samples = []
+    ttft_late = 0
+    while eng.has_work:
+        rec = eng.step()
+        if rec is None:
+            continue
+        now = eng.now
+        tasks = [eng.requests[i].to_sched_task() for i in eng.active]
+        dec = [slack(t, now) / eng.requests[t.req_id].tpot_slo
+               for t in tasks if t.is_decode]
+        if dec:
+            slack_samples.append(sum(dec))   # aggregate tokens-ahead
+        ttft_late += sum(1 for t in tasks
+                         if t.is_prefill and slack(t, now) < 0)
+    done = eng.done
+    return {
+        "decode_tokens_ahead_mean": float(np.mean(slack_samples)) if slack_samples else 0.0,
+        "decode_tokens_ahead_p95": float(np.percentile(slack_samples, 95)) if slack_samples else 0.0,
+        "prefill_late_step_count": ttft_late,
+        "ttft_violations": sum(1 for m in done if not m.ttft_ok),
+        "tpot_violations": sum(1 for m in done if not m.tpot_ok),
+    }
+
+
+def run(quick: bool = True) -> list[dict]:
+    from .common import capacity_rps
+    hw = HARDWARE[DEFAULT_HW]
+    rps = 0.6 * capacity_rps(hw, "qwentrace")   # paper's "medium load"
+    trace = make_trace("qwentrace", rps=rps, duration=60 if quick else 150,
+                       seed=13)
+    rows = []
+    for system in ("sarathi", "fairbatching"):
+        r = _run(system, trace, hw)
+        r["bench"] = "unfairness"
+        r["system"] = system
+        rows.append(r)
+    return rows

@@ -1,0 +1,53 @@
+"""DP cluster demo: PAB-LB vs count-LB, with a mid-run node failure, a
+straggler rank, and an elastic scale-out (paper §5.5 + DESIGN.md §7).
+
+    PYTHONPATH=src python examples/cluster_sim.py --dp 4
+"""
+import argparse
+
+from benchmarks.common import DEFAULT_HW, HARDWARE, capacity_rps, initial_estimate
+from repro.cluster import Cluster, ClusterConfig, PABLB, RequestCountLB
+from repro.data.traces import make_trace
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dp", type=int, default=4)
+    ap.add_argument("--duration", type=float, default=90.0)
+    args = ap.parse_args()
+    hw = HARDWARE[DEFAULT_HW]
+    rps = 0.8 * capacity_rps(hw, "qwentrace") * args.dp
+    trace = make_trace("qwentrace", rps=rps, duration=args.duration, seed=5)
+    print(f"dp={args.dp} offered_rps={rps:.2f} requests={len(trace)}")
+
+    scenarios = [
+        ("count-LB", RequestCountLB, False, {}),
+        ("PAB-LB", PABLB, True, {}),
+        ("PAB-LB + straggler(3x rank0)", PABLB, True,
+         {"straggler_ranks": {0: 3.0}}),
+    ]
+    for name, lb_cls, adm, extra in scenarios:
+        cfg = ClusterConfig(n_ranks=args.dp, scheduler="fairbatching",
+                            admission=adm, true_model=hw.model(),
+                            est_model=initial_estimate(hw), **extra)
+        cl = Cluster(cfg, lb_cls(args.dp))
+        cl.run(trace)
+        s = cl.summary()
+        print(f"{name:32s} slo={s['slo_attainment']:.3f} "
+              f"eff_rps={s['effective_rps']:.2f} rej={s['rejected']}")
+
+    print("-- failure + elastic rejoin (PAB-LB) --")
+    cfg = ClusterConfig(n_ranks=args.dp, scheduler="fairbatching",
+                        admission=True, true_model=hw.model(),
+                        est_model=initial_estimate(hw))
+    cl = Cluster(cfg, PABLB(args.dp))
+    cl.schedule_failure(args.duration * 0.3, 0)
+    cl.schedule_join(args.duration * 0.6, 0)
+    cl.run(trace)
+    s = cl.summary()
+    print(f"{'kill rank0 @30%, rejoin @60%':32s} slo={s['slo_attainment']:.3f} "
+          f"eff_rps={s['effective_rps']:.2f} rej={s['rejected']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Replay a production-like trace against all four systems (simulated
+hardware, any --arch from the pool) and print the paper-style comparison.
+
+    PYTHONPATH=src python examples/serve_trace.py --trace qwentrace \
+        --arch stablelm-3b --rps-frac 0.7
+"""
+import argparse
+
+from benchmarks.common import (DEFAULT_HW, HARDWARE, SYSTEMS, capacity_rps,
+                               run_system)
+from repro import configs
+from repro.data.traces import TRACE_PROFILES, make_trace
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default="qwentrace",
+                    choices=list(TRACE_PROFILES))
+    ap.add_argument("--arch", default=None,
+                    help="assigned arch id; scales the cost model by its "
+                         "active params (default: qwen3-14b profile)")
+    ap.add_argument("--rps-frac", type=float, default=0.7,
+                    help="offered load as fraction of node capacity")
+    ap.add_argument("--duration", type=float, default=120.0)
+    args = ap.parse_args()
+
+    hw = HARDWARE[DEFAULT_HW]
+    if args.arch:
+        import dataclasses
+        arch = configs.get(args.arch)
+        scale = arch.active_param_count() / 14e9
+        hw = dataclasses.replace(hw, name=args.arch, b=hw.b * scale)
+    prof = TRACE_PROFILES[args.trace]
+    rps = args.rps_frac * capacity_rps(hw, args.trace)
+    trace = make_trace(args.trace, rps=rps, duration=args.duration, seed=1)
+    print(f"trace={args.trace} rps={rps:.2f} n={len(trace)} hw={hw.name}")
+    print(f"{'system':14s} {'SLO':>6s} {'effRPS':>7s} {'ttft p99':>9s} "
+          f"{'tpot p99':>9s} {'rejected':>8s}")
+    for s in SYSTEMS:
+        r = run_system(s, trace, hw, prof.ttft_slo, prof.tpot_slo)
+        print(f"{s:14s} {r['slo_attainment']:6.3f} {r['effective_rps']:7.2f} "
+              f"{r['ttft_p99']*1e3:8.0f}m {r['tpot_p99']*1e3:8.1f}m "
+              f"{r['rejected']:8d}")
+
+
+if __name__ == "__main__":
+    main()

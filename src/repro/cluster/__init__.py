@@ -1,0 +1,6 @@
+from .load_balancer import (LoadBalancer, RequestCountLB, PABLB,
+                            RoundRobinLB)
+from .cluster import Cluster, ClusterConfig
+
+__all__ = ["LoadBalancer", "RequestCountLB", "PABLB", "RoundRobinLB",
+           "Cluster", "ClusterConfig"]

@@ -1,0 +1,202 @@
+"""Data-parallel serving cluster: N engines + one upper-level scheduler.
+
+Reproduces the paper's §5.5 setup (DP ranks, per-rank FairBatching/Sarathi/
+vanilla scheduler, count-LB vs PAB-LB), plus the fault-tolerance and
+elasticity behaviours designed for 1000+-node fleets (DESIGN.md §7):
+
+  * node failure — rank marked dead on missed heartbeat; its queued/prefill
+    requests are token-level re-dispatched (cheap, as the paper notes in
+    §3.3); in-flight decodes are converted to re-prefill of their known
+    prefix and re-routed;
+  * stragglers — a slow rank's online-calibrated cost model inflates, its
+    reported PAB shrinks, and the PAB-LB organically starves it;
+  * elastic scale-out/in — ranks join/leave with only an LB-table update
+    (serving DP holds no cross-rank state).
+
+The LB sees engine state only through periodic reports + its own local
+decrements — the eventual-consistency regime the paper designs PAB for.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+from ..core.cost_model import LinearCostModel
+from ..core.pab import PABAdmissionController
+from ..core.schedulers import make_scheduler
+from ..data.traces import TraceRequest
+from ..engine.engine import Engine, EngineConfig
+from ..engine.executor import SimExecutor
+from ..engine.metrics import RequestMetrics, measure, summarize
+from ..engine.request import Request, RequestState
+from .load_balancer import LoadBalancer
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    n_ranks: int = 4
+    scheduler: str = "fairbatching"
+    ttft_slo: float = 0.5
+    tpot_slo: float = 0.05
+    admission: bool = False              # per-rank PAB admission control
+    # true per-rank hardware (index → model); default homogeneous
+    true_model: LinearCostModel = dataclasses.field(
+        default_factory=lambda: LinearCostModel(a=0.003, b=190e-6, c=20e-9))
+    straggler_ranks: dict = dataclasses.field(default_factory=dict)
+    # {rank: slowdown_factor}
+    est_model: LinearCostModel = dataclasses.field(
+        default_factory=lambda: LinearCostModel(a=0.003, b=150e-6, c=10e-9))
+    seed: int = 0
+
+
+class Cluster:
+    def __init__(self, cfg: ClusterConfig, lb: LoadBalancer):
+        self.cfg = cfg
+        self.lb = lb
+        self.engines: dict[int, Engine] = {}
+        self.done: list[RequestMetrics] = []
+        self._rank_of: dict[int, int] = {}
+        self._req_src: dict[int, TraceRequest] = {}
+        self.failures: list[tuple[float, int]] = []      # (time, rank)
+        self.joins: list[tuple[float, int]] = []
+        self.now = 0.0
+        for r in range(cfg.n_ranks):
+            self._make_engine(r)
+
+    # ------------------------------------------------------------------
+
+    def _make_engine(self, rank: int) -> None:
+        cfg = self.cfg
+        slow = cfg.straggler_ranks.get(rank, 1.0)
+        true = LinearCostModel(a=cfg.true_model.a,
+                               b=cfg.true_model.b * slow,
+                               c=cfg.true_model.c * slow)
+        sched = make_scheduler(cfg.scheduler,
+                               LinearCostModel(cfg.est_model.a,
+                                               cfg.est_model.b,
+                                               cfg.est_model.c))
+        adm = (PABAdmissionController(cfg.ttft_slo, cfg.tpot_slo)
+               if cfg.admission else None)
+        self.engines[rank] = Engine(
+            sched, SimExecutor(true, seed=cfg.seed * 131 + rank),
+            EngineConfig(cfg.ttft_slo, cfg.tpot_slo), admission=adm,
+            rank=rank)
+
+    def schedule_failure(self, t: float, rank: int) -> None:
+        self.failures.append((t, rank))
+        self.failures.sort()
+
+    def schedule_join(self, t: float, rank: int) -> None:
+        self.joins.append((t, rank))
+        self.joins.sort()
+
+    # ------------------------------------------------------------------
+
+    def _report(self, rank: int) -> None:
+        eng = self.engines[rank]
+        waiting = sum(1 for i in eng.active
+                      if eng.requests[i].state in (RequestState.QUEUED,
+                                                   RequestState.PREFILL))
+        running = len(eng.active) - waiting
+        self.lb.report(rank, {"pab": eng.pab(), "waiting": waiting,
+                              "running": running + len(eng.pending)})
+
+    def _route(self, tr: TraceRequest, req_id: int, arrival: float) -> None:
+        rank = self.lb.route(tr.prompt_len)
+        if rank is None:
+            req = Request(req_id, arrival, tr.prompt_len, tr.output_len,
+                          self.cfg.ttft_slo, self.cfg.tpot_slo)
+            req.state = RequestState.REJECTED
+            self.done.append(measure(req))
+            return
+        self.lb.on_dispatch(rank, tr.prompt_len, tr.output_len)
+        req = Request(req_id, arrival, tr.prompt_len, tr.output_len,
+                      self.cfg.ttft_slo, self.cfg.tpot_slo)
+        self.engines[rank].submit(req)
+        self._rank_of[req_id] = rank
+        self._req_src[req_id] = tr
+
+    def _fail_rank(self, rank: int) -> None:
+        """Kill a rank; re-route its work (DESIGN.md §7)."""
+        self.lb.set_alive(rank, False)
+        eng = self.engines.pop(rank)
+        orphans = ([eng.requests[i] for i in eng.active] + eng.pending)
+        for req in orphans:
+            if not req.active:
+                continue
+            # decode → re-prefill of the full known prefix elsewhere
+            new_prompt = req.prompt_len + max(0, req.generated)
+            tr = TraceRequest(req.arrival, new_prompt,
+                              max(1, req.max_new_tokens - req.generated))
+            nr = self.lb.route(tr.prompt_len)
+            if nr is None:
+                req.state = RequestState.REJECTED
+                self.done.append(measure(req))
+                continue
+            self.lb.on_dispatch(nr, tr.prompt_len, tr.output_len)
+            moved = Request(req.req_id, req.arrival, tr.prompt_len,
+                            req.max_new_tokens, req.ttft_slo, req.tpot_slo)
+            # keep already-emitted token times: SLO accounting is end-to-end
+            moved.output_times = list(req.output_times)
+            moved.generated = req.generated
+            if req.output_times:
+                moved.state = RequestState.PREFILL
+            self.engines[nr].submit(moved)
+            self._rank_of[req.req_id] = nr
+
+    def _join_rank(self, rank: int) -> None:
+        self._make_engine(rank)
+        self.engines[rank].now = self.now
+        if rank >= self.lb.n_ranks:
+            self.lb.n_ranks = rank + 1
+            self.lb.alive.append(True)
+            if hasattr(self.lb, "pab"):
+                self.lb.pab.append(math.inf)
+            if hasattr(self.lb, "counts"):
+                self.lb.counts.append(0.0)
+        else:
+            self.lb.set_alive(rank, True)
+
+    # ------------------------------------------------------------------
+
+    def run(self, trace: list[TraceRequest]) -> list[RequestMetrics]:
+        arrivals = sorted(trace, key=lambda t: t.arrival)
+        idx = 0
+        next_id = 0
+        while True:
+            busy = [(e.now, r) for r, e in self.engines.items() if e.has_work]
+            t_engine = min(busy)[0] if busy else math.inf
+            t_arrival = arrivals[idx].arrival if idx < len(arrivals) else math.inf
+            t_fail = self.failures[0][0] if self.failures else math.inf
+            t_join = self.joins[0][0] if self.joins else math.inf
+            t = min(t_engine, t_arrival, t_fail, t_join)
+            if t is math.inf:
+                break
+            self.now = max(self.now, t)
+            if t_fail <= t:
+                _, rank = self.failures.pop(0)
+                self._fail_rank(rank)
+                continue
+            if t_join <= t:
+                _, rank = self.joins.pop(0)
+                self._join_rank(rank)
+                continue
+            if t_arrival <= t_engine:
+                self._route(arrivals[idx], next_id, t_arrival)
+                idx += 1
+                next_id += 1
+                continue
+            rank = min(busy)[1]
+            eng = self.engines[rank]
+            n_before = len(eng.done)
+            eng.step()
+            if len(eng.done) > n_before:
+                self.done.extend(eng.done[n_before:])
+            self._report(rank)
+        # requests that never finished (e.g. still queued at kill time)
+        return self.done
+
+    def summary(self) -> dict:
+        dur = max((e.now for e in self.engines.values()), default=self.now)
+        return summarize(self.done, duration=max(dur, 1e-9))

@@ -1,0 +1,109 @@
+"""Upper-level (cluster) schedulers — paper §3.4.
+
+The LB's decision model mirrors production constraints: it sees only
+periodically-reported metrics plus its own local decrements (eventual
+consistency; no strong sync with engines).
+
+* ``RequestCountLB`` — vLLM's native DPLB: waiting + running request count.
+* ``PABLB`` — FairBatching's Prefill Admission Budget: route to a node whose
+  budget covers the incoming prompt; decrement the local view on dispatch.
+  Doubles as the straggler/fault signal (DESIGN.md §7): dead or slow ranks
+  report shrinking PAB and organically stop receiving work.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Protocol
+
+
+class LoadBalancer(Protocol):
+    name: str
+
+    def route(self, prompt_len: int) -> Optional[int]: ...
+    def report(self, rank: int, metrics: dict) -> None: ...
+    def on_dispatch(self, rank: int, prompt_len: int, output_len_hint: int) -> None: ...
+    def set_alive(self, rank: int, alive: bool) -> None: ...
+
+
+class _Base:
+    def __init__(self, n_ranks: int):
+        self.n_ranks = n_ranks
+        self.alive = [True] * n_ranks
+
+    def set_alive(self, rank: int, alive: bool) -> None:
+        self.alive[rank] = alive
+
+    def _ranks(self):
+        return [r for r in range(self.n_ranks) if self.alive[r]]
+
+
+class RoundRobinLB(_Base):
+    name = "round-robin"
+
+    def __init__(self, n_ranks: int):
+        super().__init__(n_ranks)
+        self._i = 0
+
+    def route(self, prompt_len: int) -> Optional[int]:
+        ranks = self._ranks()
+        if not ranks:
+            return None
+        self._i += 1
+        return ranks[self._i % len(ranks)]
+
+    def report(self, rank, metrics):
+        pass
+
+    def on_dispatch(self, rank, prompt_len, output_len_hint):
+        pass
+
+
+class RequestCountLB(_Base):
+    """vLLM DPLB: linear combination of waiting + running counts."""
+    name = "vllm-lb"
+
+    def __init__(self, n_ranks: int, waiting_weight: float = 2.0):
+        super().__init__(n_ranks)
+        self.counts = [0.0] * n_ranks
+        self.ww = waiting_weight
+
+    def route(self, prompt_len: int) -> Optional[int]:
+        ranks = self._ranks()
+        if not ranks:
+            return None
+        return min(ranks, key=lambda r: self.counts[r])
+
+    def report(self, rank: int, metrics: dict) -> None:
+        self.counts[rank] = (self.ww * metrics.get("waiting", 0)
+                             + metrics.get("running", 0))
+
+    def on_dispatch(self, rank, prompt_len, output_len_hint):
+        self.counts[rank] += self.ww
+
+
+class PABLB(_Base):
+    """Prefill-Admission-Budget LB (the paper's contribution C5)."""
+    name = "pab-lb"
+
+    def __init__(self, n_ranks: int):
+        super().__init__(n_ranks)
+        self.pab = [math.inf] * n_ranks
+
+    def route(self, prompt_len: int) -> Optional[int]:
+        ranks = self._ranks()
+        if not ranks:
+            return None
+        # most-loaded-that-fits packs bursts tightly; fall back to max PAB
+        fitting = [r for r in ranks if self.pab[r] >= prompt_len]
+        if fitting:
+            return max(fitting, key=lambda r: self.pab[r])
+        return max(ranks, key=lambda r: self.pab[r])
+
+    def report(self, rank: int, metrics: dict) -> None:
+        self.pab[rank] = metrics.get("pab", 0.0)
+
+    def on_dispatch(self, rank: int, prompt_len: int, output_len_hint: int) -> None:
+        # local-view decrement until the next engine report (paper §3.4)
+        if self.pab[rank] is not math.inf:
+            self.pab[rank] -= prompt_len

@@ -1,0 +1,19 @@
+"""Config registry: one module per assigned architecture + shapes."""
+from .base import (ArchConfig, MoEConfig, SSMConfig, ShapeConfig, SHAPES,
+                   cells, long_context_capable, get, get_reduced, all_archs)
+
+_LOADED = False
+
+
+def _load_all() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    from . import (mixtral_8x7b, kimi_k2_1t_a32b, pixtral_12b, mamba2_1_3b,  # noqa: F401
+                   gemma3_1b, stablelm_3b, deepseek_67b, h2o_danube_1_8b,
+                   zamba2_2_7b, seamless_m4t_large_v2)
+    _LOADED = True
+
+
+__all__ = ["ArchConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "SHAPES",
+           "cells", "long_context_capable", "get", "get_reduced", "all_archs"]

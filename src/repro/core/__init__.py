@@ -1,0 +1,25 @@
+"""FairBatching core: the paper's contribution, engine-agnostic.
+
+Public API re-exports. See DESIGN.md §1 for the contribution → module map.
+"""
+from .types import SchedTask, TaskKind, BatchItem, BatchPlan
+from .slo import token_deadline, request_deadline, slack, attainment
+from .cost_model import (LinearCostModel, TokenCostModel, PaddedCostModel,
+                         RecursiveLeastSquares, fit_linear, default_buckets)
+from .capacity import init_time_budget, min_tpot_slo
+from .batch_formation import FormationConfig, classify, form_batch
+from .pab import prefill_admission_budget, PABAdmissionController
+from .schedulers import (Scheduler, FairBatchingScheduler, SarathiScheduler,
+                         VLLMVanillaScheduler, make_scheduler)
+
+__all__ = [
+    "SchedTask", "TaskKind", "BatchItem", "BatchPlan",
+    "token_deadline", "request_deadline", "slack", "attainment",
+    "LinearCostModel", "TokenCostModel", "PaddedCostModel",
+    "RecursiveLeastSquares", "fit_linear", "default_buckets",
+    "init_time_budget", "min_tpot_slo",
+    "FormationConfig", "classify", "form_batch",
+    "prefill_admission_budget", "PABAdmissionController",
+    "Scheduler", "FairBatchingScheduler", "SarathiScheduler",
+    "VLLMVanillaScheduler", "make_scheduler",
+]

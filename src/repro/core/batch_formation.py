@@ -1,0 +1,110 @@
+"""Fair and dynamic batch formation — the paper's Algorithm 1 (§3.3).
+
+Three groups, packed in reversed-priority order:
+
+  1. ``group_ud`` — urgent decodes: slack < init_time_budget + min_tpot_slo.
+     Skipping one would likely violate its envelope next step; they are
+     admitted unconditionally (paper: "conservatively ensures that urgent
+     decode tasks are always included"), which is also what makes the policy
+     degrade gracefully to Sarathi under extreme load.
+  2. ``group_p`` — prefills: TTFT-critical, arrival pattern unpredictable, so
+     they outrank decodes that still have slack.
+  3. ``group_nd`` — non-urgent decodes: admitted only into leftover capacity;
+     deferring them converts their accumulated slack into prefill capacity —
+     the fairness reclamation at the heart of the paper.
+
+Each group is sorted by slack ascending. Prefills larger than the remaining
+budget are *chunked* (chunked-prefill) to exactly fill it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from . import capacity, slo
+from .cost_model import LinearCostModel
+from .types import BatchItem, BatchPlan, SchedTask, TaskKind
+
+
+@dataclasses.dataclass
+class FormationConfig:
+    max_token_budget: int = 8192      # largest compiled step shape (CUDA-graph analogue)
+    max_time_budget: float = math.inf # cap when no decode task bounds the step
+    min_chunk: int = 16               # don't schedule prefill slivers below this
+    force_urgent_decodes: bool = True # admit group_ud even past the budget
+    # Execution-noise headroom: the envelope admits steps ending exactly AT a
+    # deadline; a few % of jitter then lands tokens late and the max-TPOT
+    # metric counts a single late token as a violated request. Packing uses
+    # safety × budget (beyond-paper robustness knob, EXPERIMENTS.md).
+    safety: float = 0.93
+
+
+def classify(tasks: Sequence[SchedTask], now: float, time_budget: float,
+             min_tpot: float) -> tuple[list[SchedTask], list[SchedTask], list[SchedTask]]:
+    """Split tasks into (urgent decode, prefill, non-urgent decode), slack-sorted."""
+    group_ud: list[SchedTask] = []
+    group_p: list[SchedTask] = []
+    group_nd: list[SchedTask] = []
+    urgency_bound = time_budget + min_tpot
+    for t in tasks:
+        if t.is_decode and slo.slack(t, now) < urgency_bound:
+            group_ud.append(t)
+        elif t.is_prefill:
+            group_p.append(t)
+        else:
+            group_nd.append(t)
+    key = lambda t: slo.slack(t, now)
+    group_ud.sort(key=key)
+    group_p.sort(key=key)
+    group_nd.sort(key=key)
+    return group_ud, group_p, group_nd
+
+
+def form_batch(tasks: Sequence[SchedTask], now: float, model: LinearCostModel,
+               cfg: FormationConfig) -> BatchPlan:
+    """Algorithm 1. Returns the batch plan for the next step."""
+    if not tasks:
+        return BatchPlan(items=[], predicted_time=0.0, time_budget=0.0,
+                         token_budget_used=0, token_budget_total=cfg.max_token_budget)
+
+    budget0 = capacity.init_time_budget(tasks, now, cfg.max_time_budget)
+    min_tpot = capacity.min_tpot_slo(tasks)
+    group_ud, group_p, group_nd = classify(tasks, now, budget0, min_tpot)
+
+    time_budget = budget0 * cfg.safety - model.a
+    token_budget = cfg.max_token_budget
+    items: list[BatchItem] = []
+
+    for group, is_ud in ((group_ud, True), (group_p, False), (group_nd, False)):
+        for t in group:
+            if token_budget <= 0 and not (is_ud and cfg.force_urgent_decodes):
+                continue
+            ctx = t.cost_context()
+            time_cost = model.task_cost(t.new_tokens, ctx)
+            if (time_cost <= time_budget and t.new_tokens <= token_budget) or \
+                    (is_ud and cfg.force_urgent_decodes):
+                items.append(BatchItem(t.req_id, t.new_tokens, t.kind))
+                time_budget -= time_cost
+                token_budget -= t.new_tokens
+            elif token_budget > 0 and model.c * ctx <= time_budget and model.b > 0:
+                # Partial admission: chunk the task to exactly fill the budget.
+                fit = ((time_budget - model.c * ctx) / model.b
+                       if math.isfinite(time_budget) else token_budget)
+                cp = min(token_budget, int(fit))
+                if t.is_decode or cp < min(cfg.min_chunk, t.new_tokens):
+                    continue  # decodes are atomic; skip sliver chunks
+                cp = min(cp, t.new_tokens)
+                items.append(BatchItem(t.req_id, cp, t.kind))
+                time_budget -= model.task_cost(cp, ctx)
+                token_budget -= cp
+
+    total_nt = sum(it.n_tokens for it in items)
+    total_ctx = 0
+    by_id = {t.req_id: t for t in tasks}
+    for it in items:
+        total_ctx += by_id[it.req_id].cost_context()
+    predicted = model.step_time(total_nt, total_ctx)
+    return BatchPlan(items=items, predicted_time=predicted, time_budget=budget0,
+                     token_budget_used=cfg.max_token_budget - token_budget,
+                     token_budget_total=cfg.max_token_budget)

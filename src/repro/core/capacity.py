@@ -1,0 +1,41 @@
+"""Adaptive batch-capacity determination (paper §3.2).
+
+The batch's maximum execution time is bounded by the smallest deadline slack
+among *decode* tasks (running longer than that would push some decode past
+its envelope). Under decode bursts that bound can collapse toward zero, so
+the paper floors it at the smallest TPOT SLO among active requests:
+
+    init_time_budget = max(min_i slack_i, min_i tpot_slo_i)
+
+Notes vs the paper:
+  * §3.2 prose takes min slack over decode requests; Algorithm 1's pseudocode
+    loops over all active requests. We follow the prose (decode-only min):
+    a late prefill has negative slack, and shrinking the budget because
+    prefill is late would starve the very task that needs a big batch. The
+    divergence is flagged here and covered by a unit test.
+  * With no active decode tasks there is no TPOT bound; capacity is limited
+    only by the engine's largest compiled step (``max_time_budget``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+from . import slo
+from .types import SchedTask
+
+
+def init_time_budget(tasks: Sequence[SchedTask], now: float,
+                     max_time_budget: float = math.inf) -> float:
+    decode_slacks = [slo.slack(t, now) for t in tasks if t.is_decode]
+    tpots = [t.tpot_slo for t in tasks]
+    if not decode_slacks:
+        return max_time_budget
+    budget = max(min(decode_slacks), min(tpots))
+    return min(budget, max_time_budget)
+
+
+def min_tpot_slo(tasks: Sequence[SchedTask]) -> float:
+    if not tasks:
+        return math.inf
+    return min(t.tpot_slo for t in tasks)

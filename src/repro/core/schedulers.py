@@ -1,0 +1,200 @@
+"""Step-level schedulers: FairBatching and the paper's baselines (§2.3, §5.1).
+
+All schedulers implement ``schedule(now, tasks) -> BatchPlan`` over the same
+``SchedTask`` views, so engines/simulators/benchmarks can swap them freely.
+
+Systems reproduced:
+  * ``VLLMVanillaScheduler``   — prefill-prioritizing FCFS with a large
+    max-BS (vLLM default / v1 FIFO behaviour).
+  * ``SarathiScheduler``       — stall-free batching: every active decode is
+    in every batch; remaining *token* budget goes to chunked prefills.
+  * ``FairBatchingScheduler``  — the paper. Variants for the Fig-7 ablation
+    ladder are flags: FB-FixBatch (``budget_mode="fixed"``), FB-TokenBudget
+    (``budget_mode="token"``), FB-vanilla (``budget_mode="time"``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Protocol, Sequence
+
+from . import capacity, slo
+from .batch_formation import FormationConfig, form_batch
+from .cost_model import LinearCostModel, RecursiveLeastSquares
+from .types import BatchItem, BatchPlan, SchedTask, TaskKind
+
+
+class Scheduler(Protocol):
+    name: str
+
+    def schedule(self, now: float, tasks: Sequence[SchedTask]) -> BatchPlan: ...
+
+    def observe(self, total_new_tokens: int, total_context: int,
+                measured_time: float) -> None: ...
+
+
+class _CalibratingScheduler:
+    """Shared online-calibration plumbing (paper §3.2, 'continuously calibrated')."""
+
+    def __init__(self, model: LinearCostModel, calibrate: bool = True):
+        self.model = model
+        self._rls: Optional[RecursiveLeastSquares] = None
+        if calibrate:
+            self._rls = RecursiveLeastSquares(theta0=(model.a, model.b, model.c))
+
+    def observe(self, total_new_tokens: int, total_context: int,
+                measured_time: float) -> None:
+        if self._rls is None or total_new_tokens <= 0:
+            return
+        self._rls.update(total_new_tokens, total_context, measured_time)
+        if self._rls.n_obs >= 32:          # warmup before trusting online fit
+            self.model = self._rls.model()
+
+
+class FairBatchingScheduler(_CalibratingScheduler):
+    """The paper's scheduler. ``budget_mode``:
+
+    - "time"  (FB-vanilla): adaptive time budget from decode slack (§3.2).
+    - "token" (FB-TB ablation): slack converted to a token budget through the
+      token-only model (context term ignored when sizing the batch).
+    - "fixed" (FB-FB ablation): Sarathi-style fixed token budget; only the
+      3-group formation of §3.3 is active.
+    """
+
+    def __init__(self, model: LinearCostModel,
+                 formation: Optional[FormationConfig] = None,
+                 budget_mode: str = "time", calibrate: bool = True,
+                 fixed_token_budget: int = 512,
+                 cold_start_safety: float = 0.7, warmup_obs: int = 32):
+        super().__init__(model, calibrate)
+        assert budget_mode in ("time", "token", "fixed")
+        self.budget_mode = budget_mode
+        self.formation = formation or FormationConfig()
+        self.fixed_token_budget = fixed_token_budget
+        self.cold_start_safety = cold_start_safety
+        self.warmup_obs = warmup_obs
+        self.name = {"time": "fairbatching", "token": "fb-token-budget",
+                     "fixed": "fb-fix-batch"}[budget_mode]
+
+    def schedule(self, now: float, tasks: Sequence[SchedTask]) -> BatchPlan:
+        cfg = self.formation
+        # Cold start: until the online calibration has seen enough steps the
+        # offline model can't be trusted near deadlines — pack extra
+        # conservatively (paper assumes an offline-profiled model; this
+        # covers deploys onto unprofiled hardware).
+        if self._rls is not None and self._rls.n_obs < self.warmup_obs:
+            cfg = dataclasses.replace(
+                cfg, safety=cfg.safety * self.cold_start_safety)
+        model = self.model
+        if self.budget_mode == "fixed":
+            cfg = dataclasses.replace(cfg, max_token_budget=self.fixed_token_budget)
+            # Fixed-size steps: the time budget never binds, only tokens do.
+            budget = self.fixed_token_budget
+            model = LinearCostModel(a=model.a, b=model.b, c=model.c)
+            cfg = dataclasses.replace(cfg, max_time_budget=model.step_time(budget, 0))
+        elif self.budget_mode == "token":
+            # Convert the slack-derived time budget to tokens via the
+            # token-only model: ignores context, reproducing FB-TB's
+            # mis-estimation under long contexts (paper Fig 7 step 4).
+            t_budget = capacity.init_time_budget(tasks, now, cfg.max_time_budget)
+            tok = model.tokens_within(t_budget) if math.isfinite(t_budget) else cfg.max_token_budget
+            cfg = dataclasses.replace(
+                cfg, max_token_budget=max(1, min(tok, cfg.max_token_budget)))
+            model = LinearCostModel(a=model.a, b=model.b, c=0.0)
+        return form_batch(tasks, now, model, cfg)
+
+
+class SarathiScheduler(_CalibratingScheduler):
+    """Stall-free batching (Sarathi). Decode-prioritizing:
+
+    1. every active decode task joins the batch (1 token each);
+    2. leftover token budget is given to prefills, FCFS, chunked.
+
+    ``token_budget`` is the tuned hyperparameter (paper: "best tuned for each
+    testcase"); benchmarks sweep it.
+    """
+
+    def __init__(self, model: LinearCostModel, token_budget: int = 512,
+                 calibrate: bool = True):
+        super().__init__(model, calibrate)
+        self.token_budget = token_budget
+        self.name = "sarathi"
+
+    def schedule(self, now: float, tasks: Sequence[SchedTask]) -> BatchPlan:
+        items: list[BatchItem] = []
+        budget = self.token_budget
+        total_ctx = 0
+        for t in tasks:
+            if t.is_decode:
+                items.append(BatchItem(t.req_id, 1, t.kind))
+                budget -= 1
+                total_ctx += t.cost_context()
+        for t in sorted((t for t in tasks if t.is_prefill), key=lambda t: t.arrival):
+            if budget <= 0:
+                break
+            grant = min(budget, t.new_tokens)
+            items.append(BatchItem(t.req_id, grant, t.kind))
+            budget -= grant
+            total_ctx += t.cost_context()
+        nt = sum(it.n_tokens for it in items)
+        return BatchPlan(items=items,
+                         predicted_time=self.model.step_time(nt, total_ctx),
+                         time_budget=math.inf,
+                         token_budget_used=self.token_budget - budget,
+                         token_budget_total=self.token_budget)
+
+
+class VLLMVanillaScheduler(_CalibratingScheduler):
+    """Prefill-prioritizing FCFS with a large max-BS (vLLM default).
+
+    When prefills are waiting they are scheduled first (whole prompts, FCFS)
+    up to ``max_num_batched_tokens``; decodes fill what remains — so a prompt
+    burst delays decodes, reproducing vLLM-vanilla's TBT/TPOT tail (Fig 6).
+    """
+
+    def __init__(self, model: LinearCostModel,
+                 max_num_batched_tokens: int = 8192, calibrate: bool = True):
+        super().__init__(model, calibrate)
+        self.max_tokens = max_num_batched_tokens
+        self.name = "vllm-vanilla"
+
+    def schedule(self, now: float, tasks: Sequence[SchedTask]) -> BatchPlan:
+        items: list[BatchItem] = []
+        budget = self.max_tokens
+        total_ctx = 0
+        prefills = sorted((t for t in tasks if t.is_prefill), key=lambda t: t.arrival)
+        for t in prefills:
+            if budget <= 0:
+                break
+            grant = min(budget, t.new_tokens)
+            items.append(BatchItem(t.req_id, grant, t.kind))
+            budget -= grant
+            total_ctx += t.cost_context()
+        if not items:  # no waiting prefill: pure decode batch
+            for t in tasks:
+                if t.is_decode and budget > 0:
+                    items.append(BatchItem(t.req_id, 1, t.kind))
+                    budget -= 1
+                    total_ctx += t.cost_context()
+        nt = sum(it.n_tokens for it in items)
+        return BatchPlan(items=items,
+                         predicted_time=self.model.step_time(nt, total_ctx),
+                         time_budget=math.inf,
+                         token_budget_used=self.max_tokens - budget,
+                         token_budget_total=self.max_tokens)
+
+
+def make_scheduler(name: str, model: LinearCostModel, **kw) -> Scheduler:
+    """Factory used by configs/CLI: name in
+    {vllm-vanilla, sarathi, fairbatching, fb-token-budget, fb-fix-batch}."""
+    if name == "vllm-vanilla":
+        return VLLMVanillaScheduler(model, **kw)
+    if name == "sarathi":
+        return SarathiScheduler(model, **kw)
+    if name == "fairbatching":
+        return FairBatchingScheduler(model, budget_mode="time", **kw)
+    if name == "fb-token-budget":
+        return FairBatchingScheduler(model, budget_mode="token", **kw)
+    if name == "fb-fix-batch":
+        return FairBatchingScheduler(model, budget_mode="fixed", **kw)
+    raise ValueError(f"unknown scheduler: {name!r}")

@@ -1,0 +1,3 @@
+from .traces import TraceRequest, make_trace, TRACE_PROFILES, scale_trace
+
+__all__ = ["TraceRequest", "make_trace", "TRACE_PROFILES", "scale_trace"]

@@ -1,0 +1,5 @@
+from .sharding import (ShardingRules, constrain, use_rules, axes_to_spec,
+                       param_specs, serving_rules, training_rules)
+
+__all__ = ["ShardingRules", "constrain", "use_rules", "axes_to_spec",
+           "param_specs", "serving_rules", "training_rules"]

@@ -1,0 +1,182 @@
+"""Logical-axis sharding: models annotate tensors with *logical* names;
+a ShardingRules table maps them to mesh axes per (arch, mode).
+
+Models stay mesh-agnostic: ``constrain(x, ("batch", "seq", "embed"))`` is an
+identity unless a rules context is active (set by launch/dryrun/train), in
+which case it lowers to ``with_sharding_constraint``. Param pytrees carry a
+parallel "axes" pytree of logical names; ``param_specs`` resolves it to
+PartitionSpecs for in_shardings.
+
+Default rule tables (DESIGN.md §6):
+
+serving:  batch→data(+pod), heads/ffn/vocab/kv_heads→model, embed→None
+          experts→model when divisible, else expert_ff→model
+          kimi-k2: experts→model AND expert_ff→data (2-D, 256-way weights)
+          cache_seq→data or model for context-parallel cells
+training: adds embed→data (FSDP param/optimizer sharding)
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh
+    table: dict  # logical name -> mesh axis name | tuple | None
+
+    def spec(self, axes: tuple) -> P:
+        parts = []
+        used = set()
+        for a in axes:
+            m = self.table.get(a) if a is not None else None
+            members = (set(m) if isinstance(m, tuple)
+                       else {m} if m is not None else set())
+            # one mesh axis may appear only once in a spec
+            if m is None or members & used:
+                parts.append(None)
+            else:
+                parts.append(m)
+                used |= members
+        return P(*parts)
+
+    def sharding(self, axes: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes))
+
+
+_local = threading.local()
+
+
+def _active() -> Optional[ShardingRules]:
+    return getattr(_local, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = _active()
+    _local.rules = rules
+    try:
+        yield
+    finally:
+        _local.rules = prev
+
+
+def constrain(x, axes: tuple):
+    """Annotate a traced array with logical axes; no-op outside a context."""
+    r = _active()
+    if r is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, r.sharding(axes))
+
+
+def axes_to_spec(axes_tree, rules: ShardingRules):
+    return jax.tree.map(lambda axes: rules.spec(axes), axes_tree,
+                        is_leaf=lambda a: isinstance(a, tuple))
+
+
+def param_specs(axes_tree, rules: ShardingRules):
+    return jax.tree.map(lambda axes: rules.sharding(axes), axes_tree,
+                        is_leaf=lambda a: isinstance(a, tuple))
+
+
+# --------------------------------------------------------------------------
+# Rule tables
+# --------------------------------------------------------------------------
+
+def _batch_axes(mesh: Mesh):
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    return tuple(axes) if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def serving_rules(mesh: Mesh, arch=None, *, decode: bool = False,
+                  context_parallel=None) -> ShardingRules:
+    """Rules for a serving step.
+
+    context_parallel: mesh axis (or tuple) carrying the KV-cache sequence
+    dim. Used when (a) KV heads don't divide the model axis — decode then
+    runs flash-decoding style: q all-gathered (tiny), scores/softmax/PV
+    reduced across the axis by GSPMD — or (b) long_500k, where batch=1
+    leaves the data axis idle and the 500k context is the only shardable dim
+    (DESIGN.md §6).
+    """
+    batch = _batch_axes(mesh)
+    table = {
+        "batch": batch,
+        "seq": None,
+        "embed": None,
+        "heads": "model",          # weight storage: always TP over model
+        "kv_heads": "model",
+        "q_heads": "model",        # activation q-head dim
+        "ffn": "model",
+        "vocab": "model",
+        "inner": "model",          # mamba d_inner
+        "expert": None,
+        "expert_ff": "model",
+        # MoE dispatch-buffer capacity dim: MUST shard over the batch axes,
+        # else every data shard redundantly computes the full chunk's expert
+        # GEMMs (16× waste — EXPERIMENTS.md §Perf, mixtral prefill iteration)
+        "dispatch": batch,
+        # pre-dispatch token stack (always batch-sharded, even when the
+        # dispatch dim itself can't be — kimi's 2-D expert sharding)
+        "moe_tokens": batch,
+        "cache_seq": context_parallel,
+        "cache_batch": batch,
+        "state": "model",
+    }
+    if arch is not None and arch.moe is not None:
+        n_model = mesh.shape["model"]
+        if arch.moe.n_experts % n_model == 0:
+            table["expert"] = "model"
+            # kimi-class: weights must shard over BOTH axes to fit (2 TB bf16)
+            big = (arch.n_layers * arch.moe.n_experts
+                   * arch.moe.d_ff_expert * arch.d_model * 3)
+            if big * 2 > 400e9 and arch.moe.d_ff_expert % mesh.shape.get("data", 1) == 0:
+                table["expert_ff"] = "data"
+                # both mesh axes already carry expert×ff parallelism: the
+                # dispatch dim has no axis left (and must not fight ff)
+                table["dispatch"] = None
+            else:
+                table["expert_ff"] = None
+        # else: experts replicated, expert_ff TP over model (default above)
+    if arch is not None:
+        n_model = mesh.shape["model"]
+        if arch.n_kv_heads > 0 and arch.n_kv_heads % n_model != 0:
+            table["kv_heads"] = None   # can't head-shard the KV cache...
+            if decode and context_parallel is None:
+                # ...so decode context-parallels it over the model axis
+                table["cache_seq"] = "model"
+                table["q_heads"] = None
+        # Divisibility guards: replicate what the model axis can't divide.
+        if arch.n_heads > 0 and arch.n_heads % n_model != 0:
+            table["heads"] = None
+            table["q_heads"] = None
+        if arch.vocab % n_model != 0:
+            table["vocab"] = None
+        if arch.d_ff > 0 and arch.d_ff % n_model != 0:
+            table["ffn"] = None
+        if arch.ssm is not None:
+            if arch.ssm.n_heads(arch.d_model) % n_model != 0:
+                table["state"] = None
+            if arch.ssm.d_inner(arch.d_model) % n_model != 0:
+                table["inner"] = None
+        if arch.moe is not None and arch.moe.d_ff_expert % n_model != 0 \
+                and table["expert_ff"] == "model":
+            table["expert_ff"] = None
+    if decode and context_parallel is not None:
+        table["q_heads"] = None
+    return ShardingRules(mesh=mesh, table=table)
+
+
+def training_rules(mesh: Mesh, arch=None) -> ShardingRules:
+    r = serving_rules(mesh, arch)
+    r.table = dict(r.table)
+    r.table["embed"] = _batch_axes(mesh)   # FSDP: shard params/opt over data
+    r.table["seq"] = None
+    r.table["cache_seq"] = None
+    return r

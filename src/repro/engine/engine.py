@@ -1,0 +1,186 @@
+"""Continuous-batching inference engine with pluggable step scheduler.
+
+The paper's control loop: each step, build SchedTask views of every active
+request, ask the scheduler (FairBatching / Sarathi / vLLM-vanilla) for a
+BatchPlan, execute it (simulated or real), advance request progress at step
+end, and feed the measured step time back into the scheduler's online
+cost-model calibration (§3.2).
+
+Cluster integration (§3.4): ``pab()`` exposes the Prefill Admission Budget;
+``snapshot()/restore()`` round-trip the host-side engine state for fault
+tolerance (KV is recomputed via prefix re-prefill on restore — DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Optional
+
+from ..core.cost_model import LinearCostModel
+from ..core.pab import PABAdmissionController, prefill_admission_budget
+from ..core.schedulers import Scheduler
+from ..core.types import BatchPlan
+from .metrics import RequestMetrics, measure
+from .request import Request, RequestState
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    ttft_slo: float = 0.5
+    tpot_slo: float = 0.05
+    idle_step: float = 0.002        # clock hop when nothing is runnable
+    max_steps: int = 2_000_000
+
+
+@dataclasses.dataclass
+class StepRecord:
+    t_start: float
+    t_end: float
+    new_tokens: int
+    context: int
+    n_prefill: int
+    n_decode: int
+    predicted: float
+
+
+class Engine:
+    def __init__(self, scheduler: Scheduler, executor, cfg: EngineConfig,
+                 admission: Optional[PABAdmissionController] = None,
+                 rank: int = 0):
+        self.sched = scheduler
+        self.executor = executor
+        self.cfg = cfg
+        self.admission = admission
+        self.rank = rank
+        self.now = 0.0
+        self.requests: dict[int, Request] = {}
+        self.pending: list[Request] = []       # submitted, arrival in future
+        self.active: list[int] = []
+        self.done: list[RequestMetrics] = []
+        self.steps: list[StepRecord] = []
+        self.busy_time = 0.0
+
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+        self.pending.sort(key=lambda r: r.arrival)
+
+    def _admit_arrivals(self) -> None:
+        while self.pending and self.pending[0].arrival <= self.now:
+            req = self.pending.pop(0)
+            self.requests[req.req_id] = req
+            if self.admission is not None:
+                tasks = [self.requests[i].to_sched_task()
+                         for i in self.active]
+                if not self.admission.admit(req.prompt_len, tasks, self.now,
+                                            self.sched.model):
+                    req.state = RequestState.REJECTED
+                    self.done.append(measure(req))
+                    continue
+            self.active.append(req.req_id)
+
+    def pab(self) -> float:
+        tasks = [self.requests[i].to_sched_task() for i in self.active]
+        return prefill_admission_budget(tasks, self.now, self.sched.model,
+                                        self.cfg.ttft_slo, self.cfg.tpot_slo)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.active or self.pending)
+
+    # ------------------------------------------------------------------
+
+    def step(self) -> Optional[StepRecord]:
+        if not self.active:
+            if not self.pending:
+                return None
+            self.now = max(self.now, self.pending[0].arrival)
+        self._admit_arrivals()
+        if not self.active:
+            self.now += self.cfg.idle_step
+            return None
+        tasks = [self.requests[i].to_sched_task() for i in self.active]
+        plan = self.sched.schedule(self.now, tasks)
+        if not plan.items:
+            self.now += self.cfg.idle_step
+            return None
+        exec_time, emitted = self.executor.execute(plan, self.requests,
+                                                   self.now)
+        finish = self.now + exec_time
+        total_ctx = 0
+        for it in plan.items:
+            req = self.requests[it.req_id]
+            total_ctx += req.to_sched_task().cost_context()
+            if emitted and it.req_id in emitted:
+                req.generated_tokens.append(emitted[it.req_id])
+            req.advance(it.n_tokens, finish)
+            if req.state is RequestState.FINISHED:
+                self._finish(req)
+        self.sched.observe(plan.total_new_tokens, total_ctx, exec_time)
+        rec = StepRecord(self.now, finish, plan.total_new_tokens, total_ctx,
+                         len(plan.prefill_items), len(plan.decode_items),
+                         plan.predicted_time)
+        self.steps.append(rec)
+        self.busy_time += exec_time
+        self.now = finish
+        return rec
+
+    def _finish(self, req: Request) -> None:
+        self.active.remove(req.req_id)
+        self.done.append(measure(req))
+        if hasattr(self.executor, "release"):
+            self.executor.release(req.req_id)
+
+    def run(self, until_idle: bool = True, max_steps: Optional[int] = None):
+        limit = max_steps or self.cfg.max_steps
+        n = 0
+        while self.has_work and n < limit:
+            self.step()
+            n += 1
+        return self.done
+
+    # ------------------------------------------------------------------
+    # fault tolerance: host-state snapshot (KV recomputed on restore)
+    # ------------------------------------------------------------------
+
+    def snapshot(self) -> str:
+        def ser(req: Request) -> dict:
+            d = dataclasses.asdict(req)
+            d["state"] = req.state.value
+            return d
+        return json.dumps({
+            "now": self.now,
+            "requests": [ser(r) for r in self.requests.values()],
+            "pending": [ser(r) for r in self.pending],
+            "active": self.active,
+            "cost_model": [self.sched.model.a, self.sched.model.b,
+                           self.sched.model.c],
+        })
+
+    def restore(self, blob: str) -> None:
+        d = json.loads(blob)
+        self.now = d["now"]
+
+        def de(r: dict) -> Request:
+            r = dict(r)
+            st = RequestState(r.pop("state"))
+            req = Request(**r)
+            req.state = st
+            return req
+        self.requests = {r["req_id"]: de(r) for r in d["requests"]}
+        self.pending = [de(r) for r in d["pending"]]
+        self.active = list(d["active"])
+        a, b, c = d["cost_model"]
+        self.sched.model = LinearCostModel(a=a, b=b, c=c)
+        # KV cache is not checkpointed: in-flight requests re-prefill their
+        # full known prefix (prompt + generated) — reset prefill progress.
+        for rid in self.active:
+            req = self.requests[rid]
+            if req.state in (RequestState.PREFILL, RequestState.DECODE):
+                req.prefilled = 0
+                if req.state is RequestState.DECODE:
+                    # re-prefill prompt+generated, then continue decoding
+                    req.prompt_len = req.prompt_len + req.generated
+                    req.state = RequestState.PREFILL

@@ -1,0 +1,216 @@
+"""Step executors: the engine's data plane.
+
+* ``SimExecutor`` — discrete-event world model: step time from a ground-truth
+  linear cost model (+ lognormal jitter + optional GC pauses, reproducing the
+  paper's §4 observation). The scheduler under test never sees these true
+  coefficients — it calibrates its own online (exactly the paper's setup).
+
+* ``PagedTransformerExecutor`` — real JAX execution of the FairBatching
+  hybrid step for dense-GQA archs at smoke scale: paged KV cache
+  (kv_manager), chunked-prefill + batched-decode through the
+  paged-attention kernel contract (ref backend on CPU, Pallas on TPU).
+  Wall-clock step times feed the scheduler's online calibration, closing
+  the paper's §3.2 loop for real.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..core.cost_model import LinearCostModel
+from ..core.types import BatchPlan, TaskKind
+from ..kernels.ops import paged_attention_op
+from ..models.layers import attn_qkv, mlp_apply
+from ..models.module import rmsnorm
+from .kv_manager import BlockAllocator
+
+
+@dataclasses.dataclass
+class SimExecutor:
+    """True step-time generator (the 'GPU')."""
+    true_model: LinearCostModel
+    noise_sigma: float = 0.02          # lognormal jitter on step time
+    gc_pause_every: float = 0.0        # seconds of sim time between GC STWs
+    gc_pause_len: float = 0.25
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._next_gc = self.gc_pause_every or math.inf
+
+    def execute(self, plan: BatchPlan, requests, now: float) -> tuple[float, dict]:
+        nt = plan.total_new_tokens
+        if nt == 0:
+            return 0.0, {}
+        ctx = sum(requests[it.req_id].to_sched_task().cost_context()
+                  for it in plan.items)
+        t = self.true_model.step_time(nt, ctx)
+        t *= float(self._rng.lognormal(0.0, self.noise_sigma))
+        if now + t >= self._next_gc:
+            t += self.gc_pause_len          # stop-the-world GC (paper §4)
+            self._next_gc = now + t + self.gc_pause_every
+        return t, {}
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class PagedTransformerExecutor:
+    """Real hybrid-step executor over a paged KV cache (dense GQA family)."""
+
+    def __init__(self, cfg: ArchConfig, params, *, num_pages: int = 256,
+                 page_size: int = 128, max_pages_per_seq: int = 16):
+        assert cfg.family in ("dense",) and cfg.moe is None and cfg.ssm is None
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.alloc = BlockAllocator(num_pages, page_size)
+        # page 0 is the trash page: bucket-padding tokens write there so
+        # they can never clobber a live slot (attention masks them anyway)
+        reserved = self.alloc.extend(-1, page_size)
+        assert reserved == [0]
+        self.max_pages = max_pages_per_seq
+        shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads,
+                 cfg.head_dim)
+        self.k_pages = jnp.zeros(shape, jnp.float32)
+        self.v_pages = jnp.zeros(shape, jnp.float32)
+        self._chunk_fn = jax.jit(self._chunk_step,
+                                 static_argnames=("n_tok",))
+        self._decode_fn = jax.jit(self._decode_step,
+                                  static_argnames=("bsz",))
+
+    # ------------------------------------------------------------------
+    # jitted step bodies
+    # ------------------------------------------------------------------
+
+    def _embed(self, tokens):
+        return self.params["embed"][tokens]
+
+    def _head(self, h_last):
+        p = self.params
+        h = rmsnorm(h_last, p["ln_f"], self.cfg.norm_eps)
+        return h @ p["head"]
+
+    def _write_pages(self, k_pages, v_pages, layer, k, v, table, positions,
+                     valid=None):
+        """k, v: (B, T, Hkv, D); positions: (B, T) global; table: (B, n_pages)."""
+        b, t = positions.shape
+        page_ids = jnp.take_along_axis(
+            table, positions // self.page_size, axis=1)       # (B, T)
+        slots = positions % self.page_size
+        if valid is not None:
+            page_ids = jnp.where(valid, page_ids, 0)          # → trash page
+        flat_pg = page_ids.reshape(-1)
+        flat_sl = slots.reshape(-1)
+        kf = k.reshape(b * t, *k.shape[2:])
+        vf = v.reshape(b * t, *v.shape[2:])
+        k_pages = k_pages.at[layer, flat_pg, flat_sl].set(kf)
+        v_pages = v_pages.at[layer, flat_pg, flat_sl].set(vf)
+        return k_pages, v_pages
+
+    def _forward(self, k_pages, v_pages, x, positions, table, ctx_lens,
+                 valid=None):
+        cfg = self.cfg
+        for l in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[l], self.params["layers"])
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(lp["attn"], h, positions, cfg)
+            k_pages, v_pages = self._write_pages(k_pages, v_pages, l, k, v,
+                                                 table, positions, valid)
+            o = paged_attention_op(q, k_pages[l], v_pages[l], table, ctx_lens,
+                                   positions[:, 0], window=cfg.window)
+            x = x + o.reshape(*x.shape[:2], cfg.q_dim) @ lp["attn"]["wo"]
+            x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
+        return k_pages, v_pages, x
+
+    def _chunk_step(self, k_pages, v_pages, tokens, pos0, table, n_valid,
+                    *, n_tok):
+        """One prefill chunk, B=1. tokens: (n_tok,) padded; n_valid real."""
+        x = self._embed(tokens)[None]                      # (1, T, d)
+        positions = (pos0 + jnp.arange(n_tok))[None]
+        valid = (jnp.arange(n_tok)[None] < n_valid)
+        # pad tokens keep monotone positions (causal mask stays exact) but
+        # their K/V lands on the trash page and context_lens excludes them
+        ctx = (pos0 + n_valid)[None]
+        k_pages, v_pages, x = self._forward(k_pages, v_pages, x, positions,
+                                            table[None], ctx, valid)
+        h_last = x[0, jnp.maximum(n_valid - 1, 0)]
+        return k_pages, v_pages, self._head(h_last)
+
+    def _decode_step(self, k_pages, v_pages, tokens, positions, tables,
+                     ctx_lens, *, bsz):
+        x = self._embed(tokens)[:, None]                  # (B, 1, d)
+        k_pages, v_pages, x = self._forward(k_pages, v_pages, x,
+                                            positions[:, None], tables,
+                                            ctx_lens)
+        return k_pages, v_pages, self._head(x[:, 0])
+
+    # ------------------------------------------------------------------
+
+    def execute(self, plan: BatchPlan, requests, now: float) -> tuple[float, dict]:
+        t0 = time.perf_counter()
+        emitted: dict[int, int] = {}
+        decode_items = plan.decode_items
+        for it in plan.prefill_items:
+            req = requests[it.req_id]
+            if self.alloc.extend(it.req_id, it.n_tokens) is None:
+                continue  # out of KV blocks: defer (scheduler retries)
+            chunk = req.tokens[req.prefilled:req.prefilled + it.n_tokens]
+            n_tok = _bucket(len(chunk), 16)
+            toks = jnp.asarray(chunk + [0] * (n_tok - len(chunk)), jnp.int32)
+            table = self._table(it.req_id)
+            self.k_pages, self.v_pages, logits = self._chunk_fn(
+                self.k_pages, self.v_pages, toks,
+                jnp.int32(req.prefilled), table, jnp.int32(len(chunk)),
+                n_tok=n_tok)
+            if req.prefilled + it.n_tokens == req.prompt_len:
+                emitted[it.req_id] = int(jnp.argmax(logits))
+        if decode_items:
+            bsz = _bucket(len(decode_items), 4)
+            ids = [it.req_id for it in decode_items]
+            for rid in ids:
+                self.alloc.extend(rid, 1)
+            toks, pos, tables, ctx = [], [], [], []
+            for rid in ids:
+                req = requests[rid]
+                last = (req.generated_tokens[-1] if req.generated_tokens
+                        else emitted.get(rid, 0))
+                toks.append(last)
+                # the fed-back token's position: context counts it as
+                # emitted, but its K/V enters the cache only now
+                pos.append(req.context - 1)
+                tables.append(self._table(rid))
+                ctx.append(req.context)
+            pad = bsz - len(ids)
+            toks += [0] * pad
+            pos += [0] * pad
+            ctx += [1] * pad
+            tables += [tables[0] * 0] * pad
+            self.k_pages, self.v_pages, logits = self._decode_fn(
+                self.k_pages, self.v_pages,
+                jnp.asarray(toks, jnp.int32), jnp.asarray(pos, jnp.int32),
+                jnp.stack(tables), jnp.asarray(ctx, jnp.int32), bsz=bsz)
+            nxt = jnp.argmax(logits, -1)
+            for i, rid in enumerate(ids):
+                emitted[rid] = int(nxt[i])
+        return time.perf_counter() - t0, emitted
+
+    def _table(self, req_id: int) -> jnp.ndarray:
+        tbl = self.alloc.tables.get(req_id, [])
+        pad = self.max_pages - len(tbl)
+        assert pad >= 0, "max_pages_per_seq exceeded"
+        return jnp.asarray(tbl + [0] * pad, jnp.int32)
+
+    def release(self, req_id: int) -> None:
+        self.alloc.release(req_id)

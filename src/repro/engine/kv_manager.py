@@ -1,0 +1,45 @@
+"""Paged KV-cache block allocator (vLLM-style, 128-token TPU pages)."""
+from __future__ import annotations
+
+from typing import Optional
+
+
+class BlockAllocator:
+    def __init__(self, num_blocks: int, block_size: int = 128):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free = list(range(num_blocks - 1, -1, -1))
+        self.tables: dict[int, list[int]] = {}    # req_id -> page ids
+        self.lens: dict[int, int] = {}            # req_id -> tokens stored
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def blocks_needed(self, req_id: int, extra_tokens: int) -> int:
+        have = len(self.tables.get(req_id, ())) * self.block_size
+        need = self.lens.get(req_id, 0) + extra_tokens
+        return max(0, -(-(need - have) // self.block_size))
+
+    def can_fit(self, req_id: int, extra_tokens: int) -> bool:
+        return self.blocks_needed(req_id, extra_tokens) <= self.free_blocks
+
+    def extend(self, req_id: int, extra_tokens: int) -> Optional[list[int]]:
+        """Reserve space for extra tokens; returns the request's full table
+        or None if out of blocks (caller defers the request)."""
+        n = self.blocks_needed(req_id, extra_tokens)
+        if n > len(self._free):
+            return None
+        tbl = self.tables.setdefault(req_id, [])
+        for _ in range(n):
+            tbl.append(self._free.pop())
+        self.lens[req_id] = self.lens.get(req_id, 0) + extra_tokens
+        return tbl
+
+    def release(self, req_id: int) -> None:
+        for b in self.tables.pop(req_id, ()):
+            self._free.append(b)
+        self.lens.pop(req_id, None)
+
+    def context_len(self, req_id: int) -> int:
+        return self.lens.get(req_id, 0)

@@ -1,0 +1,61 @@
+"""SLO metrics (paper §2.2 / §5.1 evaluation definitions)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .request import Request, RequestState
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    req_id: int
+    arrival: float
+    ttft: Optional[float]
+    tpot_max: Optional[float]      # max running TPOT (worst-case gen rate)
+    ttft_ok: bool
+    tpot_ok: bool
+    rejected: bool = False
+
+    @property
+    def slo_ok(self) -> bool:
+        return self.ttft_ok and self.tpot_ok and not self.rejected
+
+
+def measure(req: Request) -> RequestMetrics:
+    if req.state is RequestState.REJECTED:
+        return RequestMetrics(req.req_id, req.arrival, None, None, False,
+                              False, rejected=True)
+    ot = req.output_times
+    ttft = (ot[0] - req.arrival) if ot else None
+    tpot_max = None
+    if len(ot) > 1:
+        tpot_max = max((ot[j] - ot[0]) / j for j in range(1, len(ot)))
+    ttft_ok = ttft is not None and ttft <= req.ttft_slo
+    tpot_ok = tpot_max is None or tpot_max <= req.tpot_slo
+    return RequestMetrics(req.req_id, req.arrival, ttft, tpot_max,
+                          ttft_ok, tpot_ok)
+
+
+def summarize(metrics: list[RequestMetrics], duration: float) -> dict:
+    n = len(metrics)
+    ok = sum(m.slo_ok for m in metrics)
+    ttfts = np.array([m.ttft for m in metrics if m.ttft is not None])
+    tpots = np.array([m.tpot_max for m in metrics if m.tpot_max is not None])
+
+    def pct(a, q):
+        return float(np.percentile(a, q)) if len(a) else float("nan")
+    return {
+        "n_requests": n,
+        "slo_attainment": ok / max(n, 1),
+        "violation_rate": 1.0 - ok / max(n, 1),
+        "effective_rps": ok / max(duration, 1e-9),
+        "rps": n / max(duration, 1e-9),
+        "ttft_p50": pct(ttfts, 50), "ttft_p95": pct(ttfts, 95),
+        "ttft_p99": pct(ttfts, 99),
+        "tpot_p50": pct(tpots, 50), "tpot_p95": pct(tpots, 95),
+        "tpot_p99": pct(tpots, 99),
+        "rejected": sum(m.rejected for m in metrics),
+    }

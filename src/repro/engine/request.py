@@ -1,0 +1,92 @@
+"""Request lifecycle for the continuous-batching engine."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+from ..core.types import SchedTask, TaskKind
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"       # partially prefilled (chunked)
+    DECODE = "decode"
+    FINISHED = "finished"
+    REJECTED = "rejected"     # PAB admission control
+    MIGRATED = "migrated"     # re-routed by the cluster LB (fault/overload)
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    arrival: float
+    prompt_len: int
+    max_new_tokens: int
+    ttft_slo: float
+    tpot_slo: float
+    state: RequestState = RequestState.QUEUED
+    prefilled: int = 0
+    generated: int = 0
+    output_times: list = dataclasses.field(default_factory=list)
+    tokens: Optional[list] = None          # real-mode prompt token ids
+    generated_tokens: list = dataclasses.field(default_factory=list)
+    # effective attention window of the serving arch (cost-model context cap)
+    window: Optional[int] = None
+    # Envelope anchor (DESIGN.md §9 note): the paper's token_ddl anchors at
+    # arrival + ttft_slo, but its §5.1 TPOT metric measures from the ACTUAL
+    # first-token time — a request served its first token early could then
+    # be legally (per the formula) decoded slower than the measured SLO.
+    # "first_token" re-anchors decode deadlines at min(arrival+ttft, t0):
+    # strictly tighter, guarantees the paper's own evaluation metric.
+    anchor: str = "first_token"    # "first_token" | "slo" (paper formula)
+
+    @property
+    def active(self) -> bool:
+        return self.state in (RequestState.QUEUED, RequestState.PREFILL,
+                              RequestState.DECODE)
+
+    @property
+    def context(self) -> int:
+        return self.prefilled + self.generated
+
+    def to_sched_task(self) -> SchedTask:
+        if self.state in (RequestState.QUEUED, RequestState.PREFILL):
+            kind = TaskKind.PREFILL
+            new_tokens = self.prompt_len - self.prefilled
+            next_idx = 0
+        else:
+            kind = TaskKind.DECODE
+            new_tokens = 1
+            next_idx = self.generated
+        ctx = self.context
+        eff = min(ctx, self.window) if self.window else None
+        arrival = self.arrival
+        if (kind is TaskKind.DECODE and self.anchor == "first_token"
+                and self.output_times):
+            arrival = min(arrival, self.output_times[0] - self.ttft_slo)
+        return SchedTask(req_id=self.req_id, arrival=arrival,
+                         ttft_slo=self.ttft_slo, tpot_slo=self.tpot_slo,
+                         next_output_idx=next_idx, new_tokens=new_tokens,
+                         context=ctx, kind=kind, prompt_len=self.prompt_len,
+                         effective_context=eff)
+
+    def advance(self, n_tokens: int, finish_time: float) -> None:
+        """Apply a step's granted tokens; emit output tokens at step end."""
+        if self.state in (RequestState.QUEUED, RequestState.PREFILL):
+            self.prefilled += n_tokens
+            assert self.prefilled <= self.prompt_len
+            if self.prefilled == self.prompt_len:
+                # prefill completion emits the first output token
+                self.output_times.append(finish_time)
+                self.generated = 1
+                self.state = (RequestState.FINISHED
+                              if self.max_new_tokens <= 1 else RequestState.DECODE)
+            else:
+                self.state = RequestState.PREFILL
+        else:
+            assert n_tokens == 1
+            self.generated += 1
+            self.output_times.append(finish_time)
+            if self.generated >= self.max_new_tokens:
+                self.state = RequestState.FINISHED

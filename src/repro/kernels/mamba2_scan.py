@@ -1,0 +1,92 @@
+"""Mamba2 SSD chunk scan — Pallas TPU kernel.
+
+Per (batch, head), walks chunks sequentially (innermost grid dim), carrying
+the (N, P) SSM state in VMEM scratch. Each chunk is matmul-form (MXU):
+
+    acum   = cumsum(a)                       (L,)
+    Ldecay = tril(exp(acum_i − acum_j))      (L, L)
+    y      = (C Bᵀ ⊙ Ldecay) X  +  (C · state) ⊙ exp(acum)
+    state  = state · exp(acum_L) + (B ⊙ exp(acum_L − acum))ᵀ X
+
+Oracle: ref.mamba_chunk_scan_ref (= models/mamba2.ssd_chunked, itself
+validated against the stepwise recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state_s, *, nc: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_s[...] = jnp.zeros_like(state_s)
+
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)      # (L, P)
+    a = a_ref[0, 0, :, 0].astype(jnp.float32)         # (L,)
+    bmat = b_ref[0, 0].astype(jnp.float32)            # (L, N)
+    cmat = c_ref[0, 0].astype(jnp.float32)            # (L, N)
+
+    acum = jnp.cumsum(a)                              # (L,)
+    l = a.shape[0]
+    decay = jnp.exp(acum[:, None] - acum[None, :])
+    tri = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    ldecay = jnp.where(tri, decay, 0.0)
+
+    cbt = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (L, L)
+    y_diag = jax.lax.dot_general(cbt * ldecay, x, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    state = state_s[...]                               # (N, P)
+    y_off = jax.lax.dot_general(cmat, state, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_off = y_off * jnp.exp(acum)[:, None]
+    y_ref[0, 0, :, 0, :] = (y_diag + y_off).astype(y_ref.dtype)
+
+    chunk_decay = jnp.exp(acum[-1])
+    b_dec = bmat * jnp.exp(acum[-1] - acum)[:, None]   # (L, N)
+    state_s[...] = state * chunk_decay + jax.lax.dot_general(
+        b_dec, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(c_idx == nc - 1)
+    def _flush():
+        st_ref[0, 0] = state_s[...].astype(st_ref.dtype)
+
+
+def mamba_chunk_scan(xdt, a_dt, b, c, *, interpret: bool = False):
+    """xdt: (B, NC, L, H, P); a_dt: (B, NC, L, H); b, c: (B, NC, L, N).
+
+    Returns (y (B, NC, L, H, P), final_state (B, H, N, P))."""
+    bsz, nc, l, h, p = xdt.shape
+    n = b.shape[-1]
+    grid = (bsz, h, nc)
+    kernel = functools.partial(_kernel, nc=nc)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, l, 1, p), lambda bi, hi, ci: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, l, 1), lambda bi, hi, ci: (bi, ci, 0, hi)),
+            pl.BlockSpec((1, 1, l, n), lambda bi, hi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, l, n), lambda bi, hi, ci: (bi, ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, l, 1, p), lambda bi, hi, ci: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nc, l, h, p), xdt.dtype),
+            jax.ShapeDtypeStruct((bsz, h, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, a_dt, b, c)
+    return y, st

@@ -1,0 +1,59 @@
+"""Batched expert GEMM — Pallas TPU kernel.
+
+The compute core of the capacity-dispatch MoE path (models/moe.py): after
+tokens are sorted/gathered into (E, C, K), the expert FFN is E independent
+GEMMs. Blocked (bc × bn × bk) tiles with an f32 VMEM accumulator; tile sizes
+default to 128 (MXU-aligned). Grid order puts K innermost so the accumulator
+lives across K steps; E outermost so weight tiles stream per expert.
+
+Oracle: ref.moe_gmm_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_s, *, nk: int):
+    k_idx = pl.program_id(3)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    x = x_ref[0].astype(jnp.float32)       # (bc, bk)
+    w = w_ref[0].astype(jnp.float32)       # (bk, bn)
+    acc_s[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == nk - 1)
+    def _flush():
+        o_ref[0] = acc_s[...].astype(o_ref.dtype)
+
+
+def moe_gmm(x: jnp.ndarray, w: jnp.ndarray, *, bc: int = 128, bn: int = 128,
+            bk: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """x: (E, C, K); w: (E, K, N) → (E, C, N)."""
+    e, c, k = x.shape
+    _, _, n = w.shape
+    bc, bn, bk = min(bc, c), min(bn, n), min(bk, k)
+    assert c % bc == 0 and n % bn == 0 and k % bk == 0, \
+        f"pad to tile multiples: C={c}%{bc} N={n}%{bn} K={k}%{bk}"
+    grid = (e, c // bc, n // bn, k // bk)
+    kernel = functools.partial(_kernel, nk=k // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bk), lambda e_, ci, ni, ki: (e_, ci, ki)),
+            pl.BlockSpec((1, bk, bn), lambda e_, ci, ni, ki: (e_, ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bn), lambda e_, ci, ni, ki: (e_, ci, ni)),
+        scratch_shapes=[pltpu.VMEM((bc, bn), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((e, c, n), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,63 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+Backend policy: on TPU the Pallas kernels run compiled; elsewhere the engine
+uses the jnp oracles (ref.py) — interpret=True executes the actual kernel
+bodies in Python and is reserved for correctness tests (it is exact but
+slow). `chunked prefill attention` is the same kernel as decode: Tq = chunk
+size (see paged_attention.py docstring).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .mamba2_scan import mamba_chunk_scan
+from .moe_gmm import moe_gmm
+from .paged_attention import paged_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl"))
+def paged_attention_op(q, k_pages, v_pages, block_table, context_lens,
+                       q_starts, *, window: Optional[int] = None,
+                       impl: str = "auto"):
+    """Ragged paged attention (decode Tq=1 / prefill-chunk Tq=chunk)."""
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return paged_attention(q, k_pages, v_pages, block_table,
+                               context_lens, q_starts, window=window)
+    if impl == "interpret":
+        return paged_attention(q, k_pages, v_pages, block_table,
+                               context_lens, q_starts, window=window,
+                               interpret=True)
+    return ref.paged_attention_ref(q, k_pages, v_pages, block_table,
+                                   context_lens, q_starts, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def moe_gmm_op(x, w, *, impl: str = "auto"):
+    """(E, C, K) × (E, K, N) batched expert GEMM with 128-pad for the MXU."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.moe_gmm_ref(x, w)
+    e, c, k = x.shape
+    n = w.shape[-1]
+    pc, pk, pn = (-c) % 128, (-k) % 128, (-n) % 128
+    xp = jnp.pad(x, ((0, 0), (0, pc), (0, pk)))
+    wp = jnp.pad(w, ((0, 0), (0, pk), (0, pn)))
+    out = moe_gmm(xp, wp, interpret=(impl == "interpret"))
+    return out[:, :c, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def mamba_chunk_scan_op(xdt, a_dt, b, c, *, impl: str = "auto"):
+    """SSD chunk scan; returns (y, final_state (B,H,P,N) model convention)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.mamba_chunk_scan_ref(xdt, a_dt, b, c)
+    y, st = mamba_chunk_scan(xdt, a_dt, b, c, interpret=(impl == "interpret"))
+    return y, jnp.moveaxis(st, -2, -1)

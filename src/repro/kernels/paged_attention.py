@@ -1,0 +1,117 @@
+"""Ragged paged attention — Pallas TPU kernel (flash-decoding style).
+
+One kernel serves both FairBatching step item types:
+  * decode        — Tq = 1, many sequences per launch
+  * prefill chunk — Tq = chunk (chunked prefill continuation against the
+                    cached prefix; the chunk's own K/V are already written
+                    into the page pool by the executor)
+
+Layout/TPU adaptation (DESIGN.md §3): the KV cache lives in HBM as 128-token
+pages; the block table rides scalar-prefetch so each grid step's BlockSpec
+index_map resolves its page id and the DMA pipeline streams page tiles
+HBM→VMEM. Online softmax accumulates in f32 VMEM scratch across the page
+axis of the grid (sequential on TPU), GQA query heads of one KV head are
+packed into the sublane dim so the MXU sees (Tq·G, D) × (D, page) tiles.
+
+Oracle: ref.paged_attention_ref. Validated with interpret=True over shape/
+dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(block_table, context_lens, q_starts,   # scalar-prefetch refs
+            q_ref, k_ref, v_ref, o_ref,            # VMEM blocks
+            m_s, l_s, acc_s,                       # scratch
+            *, page: int, n_pages: int, tq: int, g: int, window: Optional[int],
+            scale: float):
+    b = pl.program_id(0)
+    p_idx = pl.program_id(2)
+
+    @pl.when(p_idx == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, :, 0, :, :].astype(jnp.float32).reshape(tq * g, -1)  # (TqG, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                         # (page, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    kv_pos = p_idx * page + jax.lax.broadcasted_iota(jnp.int32, (tq * g, page), 1)
+    q_pos = (q_starts[b] +
+             jax.lax.broadcasted_iota(jnp.int32, (tq * g, page), 0) // g)
+    mask = (kv_pos < context_lens[b]) & (kv_pos <= q_pos)
+    if window is not None:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(p_idx == n_pages - 1)
+    def _flush():
+        out = acc_s[...] / jnp.maximum(l_s[...], 1e-30)
+        o_ref[...] = out.reshape(1, tq, 1, g, -1).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_table, context_lens, q_starts,
+                    *, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Tq, H, D); pages: (P, page, Hkv, D); block_table: (B, n_pages);
+    context_lens, q_starts: (B,). Returns (B, Tq, H, D)."""
+    bsz, tq, h, d = q.shape
+    n_pages = block_table.shape[1]
+    _, page, hkv, _ = k_pages.shape
+    g = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qr = q.reshape(bsz, tq, hkv, g, d)
+
+    grid = (bsz, hkv, n_pages)
+    kernel = functools.partial(_kernel, page=page, n_pages=n_pages, tq=tq,
+                               g=g, window=window, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, tq, 1, g, d),
+                             lambda b, hk, p, *_: (b, 0, hk, 0, 0)),
+                pl.BlockSpec((1, page, 1, d),
+                             lambda b, hk, p, bt, cl, qs: (bt[b, p], 0, hk, 0)),
+                pl.BlockSpec((1, page, 1, d),
+                             lambda b, hk, p, bt, cl, qs: (bt[b, p], 0, hk, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, tq, 1, g, d),
+                                   lambda b, hk, p, *_: (b, 0, hk, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((tq * g, 1), jnp.float32),
+                pltpu.VMEM((tq * g, 1), jnp.float32),
+                pltpu.VMEM((tq * g, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bsz, tq, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(block_table, context_lens, q_starts, qr, k_pages, v_pages)
+    return out.reshape(bsz, tq, h, d)

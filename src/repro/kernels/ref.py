@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels' interpret-mode runs are swept
+against (tests/test_kernels.py), and the fallback implementations the engine
+uses on non-TPU backends.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_gather(pages: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
+    """pages: (P, page, Hkv, D); block_table: (B, n_pages) → (B, n_pages*page, Hkv, D)."""
+    g = pages[block_table]                  # (B, n_pages, page, Hkv, D)
+    b, n, p, h, d = g.shape
+    return g.reshape(b, n * p, h, d)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, context_lens,
+                        q_starts, *, window: Optional[int] = None,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """Reference ragged paged attention (decode AND chunked prefill).
+
+    q: (B, Tq, H, D)       — Tq = 1 for decode, = chunk for prefill chunks
+    k_pages/v_pages: (P, page, Hkv, D)
+    block_table: (B, n_pages) int32 — page ids per sequence
+    context_lens: (B,) int32 — total tokens in cache (incl. current chunk)
+    q_starts: (B,) int32 — global position of q[:, 0]
+    """
+    b, tq, h, d = q.shape
+    hkv = k_pages.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    k = paged_gather(k_pages, block_table)  # (B, S, Hkv, D)
+    v = paged_gather(v_pages, block_table)
+    s_len = k.shape[1]
+    kv_pos = jnp.arange(s_len)[None, :]                     # (1, S)
+    q_pos = q_starts[:, None] + jnp.arange(tq)[None, :]     # (B, Tq)
+    valid = kv_pos < context_lens[:, None]
+    mask = valid[:, None, :] & (kv_pos[:, None, :] <= q_pos[..., None])
+    if window is not None:
+        mask &= (q_pos[..., None] - kv_pos[:, None, :]) < window
+    qf = q.reshape(b, tq, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bthgd,bshd->bhgts", qf,
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, None, None], p, 0.0)
+    o = jnp.einsum("bhgts,bshd->bthgd", p, v.astype(jnp.float32))
+    return o.reshape(b, tq, h, d).astype(q.dtype)
+
+
+def moe_gmm_ref(x_groups: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Batched expert GEMM: (E, C, K) × (E, K, N) → (E, C, N)."""
+    return jnp.einsum("eck,ekn->ecn", x_groups.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x_groups.dtype)
+
+
+def mamba_chunk_scan_ref(xdt, a_dt, b, c, init_state=None):
+    """SSD over pre-chunked inputs.
+
+    xdt: (B, NC, L, H, P); a_dt: (B, NC, L, H); b, c: (B, NC, L, N).
+    Returns (y (B,NC,L,H,P), final_state (B,H,P,N)). Same math as
+    models/mamba2.ssd_chunked (which is itself validated against stepwise
+    recurrence)."""
+    from ..models.mamba2 import ssd_chunked
+    bsz, nc, l, h, p = xdt.shape
+    y, st = ssd_chunked(xdt.reshape(bsz, nc * l, h, p),
+                        a_dt.reshape(bsz, nc * l, h),
+                        b.reshape(bsz, nc * l, -1),
+                        c.reshape(bsz, nc * l, -1), l, init_state)
+    return y.reshape(bsz, nc, l, h, p), st

@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production meshes, record memory/cost/collective analysis.
+
+Run as:  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+             --shape decode_32k [--multi-pod]
+         PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Each cell writes experiments/dryrun/<mesh>/<arch>__<shape>.json. Roofline
+terms are assembled by benchmarks/roofline_report.py from these JSONs plus
+the costing parts (launch/costing.py) — compiled.cost_analysis() counts scan
+bodies once, so the full-graph numbers here are memory/compile-proof ground
+truth while FLOPs/collectives come from per-part composition.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,1024]{...}' → bytes. Tuples handled by the caller."""
+    m = re.match(r"(\w+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum output bytes of collective ops in (post-SPMD) HLO text.
+
+    Returns {op_kind: {'count': n, 'bytes': b}}. Bytes are per-participant
+    (the shapes in SPMD HLO are already per-device). NOTE: ops inside
+    while-loop bodies are counted once — launch/costing.py applies trip-count
+    multipliers; these raw numbers are recorded for cross-checking.
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = \(?([^)]*?)\)? (\w[\w\-]*)\(", s)
+        if not m:
+            continue
+        shapes, op = m.groups()
+        kind = next((c for c in _COLLECTIVES
+                     if op.replace("_", "-").startswith(c)), None)
+        if kind is None:
+            continue
+        total = sum(_shape_bytes(s) for s in re.findall(r"\w+\[[\d,]*\]", shapes))
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += total
+    return out
+
+
+def estimate_cpu_upcast_bytes(hlo_text: str, min_bytes: int = 128 * 2**20) -> int:
+    """CPU-backend artifact estimator.
+
+    The CPU backend has no native bf16 matmul: FloatNormalization inserts
+    bf16→f32 converts, which for scan-carried weights/caches materialize
+    full-stack f32 copies that a TPU compile would not have (MXU is native
+    bf16). We sum large f32 buffers whose dims exactly match some large bf16
+    buffer — conservative lower bound on the artifact; reported separately so
+    the roofline uses temp_bytes_tpu_estimate (EXPERIMENTS.md §Dry-run).
+    """
+    from repro.launch.hlo_analysis import _OP_RE, _SHAPE_RE
+
+    bf16_sizes = set()
+    f32_bufs = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        _, shape, kind, _ = m.groups()
+        sm = _SHAPE_RE.match(shape)
+        if not sm:
+            continue
+        dt, dims = sm.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        if dt == "bf16" and n * 2 >= min_bytes:
+            # match by sorted dims: reshaped/transposed copies count too
+            bf16_sizes.add(tuple(sorted(dims.split(","))))
+        elif dt == "f32" and n * 4 >= min_bytes and kind in (
+                "convert", "fusion", "dynamic-update-slice", "copy",
+                "get-tuple-element", "parameter", "transpose"):
+            f32_bufs.append((tuple(sorted(dims.split(","))), n * 4))
+    total = 0
+    seen = set()
+    for dims, b in f32_bufs:
+        if dims in bf16_sizes and dims not in seen:
+            seen.add(dims)
+            total += b
+    return total
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str) -> dict:
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "n_devices": mesh.size, "status": "ok"}
+    from repro import configs as _cfgs
+    if shape == "long_500k" and not _cfgs.long_context_capable(_cfgs.get(arch)):
+        rec["status"] = "skipped"
+        rec["reason"] = "pure full attention: no sub-quadratic path (DESIGN.md §5)"
+        os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
+        with open(os.path.join(out_dir, mesh_name, f"{arch}__{shape}.json"),
+                  "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+    try:
+        cell = build_cell(arch, shape, mesh)
+        rec["notes"] = cell.notes
+        lowered = cell.lower()
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+        from repro.launch.hlo_analysis import analyze as hlo_analyze
+        corrected = hlo_analyze(hlo_text)
+        upcast = estimate_cpu_upcast_bytes(hlo_text)
+        rec.update({
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "flops_raw": cost.get("flops", 0.0),
+            "bytes_raw": cost.get("bytes accessed", 0.0),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+            },
+            "collectives_raw": parse_collectives(hlo_text),
+            # trip-count-corrected per-device totals (launch/hlo_analysis.py)
+            "flops_corrected": corrected["flops"],
+            "bytes_corrected": corrected["bytes"],
+            "collectives_corrected": corrected["collectives"],
+            "cpu_bf16_upcast_bytes": upcast,
+            "model_params": cell.arch.param_count(),
+            "model_params_active": cell.arch.active_param_count(),
+        })
+        temp_tpu = max(0, mem.temp_size_in_bytes - upcast)
+        rec["temp_bytes_tpu_estimate"] = temp_tpu
+        per_dev = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                   - mem.alias_size_in_bytes + temp_tpu)
+        rec["per_device_hbm_bytes"] = per_dev
+        rec["fits_16g"] = bool(per_dev <= 16 * 1024**3)
+    except Exception as e:  # noqa: BLE001 — record the failure, don't crash --all
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
+    path = os.path.join(out_dir, mesh_name, f"{arch}__{shape}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from repro.launch.steps import all_cells
+
+    cells = ([(args.arch, args.shape, True)] if not args.all
+             else [(a, s, r) for a, s, r in all_cells()])
+    for arch, shape, runnable in cells:
+        if not runnable:
+            print(f"SKIP  {arch:26s} {shape:12s} (long-context inapplicable)")
+            continue
+        rec = run_cell(arch, shape, args.multi_pod, args.out)
+        if rec["status"] == "ok":
+            print(f"OK    {arch:26s} {shape:12s} compile={rec['compile_s']:7.1f}s "
+                  f"temp={rec['memory']['temp_bytes']/2**30:7.2f}GiB "
+                  f"args={rec['memory']['argument_bytes']/2**30:8.2f}GiB")
+        elif rec["status"] == "skipped":
+            print(f"SKIP  {arch:26s} {shape:12s} {rec['reason']}")
+        else:
+            print(f"FAIL  {arch:26s} {shape:12s} {rec['error'][:120]}")
+
+
+if __name__ == "__main__":
+    main()

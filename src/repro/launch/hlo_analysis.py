@@ -1,0 +1,234 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+scan-over-layers model under-reports FLOPs/bytes/collectives by ~L×. This
+module parses ``compiled.as_text()`` (post-SPMD, post-fusion), extracts every
+while loop's static trip count from its condition computation, and walks the
+call graph multiplying op costs by the product of enclosing trip counts.
+
+Counted per op (weight w = ∏ enclosing trips):
+  * FLOPs      — ``dot`` ops (2 · |out| · ∏ contracting dims), including dots
+                 inside fusions. Elementwise FLOPs are ignored (matmul-
+                 dominated graphs; validated against cost_analysis on
+                 scan-free graphs in tests/test_hlo_analysis.py).
+  * bytes      — per top-level op: output + operand bytes (fusion interiors
+                 skipped — they don't touch HBM).
+  * collectives— output bytes + op count per kind.
+
+All shapes in post-SPMD HLO are per-device, so totals are per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "token": 0, "u1": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_CALL_ATTR_RE = re.compile(
+    r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes appearing in shape_str (handles
+    tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(shape_str: str) -> Optional[list[int]]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    kind: str
+    rest: str        # args + attributes tail
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict     # param name -> shape str
+    ops: list
+
+
+def parse_module(text: str) -> dict:
+    """Split HLO text into computations."""
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = re.sub(r"/\*.*?\*/", "", raw).rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                name, paramstr = m.groups()
+                params = {}
+                # shapes contain commas: match '<name>: dtype[d,d,..]{layout}'
+                for pm in re.finditer(
+                        r"%?([\w.\-]+)\s*:\s*(\(?[\w\[\],]*\]\)?(?:\{[^}]*\})?)",
+                        paramstr):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(name=name, params=params, ops=[])
+                comps[name] = cur
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            nm, shape, kind, rest = m.groups()
+            cur.ops.append(Op(nm, shape.strip(), kind, rest))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """jax scans lower to while(cond: lt(iv, K)). Take the max int constant
+    in the condition computation (conservative for compound conditions)."""
+    best = 1
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, shapes: dict) -> float:
+    out_dims = _shape_dims(op.shape) or []
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    operands = re.match(r"([^)]*)\)", op.rest)
+    if not operands:
+        return 0.0
+    names = re.findall(r"%?([\w.\-]+)", operands.group(1))
+    if not names:
+        return 0.0
+    lhs_shape = shapes.get(names[0])
+    if lhs_shape is None or m is None:
+        return 0.0
+    lhs_dims = _shape_dims(lhs_shape) or []
+    contracting = 1
+    for i in (int(x) for x in m.group(1).split(",") if x):
+        if i < len(lhs_dims):
+            contracting *= lhs_dims[i]
+    return 2.0 * math.prod(out_dims or [0]) * contracting
+
+
+def analyze(text: str) -> dict:
+    comps = parse_module(text)
+    entry = next((c for c in comps if c.startswith("main") or "ENTRY" in c),
+                 None)
+    # ENTRY is the first computation whose name matches module entry; jax
+    # names it e.g. 'main.123'. Fall back: computation not called by others.
+    called = set()
+    for c in comps.values():
+        for op in c.ops:
+            for cal in _CALL_ATTR_RE.findall(op.rest):
+                called.add(cal)
+            bm = _BRANCH_RE.search(op.rest)
+            if bm:
+                called.update(x.strip().lstrip("%")
+                              for x in bm.group(1).split(","))
+    roots = [c for c in comps if c not in called]
+    entry = entry or (roots[0] if roots else next(iter(comps)))
+
+    flops = 0.0
+    bytes_acc = 0.0
+    coll = {k: {"count": 0.0, "bytes": 0.0} for k in _COLLECTIVES}
+    visited_stack = []
+
+    def walk(cname: str, weight: float, count_bytes: bool):
+        nonlocal flops, bytes_acc
+        comp = comps.get(cname)
+        if comp is None or cname in visited_stack:
+            return
+        visited_stack.append(cname)
+        shapes = dict(comp.params)
+        for op in comp.ops:
+            shapes[op.name] = op.shape
+        for op in comp.ops:
+            kind = op.kind
+            if kind == "dot":
+                flops += weight * _dot_flops(op, shapes)
+            ckind = next((c for c in _COLLECTIVES
+                          if kind.replace("_", "-").startswith(c)), None)
+            if ckind:
+                coll[ckind]["count"] += weight
+                coll[ckind]["bytes"] += weight * shape_bytes(op.shape)
+            if count_bytes and kind not in (
+                    "parameter", "constant", "get-tuple-element", "tuple",
+                    "bitcast", "while", "conditional", "call"):
+                ob = shape_bytes(op.shape)
+                ib = 0
+                operands = re.match(r"([^)]*)\)", op.rest)
+                names = (re.findall(r"%?([\w.\-]+)", operands.group(1))
+                         if operands else [])
+                if kind == "dynamic-update-slice":
+                    # in-place slice update: traffic = 2 × updated slice,
+                    # not the whole buffer (XLA's own count is the known
+                    # full-operand overestimate)
+                    upd = shapes.get(names[1]) if len(names) > 1 else None
+                    bytes_acc += weight * 2 * shape_bytes(upd or "")
+                elif kind in ("dynamic-slice", "gather"):
+                    # random access reads ≈ output, not the whole operand
+                    bytes_acc += weight * 2 * ob
+                elif kind == "scatter":
+                    upd = shapes.get(names[2]) if len(names) > 2 else None
+                    bytes_acc += weight * 3 * shape_bytes(upd or "")
+                else:
+                    for nm in names:
+                        s = shapes.get(nm)
+                        if s:
+                            ib += shape_bytes(s)
+                    bytes_acc += weight * (ob + ib)
+            # descend
+            if kind == "while":
+                body_m = re.search(r"body=%?([\w.\-]+)", op.rest)
+                cond_m = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                trips = 1
+                if cond_m and cond_m.group(1) in comps:
+                    trips = _trip_count(comps[cond_m.group(1)])
+                if body_m:
+                    walk(body_m.group(1), weight * trips, count_bytes)
+            elif kind == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", op.rest)
+                if cm:
+                    walk(cm.group(1), weight, False)  # FLOPs yes, bytes no
+            elif kind in ("call", "conditional"):
+                for cal in _CALL_ATTR_RE.findall(op.rest):
+                    walk(cal, weight, count_bytes)
+                bm = _BRANCH_RE.search(op.rest)
+                if bm:
+                    for x in bm.group(1).split(","):
+                        walk(x.strip().lstrip("%"), weight, count_bytes)
+        visited_stack.pop()
+
+    walk(entry, 1.0, True)
+    return {"flops": flops, "bytes": bytes_acc,
+            "collectives": {k: v for k, v in coll.items() if v["count"]},
+            "entry": entry, "n_computations": len(comps)}

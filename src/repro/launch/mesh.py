@@ -1,0 +1,23 @@
+"""Production meshes.
+
+Functions, not module constants: importing this module must never touch jax
+device state (device count locks on first backend init — dryrun.py sets
+XLA_FLAGS before importing anything).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips/pod; multi-pod = 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Reduced mesh for unit tests (requires enough host devices)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,234 @@
+"""Cell builders: (architecture × input shape × mesh) → a jittable step with
+full sharding trees, ready for .lower().compile() (dry-run) or execution.
+
+A *cell* is one entry of the assignment matrix. ``build_cell`` returns the
+step function (train_step / prefill / decode_step), abstract args
+(ShapeDtypeStructs — no allocation), in/out shardings resolved from the
+models' logical axes through the per-cell ShardingRules, and donation info.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .. import configs
+from ..configs.base import ArchConfig, ShapeConfig
+from ..distributed.sharding import (ShardingRules, param_specs, serving_rules,
+                                    training_rules, use_rules)
+from ..models import ModelOpts, build_model
+from ..training import OptConfig, init_opt_state, make_train_step, opt_axes
+
+_IS_AX = lambda a: isinstance(a, tuple)
+
+# Archs whose AdamW states cannot fit the assigned meshes (1T params):
+# Adafactor + gradient accumulation (DESIGN.md §6).
+ADAFACTOR_THRESHOLD = 400e9
+ENC_LEN = 4096  # enc-dec cross-memory length for decode shapes
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: ArchConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    mode: str                  # train | prefill | decode
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    rules: ShardingRules
+    model: Any
+    notes: str = ""
+
+    def lower(self):
+        with self.mesh, use_rules(self.rules):
+            jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                             out_shardings=self.out_shardings,
+                             donate_argnums=self.donate_argnums)
+            return jitted.lower(*self.args)
+
+
+def _batch_shardable(rules: ShardingRules, global_batch: int) -> None:
+    """Clear batch axes the batch size can't divide (e.g. long_500k B=1)."""
+    ax = rules.table.get("batch")
+    if ax is None:
+        return
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    n = math.prod(rules.mesh.shape[a] for a in axes)
+    if global_batch % n != 0:
+        rules.table["batch"] = None
+        rules.table["cache_batch"] = None
+
+
+def rules_for(mesh: Mesh, arch: ArchConfig, shape: ShapeConfig) -> ShardingRules:
+    if shape.kind == "train":
+        r = training_rules(mesh, arch)
+    elif shape.kind == "prefill":
+        r = serving_rules(mesh, arch, decode=False)
+    else:  # decode
+        cp = None
+        if shape.name == "long_500k" and arch.has_attention():
+            cp = tuple(mesh.axis_names)  # batch=1: every axis is CP
+        r = serving_rules(mesh, arch, decode=True, context_parallel=cp)
+    r.table = dict(r.table)
+    _batch_shardable(r, shape.global_batch)
+    return r
+
+
+def _model_opts(arch: ArchConfig, mode: str, for_analysis: bool = False
+                ) -> ModelOpts:
+    import dataclasses as dc
+    if mode == "train":
+        o = ModelOpts(param_dtype=jnp.float32, compute_dtype=jnp.bfloat16,
+                      cache_dtype=jnp.bfloat16, attn_impl="flash",
+                      moe_impl="capacity", remat=True, ce_chunk=2048)
+    else:
+        o = ModelOpts(param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+                      cache_dtype=jnp.bfloat16,
+                      attn_impl="flash" if mode == "prefill" else "dense",
+                      moe_impl="capacity", remat=False)
+    if for_analysis:
+        o = dc.replace(o, flash_unroll=True, remat=False,
+                       scan_layers=False)
+    return o
+
+
+def _inputs_spec(arch: ArchConfig, shape: ShapeConfig, mode: str):
+    b, s = shape.global_batch, shape.seq_len
+    f = jnp.bfloat16
+    if mode == "train":
+        if arch.is_encoder_decoder:
+            return {"enc_embeds": jax.ShapeDtypeStruct((b, s, arch.d_model), f),
+                    "dec_tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if arch.embeds_input:
+            return {"embeds": jax.ShapeDtypeStruct((b, s, arch.d_model), f),
+                    "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if mode == "prefill":
+        if arch.is_encoder_decoder:
+            return {"enc_embeds": jax.ShapeDtypeStruct((b, s, arch.d_model), f),
+                    "dec_tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        if arch.embeds_input:
+            return {"embeds": jax.ShapeDtypeStruct((b, s, arch.d_model), f)}
+        return jax.ShapeDtypeStruct((b, s), jnp.int32)
+    # decode: one new token against a seq_len-deep cache
+    return jax.ShapeDtypeStruct((b,), jnp.int32)
+
+
+def _inputs_sharding(arch: ArchConfig, shape: ShapeConfig, mode: str,
+                     rules: ShardingRules):
+    if mode == "decode":
+        return rules.sharding(("batch",))
+    tok = rules.sharding(("batch", "seq"))
+    emb = rules.sharding(("batch", "seq", "embed"))
+    if mode == "train":
+        if arch.is_encoder_decoder:
+            return {"enc_embeds": emb, "dec_tokens": tok}
+        if arch.embeds_input:
+            return {"embeds": emb, "labels": tok}
+        return {"tokens": tok}
+    if arch.is_encoder_decoder:
+        return {"enc_embeds": emb,
+                "dec_tokens": rules.sharding(("batch", "seq"))}
+    if arch.embeds_input:
+        return {"embeds": emb}
+    return tok
+
+
+def build_cell(arch_name: str, shape_name: str, mesh: Mesh, *,
+               reduced: bool = False, for_analysis: bool = False) -> CellSpec:
+    arch = (configs.get_reduced(arch_name) if reduced
+            else configs.get(arch_name))
+    shape = configs.SHAPES[shape_name]
+    if shape.name == "long_500k" and not configs.long_context_capable(arch):
+        raise ValueError(
+            f"{arch.name}: long_500k skipped (pure full attention — "
+            "DESIGN.md §5)")
+    mode = shape.kind
+    rules = rules_for(mesh, arch, shape)
+    opts = _model_opts(arch, mode, for_analysis)
+    model = build_model(arch, opts)
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(model.init, key)
+    p_axes = model.axes()
+    p_specs = param_specs(p_axes, rules)
+    notes = ""
+
+    if mode == "train":
+        use_adafactor = arch.param_count() > ADAFACTOR_THRESHOLD
+        opt_cfg = OptConfig(name="adafactor" if use_adafactor else "adamw")
+        # accum ×2 (not ×4): every microbatch re-all-gathers the 2-D-sharded
+        # expert weights in fwd+bwd — halving accum halves that traffic;
+        # remat keeps activations in budget (EXPERIMENTS.md §Perf C1)
+        accum = 2 if use_adafactor else 1
+        if use_adafactor:
+            notes = "adafactor + grad-accum x2 (AdamW state would not fit)"
+        # note: grad_shardings pinning was measured and REGRESSED this cell
+        # (EXPERIMENTS.md §Perf C2) — the big all-reduce is the 2-D-TP
+        # backward's dx partial-sum, so the accumulation layout stays free
+        step = make_train_step(model, opt_cfg, accum_steps=accum)
+        opt_shapes = jax.eval_shape(
+            functools.partial(init_opt_state, cfg=opt_cfg), params_shapes)
+        o_axes = opt_axes(p_axes, params_shapes, opt_cfg)
+        o_specs = param_specs(o_axes, rules)
+        batch_spec = _inputs_spec(arch, shape, mode)
+        batch_sh = _inputs_sharding(arch, shape, mode, rules)
+        repl = rules.sharding(())
+        out_sh = (p_specs, o_specs, {"loss": repl, "grad_norm": repl})
+        return CellSpec(arch, shape, mesh, mode, step,
+                        (params_shapes, opt_shapes, batch_spec),
+                        (p_specs, o_specs, batch_sh), out_sh,
+                        donate_argnums=(0, 1), rules=rules, model=model,
+                        notes=notes)
+
+    cache_specs = param_specs(model.cache_axes(), rules)
+    logits_sh = rules.sharding(("batch", "vocab"))
+    if mode == "prefill":
+        fn = functools.partial(_prefill_fn, model=model, max_len=shape.seq_len)
+        inp = _inputs_spec(arch, shape, mode)
+        inp_sh = _inputs_sharding(arch, shape, mode, rules)
+        return CellSpec(arch, shape, mesh, mode, fn, (params_shapes, inp),
+                        (p_specs, inp_sh), (logits_sh, cache_specs),
+                        donate_argnums=(), rules=rules, model=model)
+
+    # decode
+    if arch.is_encoder_decoder:
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     enc_len=ENC_LEN))
+    else:
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    fn = functools.partial(_decode_fn, model=model)
+    tok = _inputs_spec(arch, shape, mode)
+    tok_sh = _inputs_sharding(arch, shape, mode, rules)
+    return CellSpec(arch, shape, mesh, mode, fn,
+                    (params_shapes, tok, cache_shapes),
+                    (p_specs, tok_sh, cache_specs),
+                    (logits_sh, cache_specs),
+                    donate_argnums=(2,), rules=rules, model=model)
+
+
+def _prefill_fn(params, inputs, *, model, max_len):
+    return model.prefill(params, inputs, max_len)
+
+
+def _decode_fn(params, tokens, cache, *, model):
+    return model.decode_step(params, tokens, cache)
+
+
+def all_cells() -> list[tuple[str, str, bool]]:
+    """(arch, shape, runnable) for the full 40-cell matrix."""
+    out = []
+    for a in configs.all_archs():
+        cfg = configs.get(a)
+        for s, runnable in configs.cells(cfg):
+            out.append((a, s, runnable))
+    return out

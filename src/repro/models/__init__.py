@@ -1,0 +1,18 @@
+"""Model zoo: pure-JAX param-pytree models for all assigned architectures."""
+from typing import Optional, Union
+
+from ..configs.base import ArchConfig
+from .lm import DecoderLM, ModelOpts, chunked_ce_loss
+from .encdec import EncDecLM
+
+Model = Union[DecoderLM, EncDecLM]
+
+
+def build_model(cfg: ArchConfig, opts: Optional[ModelOpts] = None) -> Model:
+    if cfg.is_encoder_decoder:
+        return EncDecLM(cfg, opts)
+    return DecoderLM(cfg, opts)
+
+
+__all__ = ["build_model", "DecoderLM", "EncDecLM", "ModelOpts", "Model",
+           "chunked_ce_loss"]

@@ -1,0 +1,257 @@
+"""Attention: dense oracle + blocked flash (custom-VJP) in pure JAX.
+
+Position-array driven masking supports every layout in the system with one
+code path: contiguous prefill, chunked prefill against a cached prefix,
+single-token decode over a ring-buffer SWA cache, and cross-attention.
+
+    mask = (kv_pos >= 0)                                  # slot validity
+         & (kv_pos <= q_pos)            if causal
+         & (q_pos - kv_pos < window)    if sliding window
+
+``flash_attention`` is the memory-bounded path used inside full-shape
+lowerings (scan over KV blocks, online softmax, f32 accumulators) with a
+FlashAttention-2-style recomputing backward — without it, differentiating a
+scan-based attention would checkpoint per-block accumulators (O(S·D·nblocks)
+— see DESIGN.md §4). The Pallas kernels in repro/kernels are the TPU runtime
+versions of the same contracts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attn_mask(q_pos: jnp.ndarray, kv_pos: jnp.ndarray, *, causal: bool = True,
+              window: Optional[int] = None) -> jnp.ndarray:
+    """(B, Tq, Tk) boolean mask from global position arrays."""
+    q = q_pos[:, :, None]
+    k = kv_pos[:, None, :]
+    m = k >= 0
+    if causal:
+        m &= k <= q
+    if window is not None:
+        m &= (q - k) < window
+    return m
+
+
+def _split_gqa(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    b, t, h, d = q.shape
+    return q.reshape(b, t, n_kv, h // n_kv, d)
+
+
+def dense_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    q_pos: jnp.ndarray, kv_pos: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    return_lse: bool = False):
+    """Reference attention. q: (B,Tq,H,D); k,v: (B,Tk,Hkv,D) → (B,Tq,H,D).
+
+    Materializes (B,Hkv,G,Tq,Tk) scores — smoke scale and decode only.
+    """
+    b, tq, h, d = q.shape
+    hkv = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    qf = _split_gqa(q, hkv).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bthgd,bshd->bhgts", qf, kf) * scale
+    m = attn_mask(q_pos, kv_pos, causal=causal, window=window)
+    s = jnp.where(m[:, None, None], s, NEG_INF)
+    smax = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - smax)
+    p = jnp.where(m[:, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgts,bshd->bthgd", p / jnp.maximum(l, 1e-30),
+                     v.astype(jnp.float32))
+    out = out.reshape(b, tq, h, d).astype(q.dtype)
+    if return_lse:
+        lse = (smax[..., 0] + jnp.log(jnp.maximum(l[..., 0], 1e-30)))  # (B,Hkv,G,Tq)
+        lse = jnp.moveaxis(lse, -1, 1).reshape(b, tq, h)
+        return out, lse
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Blocked flash attention (fwd) — scan over KV blocks, online softmax.
+# ---------------------------------------------------------------------------
+
+def _flash_fwd_impl(q, k, v, q_pos, kv_pos, causal, window, block, scale,
+                    unroll=False):
+    b, tq, h, d = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    nb = -(-tk // block)
+    pad = nb * block - tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    qf = _split_gqa(q, hkv).astype(jnp.float32) * scale
+    kb = k.reshape(b, nb, block, hkv, d)
+    vb = v.reshape(b, nb, block, hkv, d)
+    pb = kv_pos.reshape(b, nb, block)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        k_b, v_b, kp = blk
+        s = jnp.einsum("bthgd,bshd->bthgs", qf, k_b.astype(jnp.float32))
+        msk = attn_mask(q_pos, kp, causal=causal, window=window)  # (B,Tq,Bk)
+        s = jnp.where(msk[:, :, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(msk[:, :, None, None], p, 0.0)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bthgs,bshd->bthgd", p, v_b.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, tq, hkv, g), NEG_INF, jnp.float32),
+            jnp.zeros((b, tq, hkv, g), jnp.float32),
+            jnp.zeros((b, tq, hkv, g, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        step, init, (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
+                     jnp.moveaxis(pb, 1, 0)), unroll=unroll)
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).reshape(b, tq, h, d)
+    lse = (m + jnp.log(jnp.maximum(l, 1e-30))).reshape(b, tq, h)
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _flash(q, k, v, q_pos, kv_pos, causal, window, block, scale, unroll):
+    out, _ = _flash_fwd_impl(q, k, v, q_pos, kv_pos, causal, window, block,
+                             scale, unroll)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, q_pos, kv_pos, causal, window, block, scale,
+                   unroll):
+    out, lse = _flash_fwd_impl(q, k, v, q_pos, kv_pos, causal, window, block,
+                               scale, unroll)
+    return out, (q, k, v, q_pos, kv_pos, out, lse)
+
+
+def _flash_vjp_bwd(causal, window, block, scale, unroll, res, dout):
+    q, k, v, q_pos, kv_pos, out, lse = res
+    b, tq, h, d = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    nb = -(-tk // block)
+    pad = nb * block - tk
+    kp_, vp_, posp = k, v, kv_pos
+    if pad:
+        kp_ = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp_ = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        posp = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    qf = _split_gqa(q, hkv).astype(jnp.float32)
+    do = _split_gqa(dout, hkv).astype(jnp.float32)
+    of = _split_gqa(out, hkv).astype(jnp.float32)
+    lse_r = lse.reshape(b, tq, hkv, g)
+    delta = jnp.sum(do * of, axis=-1)  # (B,Tq,Hkv,G)
+    kb = kp_.reshape(b, nb, block, hkv, d)
+    vb = vp_.reshape(b, nb, block, hkv, d)
+    pb = posp.reshape(b, nb, block)
+
+    def step(dq, blk):
+        k_b, v_b, kp = blk
+        s = jnp.einsum("bthgd,bshd->bthgs", qf, k_b.astype(jnp.float32)) * scale
+        msk = attn_mask(q_pos, kp, causal=causal, window=window)
+        p = jnp.exp(s - lse_r[..., None])
+        p = jnp.where(msk[:, :, None, None], p, 0.0)
+        dv_b = jnp.einsum("bthgs,bthgd->bshd", p, do)
+        dp = jnp.einsum("bthgd,bshd->bthgs", do, v_b.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bthgs,bshd->bthgd", ds, k_b.astype(jnp.float32))
+        dk_b = jnp.einsum("bthgs,bthgd->bshd", ds, qf)
+        return dq, (dk_b, dv_b)
+
+    dq0 = jnp.zeros((b, tq, hkv, g, d), jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(
+        step, dq0, (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
+                    jnp.moveaxis(pb, 1, 0)), unroll=unroll)
+    dk = jnp.moveaxis(dk, 0, 1).reshape(b, nb * block, hkv, d)[:, :tk]
+    dv = jnp.moveaxis(dv, 0, 1).reshape(b, nb * block, hkv, d)[:, :tk]
+    zq = np.zeros(q_pos.shape, dtype=jax.dtypes.float0)
+    zk = np.zeros(kv_pos.shape, dtype=jax.dtypes.float0)
+    return (dq.reshape(b, tq, h, d).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype), zq, zk)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention(q, k, v, q_pos, kv_pos, *, causal: bool = True,
+                    window: Optional[int] = None, block: int = 512,
+                    scale: Optional[float] = None, unroll: bool = False):
+    """Differentiable blocked flash attention. Shapes as dense_attention.
+
+    ``unroll=True`` flattens the KV-block scans into the trace — used by the
+    roofline costing parts, where XLA's cost_analysis must see every block.
+    """
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    return _flash(q, k, v, q_pos, kv_pos, causal, window, block, scale, unroll)
+
+
+def flash_attention_with_lse(q, k, v, q_pos, kv_pos, *, causal: bool = True,
+                             window: Optional[int] = None, block: int = 512,
+                             scale: Optional[float] = None):
+    """Forward-only flash returning (out, lse) — for context-parallel merge."""
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    return _flash_fwd_impl(q, k, v, q_pos, kv_pos, causal, window, block, scale)
+
+
+def flash_attention_banded(q, k, v, q_pos, kv_pos, *, window: int,
+                           q_block: int = 512, block: int = 512,
+                           scale: Optional[float] = None,
+                           unroll: bool = False):
+    """Sliding-window flash that only computes the live KV band.
+
+    Plain flash streams ALL KV blocks and masks — O(S²) compute even though
+    a window-W layer needs O(S·W). Here an outer scan over q blocks slices
+    the (W + q_block)-wide KV band each block can see and runs flash inside
+    it: S=32k, W=4k → ~6× less attention compute (EXPERIMENTS.md §Perf,
+    mixtral prefill iteration 2). Forward-only (serving prefill path).
+    """
+    b, tq, h, d = q.shape
+    tk = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    band = window + q_block
+    if band >= tk or tq % q_block or tq != tk:
+        return flash_attention(q, k, v, q_pos, kv_pos, causal=True,
+                               window=window, block=block, scale=scale)
+    nq = tq // q_block
+
+    def per_block(qb):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qb * q_block, q_block, 1)
+        qp_blk = jax.lax.dynamic_slice_in_dim(q_pos, qb * q_block, q_block, 1)
+        start = jnp.clip(qb * q_block + q_block - band, 0, tk - band)
+        k_band = jax.lax.dynamic_slice_in_dim(k, start, band, 1)
+        v_band = jax.lax.dynamic_slice_in_dim(v, start, band, 1)
+        kp_band = jax.lax.dynamic_slice_in_dim(kv_pos, start, band, 1)
+        o, _ = _flash_fwd_impl(q_blk, k_band, v_band, qp_blk, kp_band,
+                               True, window, block, scale)
+        return o
+
+    if unroll:   # costing-parts path: every block visible to cost_analysis
+        outs = jnp.stack([per_block(jnp.int32(i)) for i in range(nq)])
+    else:
+        outs = jax.lax.map(per_block, jnp.arange(nq))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, tq, h, d)
+
+
+def merge_partial_attention(outs: jnp.ndarray, lses: jnp.ndarray):
+    """Combine per-shard partial attention (flash-decoding merge).
+
+    outs: (P, B, Tq, H, D) partial outputs; lses: (P, B, Tq, H) partial
+    log-sum-exps over disjoint KV shards → exact global attention output.
+    """
+    m = jnp.max(lses, axis=0)                         # (B,Tq,H)
+    w = jnp.exp(lses - m)                             # (P,B,Tq,H)
+    denom = jnp.sum(w, axis=0)
+    num = jnp.sum(outs.astype(jnp.float32) * w[..., None], axis=0)
+    return (num / jnp.maximum(denom, 1e-30)[..., None]).astype(outs.dtype)

@@ -1,0 +1,242 @@
+"""Encoder-decoder LM (seamless-m4t-large-v2 backbone).
+
+Encoder: bidirectional transformer over precomputed frame embeddings (the
+audio frontend is a stub per the assignment). Decoder: causal self-attention
+(ring KV cache) + cross-attention over encoder memory (K/V projected once at
+prefill and cached — the standard enc-dec serving layout).
+
+Serving mapping for FairBatching (DESIGN.md §5): the encoder pass is a
+prefill-class work unit; decoder steps are decode tasks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.sharding import constrain
+from . import layers as L
+from .lm import ModelOpts, _auto_impl, chunked_ce_loss
+from .module import rmsnorm, stack_init
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig, opts: Optional[ModelOpts] = None):
+        assert cfg.is_encoder_decoder
+        self.cfg = cfg
+        self.opts = opts or ModelOpts()
+
+    def init(self, key) -> dict:
+        cfg, dt = self.cfg, self.opts.param_dtype
+        d = cfg.d_model
+        ks = jax.random.split(key, 6)
+
+        def enc_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {"attn": L.init_attn_params(k1, cfg, dt),
+                    "ln1": jnp.zeros((d,), dt),
+                    "mlp": L.init_mlp_params(k2, d, cfg.d_ff, dt),
+                    "ln2": jnp.zeros((d,), dt)}
+
+        def dec_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"attn": L.init_attn_params(k1, cfg, dt),
+                    "ln1": jnp.zeros((d,), dt),
+                    "cross": L.init_attn_params(k2, cfg, dt),
+                    "lnx": jnp.zeros((d,), dt),
+                    "mlp": L.init_mlp_params(k3, d, cfg.d_ff, dt),
+                    "ln2": jnp.zeros((d,), dt)}
+
+        return {
+            "embed": jax.random.normal(ks[0], (cfg.vocab, d), dt) * 0.02,
+            "enc_layers": stack_init(ks[1], cfg.n_encoder_layers, enc_layer),
+            "enc_ln_f": jnp.zeros((d,), dt),
+            "dec_layers": stack_init(ks[2], cfg.n_layers, dec_layer),
+            "ln_f": jnp.zeros((d,), dt),
+            "head": jax.random.normal(ks[3], (d, cfg.vocab), dt) / math.sqrt(d),
+        }
+
+    def axes(self) -> dict:
+        lead = (None,)
+        attn = {k: lead + v for k, v in L.ATTN_AXES.items()}
+        mlp = {k: lead + v for k, v in L.MLP_AXES.items()}
+        enc = {"attn": attn, "ln1": lead + ("embed",), "mlp": mlp,
+               "ln2": lead + ("embed",)}
+        dec = dict(enc)
+        dec["cross"] = attn
+        dec["lnx"] = lead + ("embed",)
+        return {"embed": ("vocab", "embed"),
+                "enc_layers": enc, "enc_ln_f": ("embed",),
+                "dec_layers": dec, "ln_f": ("embed",),
+                "head": ("embed", "vocab")}
+
+    # ------------------------------------------------------------------
+
+    def _encode(self, params, enc_embeds):
+        cfg = self.cfg
+        x = enc_embeds.astype(self.opts.compute_dtype)
+        x = constrain(x, ("batch", "seq", "embed"))
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        impl = _auto_impl(self.opts, s)
+
+        def body(h, lp):
+            h, _ = L.attn_seq(lp["attn"], h, pos, cfg, window=None,
+                              ln_w=lp["ln1"], impl=impl,
+                              flash_block=self.opts.flash_block,
+                              cache_width=None, causal=False)
+            h = h + L.mlp_apply(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+            return constrain(h, ("batch", "seq", "embed")), None
+        if self.opts.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return rmsnorm(x, params["enc_ln_f"], cfg.norm_eps), pos
+
+    def _cross_kv(self, params, memory):
+        """Project encoder memory to per-decoder-layer cross K/V (once)."""
+        cfg = self.cfg
+        b, s, _ = memory.shape
+
+        def proj(lp):
+            k = (memory @ lp["cross"]["wk"].astype(memory.dtype)).reshape(
+                b, s, cfg.n_kv_heads, cfg.head_dim)
+            v = (memory @ lp["cross"]["wv"].astype(memory.dtype)).reshape(
+                b, s, cfg.n_kv_heads, cfg.head_dim)
+            return k.astype(self.opts.cache_dtype), v.astype(self.opts.cache_dtype)
+        return jax.vmap(proj)(params["dec_layers"])
+
+    def _dec_layer(self, lp, x, positions, mode, self_kv, cross_k, cross_v,
+                   memory_pos, cache_width):
+        cfg = self.cfg
+        if mode == "decode":
+            x, self_kv = L.attn_decode(lp["attn"], x, positions, cfg,
+                                       window=None, ln_w=lp["ln1"],
+                                       cache_k=self_kv[0], cache_v=self_kv[1],
+                                       kv_pos=self_kv[2])
+        else:
+            impl = _auto_impl(self.opts, x.shape[1])
+            x, self_kv = L.attn_seq(lp["attn"], x, positions, cfg, window=None,
+                                    ln_w=lp["ln1"], impl=impl,
+                                    flash_block=self.opts.flash_block,
+                                    cache_width=cache_width)
+            if self_kv is not None:
+                self_kv = (self_kv[0].astype(self.opts.cache_dtype),
+                           self_kv[1].astype(self.opts.cache_dtype), self_kv[2])
+        x = L.cross_attn_apply(lp["cross"], x, (cross_k, cross_v), memory_pos,
+                               positions, cfg, lp["lnx"])
+        x = x + L.mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
+        return x, self_kv
+
+    def _decode_stack(self, params, x, positions, mode, cache, cross_kv,
+                      memory_pos, cache_width):
+        ck, cv = cross_kv
+
+        if mode == "decode":
+            kv_pos = cache["kv_pos"]
+
+            # Cache in the scan carry + dynamic-index update: in-place on the
+            # donated buffer (see lm.py decode path / EXPERIMENTS.md §Perf).
+            def body(carry, xs):
+                h, sk_all, sv_all, kp = carry
+                lp, i, ck_l, cv_l = xs
+                sk = jax.lax.dynamic_index_in_dim(sk_all, i, 0, keepdims=False)
+                sv = jax.lax.dynamic_index_in_dim(sv_all, i, 0, keepdims=False)
+                h, (sk, sv, kp_new) = self._dec_layer(
+                    lp, h, positions, mode, (sk, sv, kv_pos), ck_l, cv_l,
+                    memory_pos, None)
+                sk_all = jax.lax.dynamic_update_index_in_dim(sk_all, sk, i, 0)
+                sv_all = jax.lax.dynamic_update_index_in_dim(sv_all, sv, i, 0)
+                return (h, sk_all, sv_all, kp_new), None
+
+            idx = jnp.arange(self.cfg.n_layers, dtype=jnp.int32)
+            (x, ks, vs, kp), _ = jax.lax.scan(
+                body, (x, cache["k"], cache["v"], kv_pos),
+                (params["dec_layers"], idx, ck, cv))
+            return x, {"k": ks, "v": vs, "kv_pos": kp}
+
+        def body(h, xs):
+            lp, ck_l, cv_l = xs
+            h, kv = self._dec_layer(lp, h, positions, mode, None, ck_l, cv_l,
+                                    memory_pos, cache_width)
+            return h, kv
+        if mode == "train" and self.opts.remat:
+            body = jax.checkpoint(body)
+        x, kvs = jax.lax.scan(body, x, (params["dec_layers"], ck, cv))
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"k": kvs[0], "v": kvs[1], "kv_pos": kvs[2][0]}
+        return x, new_cache
+
+    # ------------------------------------------------------------------
+
+    def prefill(self, params, inputs, max_len: int):
+        """inputs: {'enc_embeds': (B,S_enc,d), 'dec_tokens': (B,S_dec)}."""
+        cfg = self.cfg
+        memory, mem_pos = self._encode(params, inputs["enc_embeds"])
+        cross_kv = self._cross_kv(params, memory)
+        toks = inputs["dec_tokens"]
+        b, sd = toks.shape
+        x = params["embed"].astype(self.opts.compute_dtype)[toks]
+        positions = jnp.broadcast_to(jnp.arange(sd, dtype=jnp.int32), (b, sd))
+        x, self_cache = self._decode_stack(params, x, positions, "prefill",
+                                           None, cross_kv, mem_pos, max_len)
+        logits = self._logits(params, x[:, -1])
+        cache = {"pos": jnp.full((b,), sd, jnp.int32), "kv": self_cache,
+                 "cross_k": cross_kv[0], "cross_v": cross_kv[1],
+                 "memory_pos": mem_pos}
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache):
+        pos = cache["pos"]
+        positions = pos[:, None]
+        x = params["embed"].astype(self.opts.compute_dtype)[tokens[:, None]]
+        x, new_kv = self._decode_stack(
+            params, x, positions, "decode", cache["kv"],
+            (cache["cross_k"], cache["cross_v"]), cache["memory_pos"], None)
+        logits = self._logits(params, x[:, 0])
+        return logits, {**cache, "pos": pos + 1, "kv": new_kv}
+
+    def train_loss(self, params, batch):
+        """batch: {'enc_embeds', 'dec_tokens'} — teacher-forced CE."""
+        memory, mem_pos = self._encode(params, batch["enc_embeds"])
+        cross_kv = self._cross_kv(params, memory)
+        toks = batch["dec_tokens"]
+        b, sd = toks.shape
+        x = params["embed"].astype(self.opts.compute_dtype)[toks]
+        positions = jnp.broadcast_to(jnp.arange(sd, dtype=jnp.int32), (b, sd))
+        x, _ = self._decode_stack(params, x, positions, "train", None,
+                                  cross_kv, mem_pos, None)
+        return chunked_ce_loss(params["head"], params["ln_f"], x[:, :-1],
+                               toks[:, 1:], None, self.cfg, self.opts.ce_chunk)
+
+    def _logits(self, params, h_last):
+        h = rmsnorm(h_last, params["ln_f"], self.cfg.norm_eps)
+        logits = h.astype(jnp.float32) @ params["head"].astype(jnp.float32)
+        return constrain(logits, ("batch", "vocab"))
+
+    def cache_axes(self):
+        kvax = (None, "cache_batch", "cache_seq", "kv_heads", None)
+        return {
+            "pos": ("cache_batch",),
+            "kv": {"k": kvax, "v": kvax,
+                   "kv_pos": ("cache_batch", "cache_seq")},
+            "cross_k": kvax, "cross_v": kvax,
+            "memory_pos": ("cache_batch", "cache_seq"),
+        }
+
+    def init_cache(self, batch: int, max_len: int, enc_len: int = 4096):
+        cfg, dt = self.cfg, self.opts.cache_dtype
+        kvc = L.empty_kv_cache(cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                               cfg.head_dim, dt)
+        return {
+            "pos": jnp.zeros((batch,), jnp.int32),
+            "kv": {"k": kvc["k"], "v": kvc["v"], "kv_pos": kvc["kv_pos"]},
+            "cross_k": jnp.zeros((cfg.n_layers, batch, enc_len,
+                                  cfg.n_kv_heads, cfg.head_dim), dt),
+            "cross_v": jnp.zeros((cfg.n_layers, batch, enc_len,
+                                  cfg.n_kv_heads, cfg.head_dim), dt),
+            "memory_pos": jnp.zeros((batch, enc_len), jnp.int32),
+        }

@@ -1,0 +1,194 @@
+"""Transformer layer primitives: GQA attention with ring-buffer KV caches,
+gated MLP, shared by every architecture in the zoo.
+
+KV cache contract (per attention stack; stacks share one window size W):
+    k, v   : (L, B, W, Hkv, Dh)  — ring buffer, slot of global pos p = p % W
+    kv_pos : (B, W) int32        — global position held in each slot, -1 empty
+    (full-attention stacks are the W = max_len special case)
+
+Position-array-driven masking (attention.py) makes ring order irrelevant to
+correctness — slots carry their global positions, the mask does the rest.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.sharding import constrain
+from .attention import (dense_attention, flash_attention,
+                        flash_attention_banded)
+from .module import rmsnorm, silu
+from .rope import apply_rope
+
+
+# --------------------------------------------------------------------------
+# Params
+# --------------------------------------------------------------------------
+
+def init_attn_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(cfg.q_dim)
+    return {
+        "wq": jax.random.normal(ks[0], (d, cfg.q_dim), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, cfg.kv_dim), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, cfg.kv_dim), dtype) * s,
+        "wo": jax.random.normal(ks[3], (cfg.q_dim, d), dtype) * so,
+    }
+
+
+ATTN_AXES = {
+    "wq": ("embed", "heads"),
+    "wk": ("embed", "kv_heads"),
+    "wv": ("embed", "kv_heads"),
+    "wo": ("heads", "embed"),
+}
+
+
+def init_mlp_params(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d_model)
+    sf = 1.0 / math.sqrt(d_ff)
+    return {
+        "w_gate": jax.random.normal(ks[0], (d_model, d_ff), dtype) * s,
+        "w_up": jax.random.normal(ks[1], (d_model, d_ff), dtype) * s,
+        "w_down": jax.random.normal(ks[2], (d_ff, d_model), dtype) * sf,
+    }
+
+
+MLP_AXES = {
+    "w_gate": ("embed", "ffn"),
+    "w_up": ("embed", "ffn"),
+    "w_down": ("ffn", "embed"),
+}
+
+
+def mlp_apply(p, x):
+    h = silu(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# KV cache ring-buffer plumbing
+# --------------------------------------------------------------------------
+
+def empty_kv_cache(n_layers: int, batch: int, width: int, n_kv: int,
+                   head_dim: int, dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((n_layers, batch, width, n_kv, head_dim), dtype),
+        "v": jnp.zeros((n_layers, batch, width, n_kv, head_dim), dtype),
+        "kv_pos": jnp.full((batch, width), -1, jnp.int32),
+    }
+
+
+def prefill_ring_write(k_new: jnp.ndarray, seq_len: int, width: int):
+    """Gather indices + positions to store the last `width` of a prefilled
+    sequence into ring order. Returns (gather_idx (W,), kv_pos (W,)) — static
+    shapes, shared by every layer/batch."""
+    if seq_len <= width:
+        idx = jnp.arange(width) % max(seq_len, 1)
+        pos = jnp.where(jnp.arange(width) < seq_len, jnp.arange(width), -1)
+        return idx, pos
+    start = seq_len - width
+    s = jnp.arange(width)
+    idx = start + ((s - (start % width)) % width)
+    return idx, idx  # position == token index
+
+
+def write_prefix_cache(k: jnp.ndarray, v: jnp.ndarray, width: int):
+    """k, v: (B, S, Hkv, Dh) freshly-prefilled → ring cache (B, W, Hkv, Dh)."""
+    seq_len = k.shape[1]
+    idx, pos = prefill_ring_write(k, seq_len, width)
+    return (jnp.take(k, idx, axis=1), jnp.take(v, idx, axis=1),
+            jnp.broadcast_to(pos, (k.shape[0], width)))
+
+
+def decode_ring_write(cache_k, cache_v, kv_pos, k_new, v_new, positions):
+    """Insert one token per sequence. cache_*: (B,W,Hkv,Dh); k_new: (B,1,...);
+    positions: (B,) global position of the new token."""
+    width = cache_k.shape[1]
+    slot = positions % width
+    b = jnp.arange(cache_k.shape[0])
+    cache_k = cache_k.at[b, slot].set(k_new[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[b, slot].set(v_new[:, 0].astype(cache_v.dtype))
+    kv_pos = kv_pos.at[b, slot].set(positions)
+    return cache_k, cache_v, kv_pos
+
+
+# --------------------------------------------------------------------------
+# Attention block apply
+# --------------------------------------------------------------------------
+
+def attn_qkv(p, h, positions, cfg: ArchConfig, theta: Optional[float] = None):
+    b, t, _ = h.shape
+    q = (h @ p["wq"].astype(h.dtype)).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = (h @ p["wk"].astype(h.dtype)).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ p["wv"].astype(h.dtype)).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    th = theta if theta is not None else cfg.rope_theta
+    q = apply_rope(q, positions, th)
+    k = apply_rope(k, positions, th)
+    return q, k, v
+
+
+def attn_seq(p, x, positions, cfg: ArchConfig, *, window: Optional[int],
+             ln_w, impl: str = "flash", flash_block: int = 512,
+             flash_unroll: bool = False, banded: bool = False,
+             cache_width: Optional[int] = None, causal: bool = True):
+    """Full-sequence attention (train / whole-prompt prefill).
+
+    Returns (residual output, (k_ring, v_ring, kv_pos) if cache_width else None).
+    """
+    h = rmsnorm(x, ln_w, cfg.norm_eps)
+    q, k, v = attn_qkv(p, h, positions, cfg)
+    q = constrain(q, ("batch", "seq", "q_heads", None))
+    if impl == "flash" and banded and window and causal:
+        o = flash_attention_banded(q, k, v, positions, positions,
+                                   window=window, block=flash_block,
+                                   unroll=flash_unroll)
+    elif impl == "flash":
+        o = flash_attention(q, k, v, positions, positions, causal=causal,
+                            window=window, block=flash_block,
+                            unroll=flash_unroll)
+    else:
+        o = dense_attention(q, k, v, positions, positions, causal=causal,
+                            window=window)
+    out = o.reshape(*x.shape[:2], cfg.q_dim) @ p["wo"].astype(x.dtype)
+    new_cache = None
+    if cache_width is not None:
+        ck, cv, kp = write_prefix_cache(k, v, cache_width)
+        ck = constrain(ck, ("cache_batch", "cache_seq", "kv_heads", None))
+        cv = constrain(cv, ("cache_batch", "cache_seq", "kv_heads", None))
+        new_cache = (ck, cv, kp)
+    return x + out, new_cache
+
+
+def attn_decode(p, x, positions, cfg: ArchConfig, *, window: Optional[int],
+                ln_w, cache_k, cache_v, kv_pos):
+    """Single-token decode against a ring cache. x: (B, 1, d)."""
+    h = rmsnorm(x, ln_w, cfg.norm_eps)
+    q, k, v = attn_qkv(p, h, positions, cfg)
+    q = constrain(q, ("batch", "seq", "q_heads", None))
+    cache_k, cache_v, kv_pos = decode_ring_write(
+        cache_k, cache_v, kv_pos, k, v, positions[:, 0])
+    o = dense_attention(q, cache_k.astype(x.dtype), cache_v.astype(x.dtype),
+                        positions, kv_pos, causal=True, window=window)
+    out = o.reshape(*x.shape[:2], cfg.q_dim) @ p["wo"].astype(x.dtype)
+    return x + out, (cache_k, cache_v, kv_pos)
+
+
+def cross_attn_apply(p, x, memory_kv, memory_pos, positions, cfg: ArchConfig,
+                     ln_w):
+    """Cross-attention for enc-dec decoders. memory_kv: (k, v) precomputed."""
+    h = rmsnorm(x, ln_w, cfg.norm_eps)
+    b, t, _ = h.shape
+    q = (h @ p["wq"].astype(h.dtype)).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k, v = memory_kv
+    o = dense_attention(q, k.astype(x.dtype), v.astype(x.dtype),
+                        positions, memory_pos, causal=False)
+    out = o.reshape(b, t, cfg.q_dim) @ p["wo"].astype(x.dtype)
+    return x + out

@@ -1,0 +1,506 @@
+"""Decoder-only LM assembly for every non-enc-dec architecture family.
+
+One class, four family paths, three entry points:
+
+  * families: uniform transformer (dense / moe / vlm), ssm (mamba2),
+    hybrid (zamba2: mamba backbone + weight-shared attention block),
+    with per-layer-window support (gemma3 local:global) via unrolling.
+  * entry points: ``train_loss`` (full-seq, remat, chunked CE),
+    ``prefill`` (whole prompt → last logits + ring KV cache),
+    ``decode_step`` (one token, ring cache update).
+
+Layers are scan-over-stacked-params for compact HLO (deepseek = 95L compiles
+as one while loop); gemma3 unrolls (26 small layers, heterogeneous windows).
+Roofline accounting composes per-part lowerings with multipliers
+(launch/costing.py) because XLA's cost_analysis counts scan bodies once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.sharding import constrain
+from . import layers as L
+from . import mamba2 as M
+from .module import rmsnorm, stack_init
+from .moe import MOE_AXES, init_moe_params, moe_capacity, moe_dense_exact
+
+
+@dataclasses.dataclass
+class ModelOpts:
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    cache_dtype: Any = jnp.float32
+    attn_impl: str = "auto"        # dense | flash | auto
+    flash_block: int = 512
+    moe_impl: str = "capacity"     # capacity | exact
+    remat: bool = True
+    ce_chunk: int = 512            # tokens per chunked-CE block
+    scan_layers: bool = True       # False → unrolled python loop
+    flash_unroll: bool = False     # unroll flash KV scans (costing parts)
+
+
+def _auto_impl(opts: ModelOpts, seq_len: int) -> str:
+    if opts.attn_impl != "auto":
+        return opts.attn_impl
+    return "flash" if seq_len >= 1024 else "dense"
+
+
+class DecoderLM:
+    def __init__(self, cfg: ArchConfig, opts: Optional[ModelOpts] = None):
+        assert not cfg.is_encoder_decoder
+        self.cfg = cfg
+        self.opts = opts or ModelOpts()
+        # gemma3-style heterogeneous windows force the unrolled path
+        self.unroll = (not self.opts.scan_layers or
+                       cfg.local_global_period is not None)
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+
+    def init(self, key) -> dict:
+        cfg, dt = self.cfg, self.opts.param_dtype
+        keys = jax.random.split(key, 8)
+        d = cfg.d_model
+        params: dict = {
+            "embed": jax.random.normal(keys[0], (cfg.vocab, d), dt) * 0.02,
+            "ln_f": jnp.zeros((d,), dt),
+            "head": jax.random.normal(keys[1], (d, cfg.vocab), dt) / math.sqrt(d),
+        }
+        if cfg.family == "ssm":
+            params["layers"] = {
+                "mamba": stack_init(keys[2], cfg.n_layers,
+                                    lambda k: M.init_mamba_params(k, cfg, dt)),
+                "ln": jnp.zeros((cfg.n_layers, d), dt),
+            }
+        elif cfg.family == "hybrid":
+            params["layers"] = {
+                "mamba": stack_init(keys[2], cfg.n_layers,
+                                    lambda k: M.init_mamba_params(k, cfg, dt)),
+                "ln": jnp.zeros((cfg.n_layers, d), dt),
+            }
+            params["shared"] = {
+                "attn": L.init_attn_params(keys[3], cfg, dt),
+                "ln1": jnp.zeros((d,), dt),
+                "mlp": L.init_mlp_params(keys[4], d, cfg.d_ff, dt),
+                "ln2": jnp.zeros((d,), dt),
+            }
+        else:
+            def layer_init(k):
+                ks = jax.random.split(k, 2)
+                lp = {"attn": L.init_attn_params(ks[0], cfg, dt),
+                      "ln1": jnp.zeros((d,), dt),
+                      "ln2": jnp.zeros((d,), dt)}
+                if cfg.moe is not None:
+                    lp["moe"] = init_moe_params(ks[1], d, cfg.moe, dt)
+                else:
+                    lp["mlp"] = L.init_mlp_params(ks[1], d, cfg.d_ff, dt)
+                return lp
+            params["layers"] = stack_init(keys[2], cfg.n_layers, layer_init)
+        return params
+
+    def axes(self) -> dict:
+        """Logical sharding axes, same structure as params (stacked leading
+        'layers' dim is unsharded)."""
+        cfg = self.cfg
+        lead = (None,)  # stacked layer dim
+        ax: dict = {
+            "embed": ("vocab", "embed"),
+            "ln_f": ("embed",),
+            "head": ("embed", "vocab"),
+        }
+        if cfg.family in ("ssm", "hybrid"):
+            mam = {k: lead + v for k, v in M.MAMBA_AXES.items()}
+            ax["layers"] = {"mamba": mam, "ln": lead + ("embed",)}
+            if cfg.family == "hybrid":
+                ax["shared"] = {
+                    "attn": dict(L.ATTN_AXES), "ln1": ("embed",),
+                    "mlp": dict(L.MLP_AXES), "ln2": ("embed",),
+                }
+        else:
+            lp = {"attn": {k: lead + v for k, v in L.ATTN_AXES.items()},
+                  "ln1": lead + ("embed",), "ln2": lead + ("embed",)}
+            if cfg.moe is not None:
+                lp["moe"] = {k: lead + v for k, v in MOE_AXES.items()}
+            else:
+                lp["mlp"] = {k: lead + v for k, v in L.MLP_AXES.items()}
+            ax["layers"] = lp
+        return ax
+
+    # ------------------------------------------------------------------
+    # pieces
+    # ------------------------------------------------------------------
+
+    def _embed(self, params, inputs):
+        if isinstance(inputs, dict) and "embeds" in inputs:
+            x = inputs["embeds"].astype(self.opts.compute_dtype)
+        else:
+            toks = inputs["tokens"] if isinstance(inputs, dict) else inputs
+            x = params["embed"].astype(self.opts.compute_dtype)[toks]
+        return constrain(x, ("batch", "seq", "embed"))
+
+    def _ffn(self, lp, x):
+        cfg = self.cfg
+        h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            b, s, d = h.shape
+            moe_fn = (moe_capacity if self.opts.moe_impl == "capacity"
+                      else moe_dense_exact)
+            y = moe_fn(h.reshape(b * s, d), lp["moe"], cfg.moe).reshape(b, s, d)
+        else:
+            y = L.mlp_apply(lp["mlp"], h)
+        return constrain(x + y, ("batch", "seq", "embed"))
+
+    def _layer_seq(self, lp, x, positions, window, cache_width, impl):
+        # banded SWA flash on the (no-grad) prefill path only
+        banded = cache_width is not None
+        x, kv = L.attn_seq(lp["attn"], x, positions, self.cfg, window=window,
+                           ln_w=lp["ln1"], impl=impl,
+                           flash_block=self.opts.flash_block,
+                           flash_unroll=self.opts.flash_unroll,
+                           banded=banded, cache_width=cache_width)
+        x = self._ffn(lp, x)
+        if kv is not None:
+            kv = (kv[0].astype(self.opts.cache_dtype),
+                  kv[1].astype(self.opts.cache_dtype), kv[2])
+        return x, kv
+
+    def _layer_decode(self, lp, x, positions, window, kv):
+        x, kv = L.attn_decode(lp["attn"], x, positions, self.cfg,
+                              window=window, ln_w=lp["ln1"],
+                              cache_k=kv[0], cache_v=kv[1], kv_pos=kv[2])
+        x = self._ffn(lp, x)
+        return x, kv
+
+    def _head(self, params, h_last):
+        """h_last: (B, d) → logits (B, V) f32."""
+        h = rmsnorm(h_last, params["ln_f"], self.cfg.norm_eps)
+        logits = h.astype(jnp.float32) @ params["head"].astype(jnp.float32)
+        return constrain(logits, ("batch", "vocab"))
+
+    def _width(self, window, max_len):
+        return min(window, max_len) if window else max_len
+
+    # ------------------------------------------------------------------
+    # forward: uniform transformer stacks
+    # ------------------------------------------------------------------
+
+    def _uniform_seq(self, params, x, positions, max_len, mode):
+        cfg = self.cfg
+        impl = _auto_impl(self.opts, x.shape[1])
+        cache_width = None
+        caches = None
+        if self.unroll:
+            caches = []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                win = cfg.layer_window(i)
+                cw = self._width(win, max_len) if mode == "prefill" else None
+                fn = self._layer_seq
+                if mode == "train" and self.opts.remat:
+                    fn = jax.checkpoint(fn, static_argnums=(3, 4, 5))
+                x, kv = fn(lp, x, positions, win, cw, impl)
+                if kv is not None:
+                    caches.append({"k": kv[0], "v": kv[1], "kv_pos": kv[2]})
+            return x, (caches if mode == "prefill" else None)
+        if mode == "prefill":
+            cache_width = self._width(cfg.window, max_len)
+
+        def body(h, lp):
+            return self._layer_seq(lp, h, positions, cfg.window, cache_width,
+                                   impl)
+        if mode == "train" and self.opts.remat:
+            body = jax.checkpoint(body)
+        x, kvs = jax.lax.scan(body, x, params["layers"])
+        if mode == "prefill":
+            caches = {"k": kvs[0], "v": kvs[1], "kv_pos": kvs[2][0]}
+        return x, caches
+
+    def _uniform_decode(self, params, x, positions, cache):
+        cfg = self.cfg
+        if self.unroll:
+            new_layers = []
+            for i, c in enumerate(cache["kv"]):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                x, kv = self._layer_decode(lp, x, positions,
+                                           cfg.layer_window(i),
+                                           (c["k"], c["v"], c["kv_pos"]))
+                new_layers.append({"k": kv[0], "v": kv[1], "kv_pos": kv[2]})
+            return x, new_layers
+
+        kv = cache["kv"]
+
+        # Cache rides the scan *carry* with dynamic-index read/write per
+        # layer: XLA keeps one in-place buffer (aliased to the donated input)
+        # instead of materializing xs→ys copies of the multi-GB cache
+        # (EXPERIMENTS.md §Perf, decode memory iteration).
+        def body(carry, xs):
+            h, ck, cv, kp = carry
+            lp, i = xs
+            ck_l = jax.lax.dynamic_index_in_dim(ck, i, 0, keepdims=False)
+            cv_l = jax.lax.dynamic_index_in_dim(cv, i, 0, keepdims=False)
+            h, (ck_l, cv_l, kp_new) = self._layer_decode(
+                lp, h, positions, cfg.window, (ck_l, cv_l, kv["kv_pos"]))
+            ck = jax.lax.dynamic_update_index_in_dim(ck, ck_l, i, 0)
+            cv = jax.lax.dynamic_update_index_in_dim(cv, cv_l, i, 0)
+            return (h, ck, cv, kp_new), None
+
+        idx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+        (x, ks, vs, kp), _ = jax.lax.scan(
+            body, (x, kv["k"], kv["v"], kv["kv_pos"]), (params["layers"], idx))
+        return x, {"k": ks, "v": vs, "kv_pos": kp}
+
+    # ------------------------------------------------------------------
+    # forward: ssm / hybrid stacks
+    # ------------------------------------------------------------------
+
+    def _mamba_block(self, lp, ln_w, x, mode, cache=None):
+        h = rmsnorm(x, ln_w, self.cfg.norm_eps)
+        if mode == "decode":
+            y, new_cache = M.mamba_step(lp, h, self.cfg, cache)
+        else:
+            y, new_cache = M.mamba_seq(lp, h, self.cfg, cache)
+        return x + y, new_cache
+
+    def _ssm_stack(self, params, x, mode, cache):
+        def body(h, xs):
+            lp, ln_w, c = xs
+            h, nc = self._mamba_block(lp, ln_w, h, mode, c)
+            return h, nc
+        if mode == "train" and self.opts.remat:
+            body = jax.checkpoint(body)
+        if cache is None:  # train / fresh prefill: make zero states inline
+            cache = jax.vmap(lambda _: M.init_mamba_cache(self.cfg, x.shape[0])
+                             )(jnp.arange(self.cfg.n_layers))
+        x, new_cache = jax.lax.scan(
+            body, x, (params["layers"]["mamba"], params["layers"]["ln"], cache))
+        return x, new_cache
+
+    def _shared_attn_block(self, sp, x, positions, mode, kv, max_len):
+        cfg = self.cfg
+        if mode == "decode":
+            x, kv = L.attn_decode(sp["attn"], x, positions, cfg, window=None,
+                                  ln_w=sp["ln1"], cache_k=kv[0], cache_v=kv[1],
+                                  kv_pos=kv[2])
+        else:
+            impl = _auto_impl(self.opts, x.shape[1])
+            cw = max_len if mode == "prefill" else None
+            x, kv = L.attn_seq(sp["attn"], x, positions, cfg, window=None,
+                               ln_w=sp["ln1"], impl=impl,
+                               flash_block=self.opts.flash_block,
+                               cache_width=cw)
+            if kv is not None:
+                kv = (kv[0].astype(self.opts.cache_dtype),
+                      kv[1].astype(self.opts.cache_dtype), kv[2])
+        x = x + L.mlp_apply(sp["mlp"], rmsnorm(x, sp["ln2"], cfg.norm_eps))
+        return x, kv
+
+    def _hybrid_forward(self, params, x, positions, mode, cache, max_len):
+        cfg = self.cfg
+        period = cfg.attn_period
+        n_groups = cfg.n_layers // period
+        mam_cache = None if cache is None else cache["mamba"]
+        if mam_cache is None:
+            mam_cache = jax.vmap(
+                lambda _: M.init_mamba_cache(cfg, x.shape[0]))(
+                    jnp.arange(cfg.n_layers))
+        new_mam, new_attn = [], []
+
+        def mamba_span(h, lo, hi):
+            sub = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+            c = jax.tree.map(lambda a: a[lo:hi], mam_cache)
+
+            def body(hh, xs):
+                lp, ln_w, cc = xs
+                hh, nc = self._mamba_block(lp, ln_w, hh, mode, cc)
+                return hh, nc
+            if mode == "train" and self.opts.remat:
+                body = jax.checkpoint(body)
+            return jax.lax.scan(body, h, (sub["mamba"], sub["ln"], c))
+
+        for g in range(n_groups):
+            x, nc = mamba_span(x, g * period, (g + 1) * period)
+            new_mam.append(nc)
+            if mode == "decode":
+                c = jax.tree.map(lambda a: a[g], cache["attn"])
+                kv = (c["k"], c["v"], c["kv_pos"])
+            else:
+                kv = None
+            x, kv = self._shared_attn_block(params["shared"], x, positions,
+                                            mode, kv, max_len)
+            if kv is not None:
+                new_attn.append({"k": kv[0], "v": kv[1], "kv_pos": kv[2]})
+        rem = cfg.n_layers - n_groups * period
+        if rem:
+            x, nc = mamba_span(x, n_groups * period, cfg.n_layers)
+            new_mam.append(nc)
+        new_cache = None
+        if mode in ("prefill", "decode"):
+            new_cache = {
+                "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                                      *new_mam),
+                "attn": jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_attn),
+            }
+        return x, new_cache
+
+    # ------------------------------------------------------------------
+    # public entry points
+    # ------------------------------------------------------------------
+
+    def _forward_seq(self, params, x, positions, mode, max_len, cache=None):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return self._ssm_stack(params, x, mode, cache)
+        if cfg.family == "hybrid":
+            return self._hybrid_forward(params, x, positions, mode, cache,
+                                        max_len)
+        return self._uniform_seq(params, x, positions, max_len, mode)
+
+    def prefill(self, params, inputs, max_len: int):
+        """inputs: tokens (B,S) | {'embeds': (B,S,d)} → (logits (B,V), cache)."""
+        x = self._embed(params, inputs)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x, kv = self._forward_seq(params, x, positions, "prefill", max_len)
+        logits = self._head(params, x[:, -1])
+        cache: dict = {"pos": jnp.full((b,), s, jnp.int32)}
+        if self.cfg.family == "ssm":
+            cache["mamba"] = kv
+        elif self.cfg.family == "hybrid":
+            cache.update(kv)
+        else:
+            cache["kv"] = kv
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache):
+        """tokens: (B,) int32 → (logits (B,V), updated cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        positions = pos[:, None]
+        x = self._embed(params, tokens[:, None])
+        if cfg.family == "ssm":
+            x, new = self._ssm_stack(params, x, "decode", cache["mamba"])
+            new_cache = {"pos": pos + 1, "mamba": new}
+        elif cfg.family == "hybrid":
+            x, new = self._hybrid_forward(params, x, positions, "decode",
+                                          cache, max_len=0)
+            new_cache = {"pos": pos + 1, **new}
+        else:
+            x, new = self._uniform_decode(params, x, positions, cache)
+            new_cache = {"pos": pos + 1, "kv": new}
+        logits = self._head(params, x[:, 0])
+        return logits, new_cache
+
+    def train_loss(self, params, batch):
+        """batch: {'tokens' | 'embeds', optional 'labels', optional 'mask'}."""
+        x = self._embed(params, batch)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        h, _ = self._forward_seq(params, x, positions, "train", max_len=s)
+        if "labels" in batch:
+            labels, mask = batch["labels"], batch.get("mask")
+        else:
+            labels = batch["tokens"][:, 1:]
+            h = h[:, :-1]
+            mask = None
+        return chunked_ce_loss(params["head"], params["ln_f"], h, labels,
+                               mask, self.cfg, self.opts.ce_chunk)
+
+    def cache_axes(self):
+        """Logical axes tree matching init_cache's structure."""
+        cfg = self.cfg
+        kv = {"k": (None, "cache_batch", "cache_seq", "kv_heads", None),
+              "v": (None, "cache_batch", "cache_seq", "kv_heads", None),
+              "kv_pos": ("cache_batch", "cache_seq")}
+        ax: dict = {"pos": ("cache_batch",)}
+        mam = {"ssm": (None, "cache_batch", "state", None, None),
+               "conv": (None, "cache_batch", None, "inner")}
+        if cfg.family == "ssm":
+            ax["mamba"] = mam
+        elif cfg.family == "hybrid":
+            ax["mamba"] = mam
+            # shared-attn caches carry a leading group dim on kv_pos too
+            ax["attn"] = {**kv, "kv_pos": (None, "cache_batch", "cache_seq")}
+        elif self.unroll:
+            per = {"k": ("cache_batch", "cache_seq", "kv_heads", None),
+                   "v": ("cache_batch", "cache_seq", "kv_heads", None),
+                   "kv_pos": ("cache_batch", "cache_seq")}
+            ax["kv"] = [per for _ in range(cfg.n_layers)]
+        else:
+            ax["kv"] = kv
+        return ax
+
+    def init_cache(self, batch: int, max_len: int):
+        """Zero cache (engine restore path / decode-only lowering)."""
+        cfg, dt = self.cfg, self.opts.cache_dtype
+        cache: dict = {"pos": jnp.zeros((batch,), jnp.int32)}
+        if cfg.family == "ssm":
+            cache["mamba"] = jax.vmap(
+                lambda _: M.init_mamba_cache(cfg, batch))(jnp.arange(cfg.n_layers))
+        elif cfg.family == "hybrid":
+            cache["mamba"] = jax.vmap(
+                lambda _: M.init_mamba_cache(cfg, batch))(jnp.arange(cfg.n_layers))
+            n_groups = cfg.n_layers // cfg.attn_period
+            kvc = L.empty_kv_cache(n_groups, batch, max_len, cfg.n_kv_heads,
+                                   cfg.head_dim, dt)
+            cache["attn"] = {"k": kvc["k"], "v": kvc["v"],
+                             "kv_pos": jnp.broadcast_to(kvc["kv_pos"][None],
+                                                        (n_groups,) + kvc["kv_pos"].shape)}
+        elif self.unroll:
+            cache["kv"] = [
+                {**{k: v for k, v in zip(
+                    ("k", "v"),
+                    (jnp.zeros((batch, self._width(cfg.layer_window(i), max_len),
+                                cfg.n_kv_heads, cfg.head_dim), dt),) * 2)},
+                 "kv_pos": jnp.full(
+                     (batch, self._width(cfg.layer_window(i), max_len)), -1,
+                     jnp.int32)}
+                for i in range(cfg.n_layers)]
+        else:
+            w = self._width(cfg.window, max_len)
+            c = L.empty_kv_cache(cfg.n_layers, batch, w, cfg.n_kv_heads,
+                                 cfg.head_dim, dt)
+            cache["kv"] = {"k": c["k"], "v": c["v"], "kv_pos": c["kv_pos"]}
+        return cache
+
+
+def chunked_ce_loss(head, ln_f, hidden, labels, mask, cfg: ArchConfig,
+                    chunk: int):
+    """Cross-entropy without materializing (B,S,V) logits: lax.map over
+    sequence chunks (peak = chunk × V per device shard)."""
+    b, s, d = hidden.shape
+    h = rmsnorm(hidden, ln_f, cfg.norm_eps).reshape(b * s, d)
+    y = labels.reshape(b * s)
+    m = (jnp.ones_like(y, jnp.float32) if mask is None
+         else mask.reshape(b * s).astype(jnp.float32))
+    n = b * s
+    nc = -(-n // chunk)
+    pad = nc * chunk - n
+    if pad:
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        y = jnp.pad(y, (0, pad))
+        m = jnp.pad(m, (0, pad))
+
+    headf = head.astype(jnp.float32)
+
+    # checkpoint: without it the vjp of logsumexp pins every chunk's
+    # (chunk, V) logits for the backward pass — 1 TiB-class temp at 1M
+    # tokens × 256k vocab (EXPERIMENTS.md §Perf, train memory iteration)
+    @jax.checkpoint
+    def body(args):
+        hc, yc = args
+        logits = hc.astype(jnp.float32) @ headf          # (chunk, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[:, None], axis=-1)[:, 0]
+        return lse - gold
+
+    nll = jax.lax.map(body, (h.reshape(nc, chunk, d), y.reshape(nc, chunk)))
+    nll = nll.reshape(-1)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)

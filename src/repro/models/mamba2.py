@@ -1,0 +1,217 @@
+"""Mamba2 (SSD — state-space duality) block in pure JAX.
+
+Chunked SSD algorithm per the Mamba2 paper (arXiv:2405.21060, "minimal SSD"):
+intra-chunk contributions in matmul (MXU-friendly) form, inter-chunk state
+carried by a `lax.scan` over chunks. The same math, step-at-a-time, is the
+decode path; prefill→decode continuity is tested (tests/test_models.py).
+
+Layer layout (n_groups = 1):
+  in_proj: d_model → [z (di), x (di), B (N), C (N), dt (H)]
+  depthwise causal conv (width d_conv) over [x, B, C]
+  y = SSD(x·dt, A·dt, B, C) + D·x ; gated RMSNorm with silu(z); out_proj
+
+Cache per layer: {"ssm": (B, H, P, N) f32, "conv": (B, d_conv-1, conv_dim)}.
+The SSM state is the entire sequence memory — constant size, which is what
+makes long_500k trivially runnable for ssm/hybrid archs (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .module import rmsnorm, silu
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    h = s.n_heads(cfg.d_model)
+    return s, di, h, s.head_dim, s.d_state
+
+
+def init_mamba_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    s, di, h, p, n = _dims(cfg)
+    d = cfg.d_model
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * n + h
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, proj_out), dtype) / math.sqrt(d),
+        "conv_w": jax.random.normal(ks[1], (s.d_conv, conv_dim), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, float(h), h, dtype=dtype)),
+        "D": jnp.ones((h,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01, dtype))),  # softplus^-1
+        "norm_w": jnp.zeros((di,), dtype),
+        "out_proj": jax.random.normal(ks[3], (di, d), dtype) / math.sqrt(di),
+    }
+
+
+MAMBA_AXES = {
+    "in_proj": ("embed", "inner"),
+    "conv_w": (None, "inner"),
+    "conv_b": ("inner",),
+    "A_log": (None,),
+    "D": (None,),
+    "dt_bias": (None,),
+    "norm_w": ("inner",),
+    "out_proj": ("inner", "embed"),
+}
+
+
+def _segsum(a):
+    """a: (..., l, h) log-decays → (..., h, l, l): sum a[j+1..i], -inf above diag."""
+    l = a.shape[-2]
+    a = jnp.moveaxis(a, -1, -2)                      # (..., h, l)
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]       # (..., h, l, l): sum (j, i]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xdt, a_dt, b, c, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    xdt: (B, S, H, P) — inputs pre-multiplied by dt
+    a_dt: (B, S, H)   — per-step log decay (A*dt, negative)
+    b, c: (B, S, N)   — input/output projections (n_groups=1)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = xdt.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, "sequence must be chunk-aligned (pad upstream)"
+    xc = xdt.reshape(bsz, nc, chunk, h, p).astype(jnp.float32)
+    ac = a_dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    bc = b.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    cc = c.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+
+    a_cum = jnp.cumsum(ac, axis=2)                                # (b,nc,l,h)
+    # Intra-chunk (diagonal block): L[i,j] = exp(sum a (j..i])
+    ldec = jnp.exp(_segsum(ac))                                   # (b,nc,h,l,l)
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp", cc, bc, ldec, xc)
+
+    # Per-chunk end states.
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)          # (b,nc,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", bc, decay_states, xc)
+
+    # Inter-chunk recurrence.
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                    # (b,nc,h)
+    s0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                        # emit state *before* chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                # (b,nc,h,p,n)
+
+    # Contribution of the carried-in state to each position.
+    state_decay = jnp.exp(a_cum)                                 # (b,nc,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", cc, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final
+
+
+def ssd_step(xdt, a_dt, b, c, state):
+    """One decode step. xdt: (B,H,P); a_dt: (B,H); b,c: (B,N); state (B,H,P,N)."""
+    xdt = xdt.astype(jnp.float32)
+    da = jnp.exp(a_dt.astype(jnp.float32))                        # (B,H)
+    state = state * da[:, :, None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xdt, b.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, c.astype(jnp.float32))
+    return y, state
+
+
+def _project(params, x, cfg):
+    s, di, h, p, n = _dims(cfg)
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xin, b, c, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n],
+                                 axis=-1)
+    return z, xin, b, c, dt
+
+
+def _post(params, y, z, x_heads, cfg, dt):
+    s, di, h, p, n = _dims(cfg)
+    y = y + params["D"].astype(jnp.float32)[:, None] * x_heads.astype(jnp.float32)
+    y = y.reshape(*y.shape[:-2], di)
+    y = y * silu(z.astype(jnp.float32))
+    y = rmsnorm(y, params["norm_w"], cfg.norm_eps)
+    return (y @ params["out_proj"].astype(y.dtype))
+
+
+def mamba_seq(params, x, cfg: ArchConfig, cache=None):
+    """Full-sequence pass. x: (B, S, d_model) → (B, S, d_model), cache out."""
+    s_cfg, di, h, p, n = _dims(cfg)
+    bsz, slen, _ = x.shape
+    z, xin, b, c, dt = _project(params, x, cfg)
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)               # (B,S,conv)
+    tail_in = (jnp.zeros((bsz, s_cfg.d_conv - 1, conv_in.shape[-1]), x.dtype)
+               if cache is None else cache["conv"].astype(x.dtype))
+    padded = jnp.concatenate([tail_in, conv_in], axis=1)
+    # Depthwise causal conv, width d_conv.
+    conv = sum(padded[:, i:i + slen] * params["conv_w"][i].astype(x.dtype)
+               for i in range(s_cfg.d_conv))
+    conv = silu(conv + params["conv_b"].astype(x.dtype))
+    xc, bc, cc = jnp.split(conv, [di, di + n], axis=-1)
+    x_heads = xc.reshape(bsz, slen, h, p)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))             # (H,)
+    a_dt = a * dt
+    xdt = x_heads.astype(jnp.float32) * dt[..., None]
+    chunk = min(s_cfg.chunk, slen)
+    pad = (-slen) % chunk
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_dt = jnp.pad(a_dt, ((0, 0), (0, pad), (0, 0)))
+        bc = jnp.pad(bc, ((0, 0), (0, pad), (0, 0)))
+        cc_p = jnp.pad(cc, ((0, 0), (0, pad), (0, 0)))
+    else:
+        cc_p = cc
+    init_state = None if cache is None else cache["ssm"]
+    y, final = ssd_chunked(xdt, a_dt, bc, cc_p, chunk, init_state)
+    y = y[:, :slen]
+    out = _post(params, y, z, x_heads, cfg, dt)
+    new_cache = {"ssm": final,
+                 "conv": padded[:, slen:slen + s_cfg.d_conv - 1].astype(jnp.float32)}
+    return out.astype(x.dtype), new_cache
+
+
+def mamba_step(params, x, cfg: ArchConfig, cache):
+    """Single-token decode. x: (B, 1, d_model)."""
+    s_cfg, di, h, p, n = _dims(cfg)
+    bsz = x.shape[0]
+    z, xin, b, c, dt = _project(params, x[:, 0], cfg)
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)               # (B,conv)
+    window = jnp.concatenate([cache["conv"].astype(x.dtype),
+                              conv_in[:, None]], axis=1)          # (B,d_conv,conv)
+    conv = jnp.einsum("bkc,kc->bc", window, params["conv_w"].astype(x.dtype))
+    conv = silu(conv + params["conv_b"].astype(x.dtype))
+    xc, bc, cc = jnp.split(conv, [di, di + n], axis=-1)
+    x_heads = xc.reshape(bsz, h, p)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))   # (B,H)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, new_state = ssd_step(x_heads.astype(jnp.float32) * dt[..., None],
+                            a * dt, bc, cc, cache["ssm"])
+    out = _post(params, y, z, x_heads, cfg, dt)
+    new_cache = {"ssm": new_state, "conv": window[:, 1:].astype(jnp.float32)}
+    return out[:, None].astype(x.dtype), new_cache
+
+
+def mamba_cache_shape(cfg: ArchConfig, batch: int):
+    s, di, h, p, n = _dims(cfg)
+    return {"ssm": (batch, h, p, n), "conv": (batch, s.d_conv - 1, di + 2 * n)}
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    shp = mamba_cache_shape(cfg, batch)
+    return {"ssm": jnp.zeros(shp["ssm"], jnp.float32),
+            "conv": jnp.zeros(shp["conv"], jnp.float32)}

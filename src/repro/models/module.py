@@ -1,0 +1,55 @@
+"""Minimal param-pytree module helpers (flax is not installed — by design:
+params are plain dicts, every layer is an init fn + apply fn, and a parallel
+"axes" pytree carries logical sharding names for distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any          # nested dict of jnp arrays
+Axes = Any            # same structure, leaves = tuple[str | None, ...]
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(in_dim)
+    return jax.random.normal(key, (in_dim, out_dim), dtype) * scale
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def silu(x: jnp.ndarray) -> jnp.ndarray:
+    return x * jax.nn.sigmoid(x)
+
+
+def softplus(x):
+    return jax.nn.softplus(x)
+
+
+def stack_init(key, n: int, init_fn) -> jnp.ndarray:
+    """Initialize n stacked copies (layer-scan layout): leaf shape (n, ...)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params)
+
+
+def tree_zeros_like(params: Params, dtype=None) -> Params:
+    return jax.tree.map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), params)

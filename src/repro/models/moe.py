@@ -1,0 +1,152 @@
+"""Mixture-of-Experts FFN: exact reference + production capacity dispatch.
+
+Two implementations of the same contract (token-choice top-k routing, gates
+softmaxed over the selected experts):
+
+* ``moe_dense_exact`` — every token through every expert, gated combine.
+  Exact, O(E/k) extra FLOPs: smoke tests and the kernels' oracle.
+* ``moe_capacity`` — production path: sort tokens by expert, gather into an
+  (E, C, d) dispatch buffer (capacity C per expert, overflow dropped exactly
+  like production MoE serving), batched expert GEMMs, weighted scatter-add
+  back. Token-chunked with ``lax.map`` so the dispatch transient stays
+  bounded at 1M-token prefills (DESIGN.md §6); each chunk body is
+  ``jax.checkpoint``-ed so training doesn't checkpoint per-chunk residuals.
+
+The Pallas ``moe_gmm`` kernel implements the grouped GEMM of the capacity
+path on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MoEConfig
+from ..distributed.sharding import constrain
+from .module import silu
+
+
+def init_moe_params(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    s_in = 1.0 / math.sqrt(d_model)
+    s_f = 1.0 / math.sqrt(f)
+    return {
+        "router": jax.random.normal(ks[0], (d_model, e), dtype) * s_in,
+        "w_gate": jax.random.normal(ks[1], (e, d_model, f), dtype) * s_in,
+        "w_up": jax.random.normal(ks[2], (e, d_model, f), dtype) * s_in,
+        "w_down": jax.random.normal(ks[3], (e, f, d_model), dtype) * s_f,
+    }
+
+
+MOE_AXES = {
+    "router": (None, None),
+    "w_gate": ("expert", "embed", "expert_ff"),
+    "w_up": ("expert", "embed", "expert_ff"),
+    "w_down": ("expert", "expert_ff", "embed"),
+}
+
+
+def _route(x, router, top_k: int):
+    """Top-k routing. Returns (gates (T,k) f32, experts (T,k) i32)."""
+    logits = (x.astype(jnp.float32) @ router.astype(jnp.float32))
+    topv, tope = jax.lax.top_k(logits, top_k)
+    gates = jax.nn.softmax(topv, axis=-1)
+    return gates, tope
+
+
+def moe_dense_exact(x: jnp.ndarray, params, cfg: MoEConfig) -> jnp.ndarray:
+    """x: (T, d) → (T, d). Computes all experts; exact oracle."""
+    t, d = x.shape
+    gates, tope = _route(x, params["router"], cfg.top_k)
+    h = jnp.einsum("td,edf->tef", x, params["w_gate"])
+    u = jnp.einsum("td,edf->tef", x, params["w_up"])
+    y = jnp.einsum("tef,efd->ted", silu(h) * u, params["w_down"])  # (T,E,d)
+    dense_gates = jnp.zeros((t, cfg.n_experts), jnp.float32)
+    dense_gates = dense_gates.at[jnp.arange(t)[:, None], tope].add(gates)
+    return jnp.einsum("te,ted->td", dense_gates, y.astype(jnp.float32)).astype(x.dtype)
+
+
+def _capacity(chunk_tokens: int, cfg: MoEConfig) -> int:
+    """Per-expert capacity. Decode-size chunks (≤512 tokens) use factor 1.0
+    and 4-alignment: with E ≫ tokens·k/E the 8-aligned 1.25× padding tripled
+    the expert GEMM FLOPs at kimi decode batches (EXPERIMENTS.md §Perf,
+    kimi decode iteration 1)."""
+    c = math.ceil(chunk_tokens * cfg.top_k / cfg.n_experts
+                  * cfg.capacity_factor)
+    if chunk_tokens <= 512:
+        return max(4, -(-c // 4) * 4)
+    return max(8, -(-c // 8) * 8)  # 8-aligned, >= 8
+
+
+def _moe_chunk(x, valid, params, cfg: MoEConfig, capacity: int):
+    """One chunk of the capacity path. x: (T, d); valid: (T,) bool."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    gates, tope = _route(x, params["router"], k)
+    gates = gates * valid[:, None]
+
+    flat_e = tope.reshape(-1)                             # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]                                    # sorted expert ids
+    st = order // k                                       # source token
+    sg = gates.reshape(-1)[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[se]
+    keep = (pos < capacity) & (sg > 0)
+
+    # Dispatch: slot (se, pos) ← token st. Dropped slots target the pad row.
+    slot = jnp.where(keep, se * capacity + pos, e * capacity)
+    slot_token = jnp.full((e * capacity + 1,), t, jnp.int32).at[slot].set(
+        st, mode="drop")[:-1]
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    xg = x_pad[slot_token].reshape(e, capacity, d)
+
+    # Pin dispatch/expert-GEMM layouts: capacity dim sharded over batch axes
+    # ('dispatch'), expert/ff dims per the rules table — so GSPMD reshards
+    # the (small) activations rather than all-gathering the (huge) expert
+    # weights or replicating the chunk (EXPERIMENTS.md §Perf iterations).
+    xg = constrain(xg, ("expert", "dispatch", "embed"))
+    h = jnp.einsum("ecd,edf->ecf", xg, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xg, params["w_up"])
+    h = constrain(h, ("expert", "dispatch", "expert_ff"))
+    u = constrain(u, ("expert", "dispatch", "expert_ff"))
+    y = jnp.einsum("ecf,efd->ecd", silu(h) * u, params["w_down"])
+    y = constrain(y, ("expert", "dispatch", "embed"))
+    y_flat = y.reshape(e * capacity, d).astype(jnp.float32)
+
+    # Combine: out[st] += gate * y[slot]
+    contrib = jnp.where(keep, sg, 0.0)[:, None] * y_flat[
+        jnp.minimum(slot, e * capacity - 1)]
+    out = jnp.zeros((t + 1, d), jnp.float32).at[
+        jnp.where(keep, st, t)].add(contrib)[:-1]
+    return out.astype(x.dtype)
+
+
+def moe_capacity(x: jnp.ndarray, params, cfg: MoEConfig,
+                 valid=None) -> jnp.ndarray:
+    """Capacity-dispatch MoE over a flat token buffer. x: (T, d) → (T, d)."""
+    t, d = x.shape
+    if valid is None:
+        valid = jnp.ones((t,), bool)
+    chunk = cfg.router_chunk
+    if t <= chunk:
+        return _moe_chunk(x, valid, params, cfg, _capacity(t, cfg))
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    vp = jnp.pad(valid, (0, pad))
+    cap = _capacity(chunk, cfg)
+    body = jax.checkpoint(
+        lambda args: _moe_chunk(args[0], args[1], params, cfg, cap))
+    # keep the chunk stack sharded: unconstrained, GSPMD replicated the
+    # whole token tensor per device and re-read it every chunk iteration
+    # (EXPERIMENTS.md §Perf, mixtral prefill iteration 3)
+    xs = constrain(xp.reshape(n_chunks, chunk, d),
+                   (None, "moe_tokens", "embed"))
+    out = jax.lax.map(body, (xs, vp.reshape(n_chunks, chunk)))
+    out = constrain(out, (None, "moe_tokens", "embed"))
+    return out.reshape(-1, d)[:t]

@@ -1,0 +1,24 @@
+"""Rotary position embeddings, position-array driven (works for contiguous
+prefill, ragged hybrid batches, and ring-buffer SWA caches alike)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., T, H, D); positions: broadcastable to (..., T), int32.
+
+    Invalid slots (position < 0) are rotated by |pos|, which is harmless: the
+    attention mask excludes them.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None, None] * freqs  # (..., T,1,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

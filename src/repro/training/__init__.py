@@ -1,0 +1,6 @@
+from .optimizer import OptConfig, init_opt_state, apply_updates, opt_axes
+from .train_step import make_train_step
+from .checkpoint import save_checkpoint, load_checkpoint
+
+__all__ = ["OptConfig", "init_opt_state", "apply_updates", "opt_axes",
+           "make_train_step", "save_checkpoint", "load_checkpoint"]

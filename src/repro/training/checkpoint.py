@@ -1,0 +1,73 @@
+"""Checkpointing: flat-path npz for params/opt state + JSON for host state.
+
+Fault-tolerance contract (DESIGN.md §7):
+  * training — save_checkpoint/load_checkpoint round-trip the full pytree;
+    step resume is exact (tested in tests/test_training.py).
+  * serving — engine host state (queues, request progress, cost-model
+    coefficients) serializes via EngineState.to_json(); the KV cache is
+    deliberately NOT checkpointed: it is recomputable by prefix re-prefill,
+    which is cheaper than checkpointing GBs of cache at any realistic
+    failure rate.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for path, v in flat.items():
+        keys = path.split("/")
+        node = root
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = v
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return jnp.asarray(node)
+        if node and all(k.startswith("#") for k in node):
+            return [fix(node[f"#{i}"]) for i in range(len(node))]
+        return {k: fix(v) for k, v in node.items()}
+    return fix(root)
+
+
+def save_checkpoint(path: str, tree: Any, meta: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    tmp = path + ".tmp"
+    np.savez(tmp, **flat)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f)
+
+
+def load_checkpoint(path: str) -> Any:
+    with np.load(path, allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files}
+    return _unflatten(flat)
+
+
+def load_meta(path: str) -> dict:
+    with open(path + ".meta.json") as f:
+        return json.load(f)

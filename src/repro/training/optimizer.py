@@ -1,0 +1,129 @@
+"""Optimizers, hand-rolled (optax is not installed).
+
+* AdamW — default; m/v in f32, sharded exactly like params (the params axes
+  tree is reused, so FSDP'd params get FSDP'd optimizer state = ZeRO-1).
+* Adafactor — factored second moment, no first moment: the states of a 1T
+  MoE shrink from 8 TB (AdamW f32) to ~params/row+col. kimi-k2 train_4k is
+  only feasible with this + grad accumulation (DESIGN.md §6, EXPERIMENTS.md
+  §Dry-run notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 8 and shape[-2] >= 8
+
+
+def init_opt_state(params, cfg: OptConfig):
+    if cfg.name == "adamw":
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+    if cfg.name == "adafactor":
+        def vrow(p):
+            if _factored(p.shape):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vcol(p):
+            if _factored(p.shape):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)  # unused
+        return {"step": jnp.zeros((), jnp.int32),
+                "vr": jax.tree.map(vrow, params),
+                "vc": jax.tree.map(vcol, params)}
+    raise ValueError(cfg.name)
+
+
+def opt_axes(params_axes, params_shapes, cfg: OptConfig):
+    """Sharding axes for the optimizer state, mirroring the params axes."""
+    if cfg.name == "adamw":
+        return {"step": (), "m": params_axes, "v": params_axes}
+
+    def vrow_ax(ax, p):
+        return tuple(ax[:-1]) if _factored(p.shape) else tuple(ax)
+
+    def vcol_ax(ax, p):
+        return tuple(ax[:-2]) + tuple(ax[-1:]) if _factored(p.shape) else (None,)
+    is_ax = lambda a: isinstance(a, tuple)
+    return {"step": (),
+            "vr": jax.tree.map(vrow_ax, params_axes, params_shapes, is_leaf=is_ax),
+            "vc": jax.tree.map(vcol_ax, params_axes, params_shapes, is_leaf=is_ax)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def apply_updates(params, grads, state, cfg: OptConfig):
+    """Returns (new_params, new_state). Grads/params may be any float dtype;
+    math runs in f32."""
+    step = state["step"] + 1
+    if cfg.name == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype), m, v
+
+        flat = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_p = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"step": step, "m": new_m, "v": new_v}
+
+    # Adafactor (simplified: constant lr, no update clipping/momentum).
+    d = 1e-30
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if _factored(p.shape):
+            vr = cfg.b2 * vr + (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+            vc = cfg.b2 * vc + (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), d)
+            u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :] + cfg.eps)
+        else:
+            vr = cfg.b2 * vr + (1 - cfg.b2) * g2
+            u = g / (jnp.sqrt(vr) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype), vr, vc
+
+    flat = jax.tree.map(upd, params, grads, state["vr"], state["vc"])
+    pick = lambda i: jax.tree.map(lambda t: t[i], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), {"step": step, "vr": pick(1), "vc": pick(2)}

@@ -1,0 +1,141 @@
+"""Algorithm 1 invariants (paper §3.3) — property-based."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FormationConfig, LinearCostModel, SchedTask,
+                        TaskKind, classify, form_batch, init_time_budget,
+                        slack)
+
+MODEL = LinearCostModel(a=0.002, b=1.9e-4, c=2e-8)
+
+
+def task_strategy(req_id):
+    return st.builds(
+        SchedTask,
+        req_id=st.just(req_id),
+        arrival=st.floats(-20.0, 0.0),
+        ttft_slo=st.just(0.5),
+        tpot_slo=st.sampled_from([0.05, 0.1]),
+        next_output_idx=st.integers(0, 400),
+        new_tokens=st.integers(1, 4096),
+        context=st.integers(0, 100_000),
+        kind=st.sampled_from([TaskKind.PREFILL, TaskKind.DECODE]),
+    )
+
+
+def fix(tasks):
+    """Make task fields self-consistent."""
+    out = []
+    for t in tasks:
+        if t.is_decode:
+            t.new_tokens = 1
+            t.next_output_idx = max(1, t.next_output_idx)
+        else:
+            t.next_output_idx = 0
+        out.append(t)
+    return out
+
+
+tasklists = st.lists(
+    st.integers(0, 10**6), min_size=1, max_size=20, unique=True).flatmap(
+        lambda ids: st.tuples(*[task_strategy(i) for i in ids]))
+
+
+@given(tasklists)
+@settings(max_examples=200, deadline=None)
+def test_urgent_decodes_always_included(tasks):
+    """Paper §3.3: urgent decode tasks are never dropped (the Sarathi
+    graceful-degradation guarantee)."""
+    tasks = fix(list(tasks))
+    now = 0.0
+    cfg = FormationConfig()
+    plan = form_batch(tasks, now, MODEL, cfg)
+    budget = init_time_budget(tasks, now, cfg.max_time_budget)
+    min_tpot = min(t.tpot_slo for t in tasks)
+    in_batch = {it.req_id for it in plan.items}
+    for t in tasks:
+        if t.is_decode and slack(t, now) < budget + min_tpot:
+            assert t.req_id in in_batch, "urgent decode dropped"
+
+
+@given(tasklists)
+@settings(max_examples=200, deadline=None)
+def test_no_overgrant_and_token_budget(tasks):
+    tasks = fix(list(tasks))
+    plan = form_batch(tasks, 0.0, MODEL, FormationConfig(max_token_budget=2048))
+    by_id = {t.req_id: t for t in tasks}
+    granted = {}
+    for it in plan.items:
+        assert it.req_id not in granted, "duplicate grant"
+        granted[it.req_id] = it.n_tokens
+        assert 1 <= it.n_tokens <= by_id[it.req_id].new_tokens
+    # token budget holds except for force-admitted urgent decodes
+    n_granted = sum(granted.values())
+    n_urgent = sum(1 for t in tasks if t.is_decode)
+    assert n_granted <= 2048 + n_urgent
+
+
+@given(tasklists)
+@settings(max_examples=200, deadline=None)
+def test_time_budget_respected_modulo_urgent(tasks):
+    """Predicted step time ≤ safety-adjusted budget unless urgent decodes
+    alone exceed it (graceful Sarathi fallback)."""
+    tasks = fix(list(tasks))
+    now = 0.0
+    cfg = FormationConfig(max_time_budget=10.0)
+    plan = form_batch(tasks, now, MODEL, cfg)
+    budget = min(init_time_budget(tasks, now, cfg.max_time_budget), 10.0)
+    min_tpot = min(t.tpot_slo for t in tasks)
+    urgent = [t for t in tasks
+              if t.is_decode and slack(t, now) < budget + min_tpot]
+    urgent_cost = MODEL.step_time(
+        sum(t.new_tokens for t in urgent),
+        sum(t.cost_context() for t in urgent)) if urgent else 0.0
+    assert plan.predicted_time <= max(budget * cfg.safety, urgent_cost) + 1e-6
+
+
+def test_three_group_priority_order():
+    """Prefill outranks non-urgent decode; urgent decode outranks both."""
+    now = 0.0
+    urgent = SchedTask(1, arrival=-10, ttft_slo=0.5, tpot_slo=0.05,
+                       next_output_idx=190, new_tokens=1, context=500,
+                       kind=TaskKind.DECODE)   # ddl −10+0.5+9.5=0 → slack 0
+    lazy = SchedTask(2, arrival=-10, ttft_slo=0.5, tpot_slo=0.05,
+                     next_output_idx=250, new_tokens=1, context=500,
+                     kind=TaskKind.DECODE)     # slack = 3.0
+    pre = SchedTask(3, arrival=-0.1, ttft_slo=0.5, tpot_slo=0.05,
+                    next_output_idx=0, new_tokens=400, context=0,
+                    kind=TaskKind.PREFILL)
+    budget = init_time_budget([urgent, lazy, pre], now, math.inf)
+    ud, p, nd = classify([urgent, lazy, pre], now, budget, 0.05)
+    assert [t.req_id for t in ud] == [1]
+    assert [t.req_id for t in p] == [3]
+    assert [t.req_id for t in nd] == [2]
+    # tight budget: lazy decode deferred, prefill chunked in
+    small = LinearCostModel(a=0.001, b=1e-4, c=0.0)
+    plan = form_batch([urgent, lazy, pre], now, small,
+                      FormationConfig(max_token_budget=4096))
+    ids = [it.req_id for it in plan.items]
+    assert 1 in ids and 3 in ids
+    grant3 = plan.tokens_for(3)
+    assert grant3 > 0, "prefill got nothing despite spare budget"
+
+
+def test_prefill_chunked_to_fill_budget():
+    pre = SchedTask(1, arrival=0.0, ttft_slo=0.5, tpot_slo=0.05,
+                    next_output_idx=0, new_tokens=100_000, context=0,
+                    kind=TaskKind.PREFILL)
+    dec = SchedTask(2, arrival=-5.0, ttft_slo=0.5, tpot_slo=0.05,
+                    next_output_idx=95, new_tokens=1, context=400,
+                    kind=TaskKind.DECODE)  # slack 0.25
+    m = LinearCostModel(a=0.001, b=1e-4, c=0.0)
+    plan = form_batch([pre, dec], 0.0, m, FormationConfig(max_token_budget=8192))
+    g = plan.tokens_for(1)
+    assert 0 < g < 100_000
+    assert plan.predicted_time <= 0.25 + 1e-9
+
+
+def test_empty_tasks():
+    plan = form_batch([], 0.0, MODEL, FormationConfig())
+    assert plan.items == [] and plan.predicted_time == 0.0

@@ -1,0 +1,71 @@
+"""Linear step-time model + online calibration (paper §3.2)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LinearCostModel, PaddedCostModel,
+                        RecursiveLeastSquares, fit_linear)
+
+
+def test_fit_linear_exact_recovery():
+    true = LinearCostModel(a=0.004, b=2e-4, c=3e-8)
+    rng = np.random.default_rng(0)
+    samples = []
+    for _ in range(50):
+        nt = int(rng.integers(1, 2048))
+        ctx = int(rng.integers(0, 200_000))
+        samples.append((nt, ctx, true.step_time(nt, ctx)))
+    fit = fit_linear(samples)
+    assert abs(fit.a - true.a) < 1e-9
+    assert abs(fit.b - true.b) < 1e-12
+    assert abs(fit.c - true.c) < 1e-14
+
+
+def test_rls_converges_to_truth():
+    true = LinearCostModel(a=0.003, b=1.9e-4, c=2e-8)
+    rls = RecursiveLeastSquares(theta0=(0.001, 1e-4, 1e-9))
+    rng = np.random.default_rng(1)
+    for i in range(2000):
+        # small decode-ish and large prefill-ish steps identify a and b
+        nt = int(rng.integers(1, 32)) if i % 2 else int(rng.integers(64, 1024))
+        ctx = int(rng.integers(0, 100_000))
+        t = true.step_time(nt, ctx) * float(rng.lognormal(0, 0.01))
+        rls.update(nt, ctx, t)
+    m = rls.model()
+    assert abs(m.a - true.a) / true.a < 0.25
+    assert abs(m.b - true.b) / true.b < 0.05
+    assert abs(m.c - true.c) / true.c < 0.25
+
+
+def test_rls_tracks_drift():
+    """Forgetting factor adapts to a hardware slowdown (straggler signal):
+    after drift, *predictions* at operating points match the slow hardware
+    (coefficients individually are unidentifiable from narrow data)."""
+    rls = RecursiveLeastSquares(theta0=(0.003, 1e-4, 1e-9), forgetting=0.98)
+    slow = LinearCostModel(a=0.003, b=3e-4, c=2e-8)
+    rng = np.random.default_rng(2)
+    for _ in range(600):
+        nt = int(rng.integers(1, 512))
+        ctx = int(rng.integers(0, 50_000))
+        rls.update(nt, ctx, slow.step_time(nt, ctx))
+    m = rls.model()
+    for nt, ctx in ((256, 10_000), (16, 40_000), (500, 0)):
+        pred, true_t = m.step_time(nt, ctx), slow.step_time(nt, ctx)
+        assert abs(pred - true_t) / true_t < 0.05
+
+
+def test_padded_model_charges_buckets():
+    m = PaddedCostModel(a=0.0, b=1e-4, c=0.0, buckets=[128, 256, 512])
+    assert m.step_time(100, 0) == m.step_time(128, 0)
+    assert m.step_time(129, 0) == m.step_time(256, 0)
+    assert m.step_time(1, 0) < m.step_time(200, 0)
+
+
+@given(nt=st.integers(1, 4096), ctx=st.integers(0, 10**6),
+       budget=st.floats(1e-3, 10.0))
+@settings(max_examples=200)
+def test_tokens_within_inverts_step_time(nt, ctx, budget):
+    m = LinearCostModel(a=0.002, b=1.7e-4, c=2.1e-8)
+    tok = m.tokens_within(budget, ctx)
+    if tok > 0:
+        assert m.step_time(tok, ctx) <= budget + 1e-9
+        assert m.step_time(tok + 1, ctx) > budget - 1e-9

@@ -1,0 +1,111 @@
+"""Engine end-to-end (sim backend): SLO behaviour, calibration, FT."""
+import json
+
+import pytest
+
+from repro.core import LinearCostModel, PABAdmissionController, make_scheduler
+from repro.data.traces import make_trace
+from repro.engine import Engine, EngineConfig, Request, SimExecutor
+from repro.engine.metrics import summarize
+
+TRUE = LinearCostModel(a=0.003, b=190e-6, c=20e-9)
+EST = lambda: LinearCostModel(a=0.003, b=150e-6, c=10e-9)
+
+
+def run_engine(name, trace, admission=False, **sched_kw):
+    sched = make_scheduler(name, EST(), **sched_kw)
+    adm = PABAdmissionController(0.5, 0.05) if admission else None
+    eng = Engine(sched, SimExecutor(TRUE, seed=7),
+                 EngineConfig(0.5, 0.05), admission=adm)
+    for i, tr in enumerate(trace):
+        eng.submit(Request(i, tr.arrival, tr.prompt_len, tr.output_len,
+                           0.5, 0.05))
+    done = eng.run()
+    return eng, done
+
+
+def light_trace():
+    return make_trace("qwentrace", rps=0.8, duration=60, seed=5)
+
+
+def test_fairbatching_tpot_guarantee_under_feasible_load():
+    """TPOT is FairBatching's hard guarantee. TTFT violations at light load
+    are requests that are physically infeasible (prompt_len·b alone exceeds
+    the SLO, or a burst transiently exceeds node capacity) — asserted
+    relatively: FB's TTFT attainment matches or beats both baselines."""
+    trace = light_trace()
+    eng, done = run_engine("fairbatching", trace)
+    tpot_viol = [m for m in done if not m.tpot_ok]
+    assert not tpot_viol, f"{len(tpot_viol)} TPOT violations at light load"
+    fb_ttft = sum(m.ttft_ok for m in done) / len(done)
+    for base, kw in (("sarathi", {"token_budget": 256}), ("vllm-vanilla", {})):
+        _, d = run_engine(base, trace, **kw)
+        att = sum(m.ttft_ok for m in d) / len(d)
+        assert fb_ttft >= att - 0.02, f"FB TTFT {fb_ttft:.3f} < {base} {att:.3f}"
+    # every violated request is individually infeasible or burst-bound
+    for m in done:
+        if not m.ttft_ok:
+            req = eng.requests[m.req_id]
+            feasible_alone = TRUE.step_time(req.prompt_len, 0) <= 0.5
+            assert (not feasible_alone) or m.ttft <= 3.0
+
+
+def test_vanilla_interrupts_decode_under_burst():
+    trace = make_trace("qwentrace", rps=2.5, duration=90, seed=6)
+    _, d_van = run_engine("vllm-vanilla", trace)
+    _, d_fb = run_engine("fairbatching", trace)
+    s_van = summarize(d_van, 1.0)
+    s_fb = summarize(d_fb, 1.0)
+    assert s_fb["tpot_p99"] < s_van["tpot_p99"], \
+        "FairBatching should bound TPOT tails vs prefill-prioritizing"
+
+
+def test_online_calibration_recovers_hardware():
+    eng, _ = run_engine("fairbatching", light_trace())
+    m = eng.sched.model
+    assert abs(m.a - TRUE.a) / TRUE.a < 0.25
+    assert abs(m.b - TRUE.b) / TRUE.b < 0.10
+
+
+def test_all_tokens_accounted():
+    trace = light_trace()
+    eng, done = run_engine("sarathi", trace, token_budget=256)
+    assert len(done) == len(trace)
+    for m, tr in zip(sorted(done, key=lambda m: m.req_id),
+                     trace):
+        req = eng.requests[m.req_id]
+        assert req.generated == req.max_new_tokens
+        assert req.prefilled == req.prompt_len
+
+
+def test_snapshot_restore_roundtrip():
+    trace = light_trace()
+    sched = make_scheduler("fairbatching", EST())
+    eng = Engine(sched, SimExecutor(TRUE, seed=7), EngineConfig(0.5, 0.05))
+    for i, tr in enumerate(trace):
+        eng.submit(Request(i, tr.arrival, tr.prompt_len, tr.output_len,
+                           0.5, 0.05))
+    for _ in range(200):
+        eng.step()
+    blob = eng.snapshot()
+    # restore into a fresh engine ("restarted node")
+    eng2 = Engine(make_scheduler("fairbatching", EST()),
+                  SimExecutor(TRUE, seed=8), EngineConfig(0.5, 0.05))
+    eng2.restore(blob)
+    assert eng2.now == eng.now
+    assert set(eng2.active) == set(eng.active)
+    # decodes were converted to prefix re-prefill
+    for rid in eng2.active:
+        assert eng2.requests[rid].prefilled == 0
+    eng2.run()
+    assert not eng2.has_work
+
+
+def test_pab_admission_protects_admitted_requests():
+    trace = make_trace("qwentrace", rps=4.0, duration=60, seed=9)
+    _, d_plain = run_engine("fairbatching", trace)
+    _, d_pab = run_engine("fairbatching", trace, admission=True)
+    s_plain = summarize(d_plain, 1.0)
+    s_pab = summarize(d_pab, 1.0)
+    assert s_pab["slo_attainment"] > s_plain["slo_attainment"]
+    assert s_pab["rejected"] > 0

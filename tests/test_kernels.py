@@ -1,0 +1,97 @@
+"""Pallas kernels vs jnp oracles — interpret=True shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.mamba2_scan import mamba_chunk_scan
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ref import (mamba_chunk_scan_ref, moe_gmm_ref,
+                               paged_attention_ref)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-4
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Tq,H,Hkv,D,page,n_pages,window",
+    [
+        (2, 1, 4, 2, 32, 16, 3, None),       # decode
+        (3, 1, 8, 1, 64, 32, 4, None),       # MQA decode
+        (1, 16, 4, 4, 32, 16, 4, None),      # prefill chunk, MHA
+        (2, 8, 8, 2, 16, 8, 5, 12),          # SWA chunk
+        (2, 1, 4, 2, 128, 128, 2, 64),       # TPU-aligned page/D
+    ])
+def test_paged_attention_sweep(B, Tq, H, Hkv, D, page, n_pages, window, dtype):
+    P = n_pages * 2 + 1
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, Tq, H, D)).astype(dtype)
+    kp = jax.random.normal(ks[1], (P, page, Hkv, D)).astype(dtype)
+    vp = jax.random.normal(ks[2], (P, page, Hkv, D)).astype(dtype)
+    bt = jax.random.randint(ks[3], (B, n_pages), 0, P)
+    total = page * n_pages
+    ctx = jnp.asarray([(total * (i + 1)) // (B + 1) + Tq for i in range(B)],
+                      jnp.int32)
+    ctx = jnp.minimum(ctx, total)
+    qs = ctx - Tq
+    out = paged_attention(q, kp, vp, bt, ctx, qs, window=window,
+                          interpret=True)
+    expect = paged_attention_ref(q, kp, vp, bt, ctx, qs, window=window)
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - expect.astype(jnp.float32)).max())
+    assert err < _tol(dtype), f"err={err}"
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,K,N,bc,bn,bk", [
+    (2, 32, 32, 32, 32, 32, 32),
+    (4, 64, 96, 128, 32, 64, 32),
+    (1, 128, 128, 128, 128, 128, 128),   # single full MXU tile
+    (8, 16, 48, 64, 16, 64, 16),
+])
+def test_moe_gmm_sweep(E, C, K, N, bc, bn, bk, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = (jax.random.normal(ks[0], (E, C, K)) * 0.3).astype(dtype)
+    w = (jax.random.normal(ks[1], (E, K, N)) * 0.3).astype(dtype)
+    out = moe_gmm(x, w, bc=bc, bn=bn, bk=bk, interpret=True)
+    expect = moe_gmm_ref(x, w)
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - expect.astype(jnp.float32)).max())
+    assert err < _tol(dtype) * K ** 0.5, f"err={err}"
+
+
+@pytest.mark.parametrize("B,NC,L,H,P,N", [
+    (1, 2, 8, 2, 8, 8),
+    (2, 3, 16, 4, 16, 8),
+    (2, 4, 32, 2, 32, 16),
+])
+def test_mamba_chunk_scan_sweep(B, NC, L, H, P, N):
+    ks = jax.random.split(KEY, 4)
+    xdt = jax.random.normal(ks[0], (B, NC, L, H, P)) * 0.3
+    a = -jnp.abs(jax.random.normal(ks[1], (B, NC, L, H))) * 0.1
+    bm = jax.random.normal(ks[2], (B, NC, L, N)) * 0.3
+    cm = jax.random.normal(ks[3], (B, NC, L, N)) * 0.3
+    y, st = mamba_chunk_scan(xdt, a, bm, cm, interpret=True)
+    yr, str_ = mamba_chunk_scan_ref(xdt, a, bm, cm)
+    assert float(jnp.abs(y - yr).max()) < 1e-4
+    assert float(jnp.abs(jnp.moveaxis(st, -2, -1) - str_).max()) < 1e-4
+
+
+def test_paged_attention_ignores_garbage_beyond_context():
+    """Pages past context_len must not affect output (allocator reuse)."""
+    B, Tq, H, Hkv, D, page = 1, 1, 2, 1, 16, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Tq, H, D))
+    kp = jax.random.normal(ks[1], (4, page, Hkv, D))
+    vp = jax.random.normal(ks[2], (4, page, Hkv, D))
+    bt = jnp.array([[0, 1]], jnp.int32)
+    ctx = jnp.array([20], jnp.int32)
+    out1 = paged_attention(q, kp, vp, bt, ctx, ctx - 1, interpret=True)
+    kp2 = kp.at[1, 10:].set(1e4)   # garbage beyond token 20
+    vp2 = vp.at[1, 10:].set(1e4)
+    out2 = paged_attention(q, kp2, vp2, bt, ctx, ctx - 1, interpret=True)
+    assert float(jnp.abs(out1 - out2).max()) < 1e-6

@@ -1,0 +1,62 @@
+"""Prefill Admission Budget (paper §3.4 + Appendix A)."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LinearCostModel, PABAdmissionController, SchedTask,
+                        TaskKind, prefill_admission_budget)
+
+MODEL = LinearCostModel(a=0.002, b=1.9e-4, c=2e-8)
+
+
+def dec(i, j=10, ctx=500, arrival=-1.0):
+    return SchedTask(i, arrival=arrival, ttft_slo=0.5, tpot_slo=0.05,
+                     next_output_idx=j, new_tokens=1, context=ctx,
+                     kind=TaskKind.DECODE)
+
+
+def pre(i, n=1000, ctx=0):
+    return SchedTask(i, arrival=0.0, ttft_slo=0.5, tpot_slo=0.05,
+                     next_output_idx=0, new_tokens=n, context=ctx,
+                     kind=TaskKind.PREFILL, prompt_len=n)
+
+
+def test_empty_node_pab_is_capacity():
+    pab = prefill_admission_budget([], 0.0, MODEL, 0.5, 0.05)
+    # one fixed overhead, rest pure prefill tokens
+    expect = (0.5 - MODEL.a) / (MODEL.b + MODEL.c)
+    assert abs(pab - expect) < 1.0
+
+
+def test_pab_decreases_with_load():
+    base = prefill_admission_budget([dec(1)], 0.0, MODEL, 0.5, 0.05)
+    more = prefill_admission_budget([dec(1), dec(2), dec(3)], 0.0, MODEL,
+                                    0.5, 0.05)
+    assert more < base
+
+
+def test_pending_prefill_subtracts_tokens():
+    a = prefill_admission_budget([dec(1)], 0.0, MODEL, 0.5, 0.05)
+    b = prefill_admission_budget([dec(1), pre(2, n=5000)], 0.0, MODEL,
+                                 0.5, 0.05)
+    assert a - b >= 5000  # at least the pending prompt tokens
+
+
+@given(n_dec=st.integers(0, 30), ctx=st.integers(0, 50_000))
+@settings(max_examples=100)
+def test_pab_monotone_in_decode_count(n_dec, ctx):
+    tasks = [dec(i, ctx=ctx) for i in range(n_dec)]
+    p1 = prefill_admission_budget(tasks, 0.0, MODEL, 0.5, 0.05)
+    p2 = prefill_admission_budget(tasks + [dec(999, ctx=ctx)], 0.0, MODEL,
+                                  0.5, 0.05)
+    assert p2 <= p1 + 1e-6
+
+
+def test_admission_controller_rejects_when_exhausted():
+    adm = PABAdmissionController(0.5, 0.05)
+    # empty node admits a small prompt
+    assert adm.admit(500, [], 0.0, MODEL)
+    # saturated node rejects a huge prompt
+    tasks = [dec(i, j=2, ctx=30_000, arrival=-0.1) for i in range(64)]
+    assert not adm.admit(100_000, tasks, 0.0, MODEL)
+    assert adm.rejected == 1

@@ -1,0 +1,62 @@
+"""Baseline schedulers reproduce their papers' behaviours (§2.3)."""
+from repro.core import (LinearCostModel, SarathiScheduler, SchedTask,
+                        TaskKind, VLLMVanillaScheduler, make_scheduler)
+
+MODEL = LinearCostModel(a=0.002, b=1.9e-4, c=2e-8)
+
+
+def dec(i, j=10, ctx=500):
+    return SchedTask(i, arrival=-1.0, ttft_slo=0.5, tpot_slo=0.05,
+                     next_output_idx=j, new_tokens=1, context=ctx,
+                     kind=TaskKind.DECODE)
+
+
+def pre(i, n=1000, arrival=0.0):
+    return SchedTask(i, arrival=arrival, ttft_slo=0.5, tpot_slo=0.05,
+                     next_output_idx=0, new_tokens=n, context=0,
+                     kind=TaskKind.PREFILL, prompt_len=n)
+
+
+def test_sarathi_stall_free():
+    """Every active decode is in every batch; leftover budget → chunked
+    prefill FCFS."""
+    s = SarathiScheduler(MODEL, token_budget=256)
+    tasks = [dec(i) for i in range(10)] + [pre(100, 5000, arrival=0.0),
+                                           pre(101, 5000, arrival=0.1)]
+    plan = s.schedule(1.0, tasks)
+    ids = {it.req_id for it in plan.items}
+    assert all(i in ids for i in range(10)), "decode stalled"
+    assert plan.tokens_for(100) == 256 - 10      # FCFS chunk fills leftover
+    assert plan.tokens_for(101) == 0
+    assert plan.total_new_tokens == 256
+
+
+def test_vanilla_prefill_first_starves_decode():
+    v = VLLMVanillaScheduler(MODEL, max_num_batched_tokens=8192)
+    tasks = [dec(i) for i in range(4)] + [pre(100, 3000)]
+    plan = v.schedule(1.0, tasks)
+    assert plan.tokens_for(100) == 3000
+    assert not plan.decode_items, "vanilla should run the prefill batch alone"
+    # without waiting prefills it runs a pure decode batch
+    plan2 = v.schedule(1.0, [dec(i) for i in range(4)])
+    assert len(plan2.decode_items) == 4
+
+
+def test_factory_names():
+    for name in ("vllm-vanilla", "sarathi", "fairbatching",
+                 "fb-token-budget", "fb-fix-batch"):
+        s = make_scheduler(name, LinearCostModel(0.002, 1e-4, 1e-9))
+        assert s.schedule(0.0, [dec(1)]).items
+
+
+def test_fb_variants_differ_under_long_context():
+    """FB-TB ignores context in budgeting; FB-vanilla charges it (paper
+    Fig-7 step 4)."""
+    long_ctx = [dec(i, j=5, ctx=80_000) for i in range(8)] + [pre(99, 2000)]
+    tb = make_scheduler("fb-token-budget", LinearCostModel(0.002, 1e-4, 2e-8))
+    tv = make_scheduler("fairbatching", LinearCostModel(0.002, 1e-4, 2e-8))
+    p_tb = tb.schedule(0.0, long_ctx)
+    p_tv = tv.schedule(0.0, long_ctx)
+    # token-budget variant over-packs tokens: it ignores the context cost
+    # that the time-budget variant charges (paper's ±5.2% failure mode)
+    assert p_tb.total_new_tokens > p_tv.total_new_tokens

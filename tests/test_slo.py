@@ -1,0 +1,53 @@
+"""Envelope-SLO tracking (paper §3.1): correctness + monotonicity property."""
+import math
+
+from hypothesis import given, strategies as st
+
+from repro.core import (SchedTask, TaskKind, attainment, request_deadline,
+                        slack, token_deadline)
+
+
+def mk(arrival=0.0, ttft=0.5, tpot=0.05, j=0, kind=TaskKind.DECODE, ctx=100):
+    return SchedTask(req_id=1, arrival=arrival, ttft_slo=ttft, tpot_slo=tpot,
+                     next_output_idx=j, new_tokens=1, context=ctx, kind=kind)
+
+
+def test_token_deadline_formula():
+    assert token_deadline(10.0, 0.5, 0.05, 0) == 10.5
+    assert token_deadline(10.0, 0.5, 0.05, 4) == 10.5 + 0.2
+
+
+def test_prefill_deadline_is_ttft():
+    t = mk(arrival=3.0, j=0, kind=TaskKind.PREFILL)
+    assert request_deadline(t) == 3.5
+    assert abs(slack(t, now=3.2) - 0.3) < 1e-12
+
+
+@given(j1=st.integers(0, 500), j2=st.integers(0, 500),
+       tpot=st.floats(0.001, 0.5), ttft=st.floats(0.01, 5.0))
+def test_envelope_monotone_in_token_index(j1, j2, tpot, ttft):
+    """Later tokens never have earlier deadlines (the monotonicity that
+    makes the envelope fair, unlike TBT — paper §2.4)."""
+    if j1 > j2:
+        j1, j2 = j2, j1
+    assert token_deadline(0.0, ttft, tpot, j1) <= token_deadline(0.0, ttft, tpot, j2)
+
+
+@given(shift=st.floats(0.0, 1.0))
+def test_earlier_generation_never_hurts(shift):
+    """Shifting every output earlier keeps/improves attainment (paper's
+    argument for envelope over TBT)."""
+    base = [0.4, 0.5, 0.6, 0.7]
+    ok_late = attainment(base, 0.0, 0.5, 0.12)
+    ok_early = attainment([t - shift * 0.3 for t in base], 0.0, 0.5, 0.12)
+    assert (ok_early[0] >= ok_late[0]) and (ok_early[1] >= ok_late[1])
+
+
+def test_attainment_max_tpot_definition():
+    # token 1 late relative to token 0 → worst-case TPOT violated even if
+    # later tokens catch up on average
+    times = [0.1, 0.3, 0.32, 0.34]
+    ttft_ok, tpot_ok = attainment(times, 0.0, 0.5, 0.05)
+    assert ttft_ok and not tpot_ok
+    ttft_ok, tpot_ok = attainment([0.1, 0.14, 0.18, 0.22], 0.0, 0.5, 0.05)
+    assert ttft_ok and tpot_ok
