@@ -1,9 +1,13 @@
 """Paper Figure 8: cluster-level peak goodput — LB × node-scheduler combos
-at DP = 2..8 (plus a failure-resilience column, beyond-paper)."""
+at DP = 2..8 (plus a failure-resilience column, beyond-paper).
+
+All rows run through the event-driven ``repro.sim.replay`` harness: ranks
+interleave on one global clock and the LB sees engines only via periodic
+report ticks (paper §3.4's eventual-consistency regime)."""
 from __future__ import annotations
 
-from repro.cluster import Cluster, ClusterConfig, PABLB, RequestCountLB
-from repro.data.traces import make_trace, scale_trace
+from repro.data.traces import make_trace
+from repro.sim import replay
 
 from .common import DEFAULT_HW, HARDWARE, initial_estimate
 
@@ -18,16 +22,14 @@ COMBOS = [
 def _run(lb_name: str, sched: str, admission: bool, dp: int, rps: float,
          duration: float, failure: bool = False) -> dict:
     hw = HARDWARE[DEFAULT_HW]
-    cfg = ClusterConfig(n_ranks=dp, scheduler=sched, admission=admission,
-                        true_model=hw.model(), est_model=initial_estimate(hw))
-    lb = PABLB(dp) if lb_name == "pab-lb" else RequestCountLB(dp)
-    cl = Cluster(cfg, lb)
-    if failure:
-        cl.schedule_failure(duration * 0.3, 0)
-        cl.schedule_join(duration * 0.6, 0)
     trace = make_trace("qwentrace", rps=rps, duration=duration, seed=21)
-    cl.run(trace)
-    return cl.summary()
+    res = replay(trace, scheduler=sched, n_ranks=dp,
+                 lb="pab" if lb_name == "pab-lb" else "count",
+                 admission=admission, true_model=hw.model(),
+                 est_model=initial_estimate(hw),
+                 failures=[(duration * 0.3, 0)] if failure else (),
+                 joins=[(duration * 0.6, 0)] if failure else ())
+    return res.summary
 
 
 def run(quick: bool = True) -> list[dict]:

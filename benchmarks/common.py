@@ -1,14 +1,19 @@
 """Shared benchmark harness: hardware profiles (paper Table 1), system
-runners, Sarathi token-budget tuning, peak-goodput search."""
+runners, Sarathi token-budget tuning, peak-goodput search.
+
+Every trace-replay benchmark funnels through ``run_system`` →
+``repro.sim.replay`` (the event-driven harness, DESIGN.md §8), so single-node
+and cluster rows are produced by the same seeded, bit-reproducible machinery.
+"""
 from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Callable, Optional
 
-from repro.core import LinearCostModel, PABAdmissionController, make_scheduler
+from repro.core import LinearCostModel
 from repro.data.traces import TRACE_PROFILES, make_trace, scale_trace
-from repro.engine import Engine, EngineConfig, Request, SimExecutor
-from repro.engine.metrics import summarize
+from repro.sim import replay
 
 SYSTEMS = ["vllm-vanilla", "vllm-sarathi", "fb-vanilla", "fb-pab"]
 
@@ -59,29 +64,32 @@ def initial_estimate(hw: HardwareProfile) -> LinearCostModel:
     return LinearCostModel(hw.a, hw.b * 0.8, hw.c * 0.6)
 
 
-def run_system(system: str, trace, hw: HardwareProfile, ttft_slo: float,
-               tpot_slo: float, seed: int = 0, sarathi_budget: int = 0) -> dict:
-    admission = None
+def system_spec(system: str, hw: HardwareProfile, tpot_slo: float,
+                sarathi_budget: int = 0) -> tuple[str, bool, dict]:
+    """Map a paper system name → (scheduler name, admission?, sched_kwargs)."""
     if system == "fb-pab":
-        sched = make_scheduler("fairbatching", initial_estimate(hw))
-        admission = PABAdmissionController(ttft_slo, tpot_slo)
-    elif system == "fb-vanilla":
-        sched = make_scheduler("fairbatching", initial_estimate(hw))
-    elif system == "vllm-sarathi":
+        return "fairbatching", True, {}
+    if system == "fb-vanilla":
+        return "fairbatching", False, {}
+    if system == "vllm-sarathi":
         budget = sarathi_budget or sarathi_auto_budget(hw, tpot_slo)
-        sched = make_scheduler("sarathi", initial_estimate(hw),
-                               token_budget=budget)
-    elif system in ("fb-fix-batch", "fb-token-budget"):
-        sched = make_scheduler(system, initial_estimate(hw))
-    else:
-        sched = make_scheduler("vllm-vanilla", initial_estimate(hw))
-    eng = Engine(sched, SimExecutor(hw.model(), seed=seed),
-                 EngineConfig(ttft_slo, tpot_slo), admission=admission)
-    for i, tr in enumerate(trace):
-        eng.submit(Request(i, tr.arrival, tr.prompt_len, tr.output_len,
-                           ttft_slo, tpot_slo))
-    done = eng.run()
-    out = summarize(done, duration=max(eng.now, 1e-9))
+        return "sarathi", False, {"token_budget": budget}
+    if system in ("fb-fix-batch", "fb-token-budget"):
+        return system, False, {}
+    return "vllm-vanilla", False, {}
+
+
+def run_system(system: str, trace, hw: HardwareProfile, ttft_slo: float,
+               tpot_slo: float, seed: int = 0, sarathi_budget: int = 0,
+               n_ranks: int = 1, lb: str = "roundrobin",
+               step_hook: Optional[Callable] = None) -> dict:
+    """Replay `trace` on one of the paper's systems via ``repro.sim.replay``."""
+    sched, admission, kw = system_spec(system, hw, tpot_slo, sarathi_budget)
+    res = replay(trace, scheduler=sched, n_ranks=n_ranks, lb=lb,
+                 ttft_slo=ttft_slo, tpot_slo=tpot_slo, admission=admission,
+                 true_model=hw.model(), est_model=initial_estimate(hw),
+                 sched_kwargs=kw, seed=seed, step_hook=step_hook)
+    out = dict(res.summary)
     out["system"] = system
     return out
 

@@ -8,29 +8,21 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import LinearCostModel, make_scheduler, slack
+from repro.core import slack
 from repro.data.traces import TRACE_PROFILES, make_trace
-from repro.engine import Engine, EngineConfig, Request, SimExecutor
+from repro.sim import replay
 
 from .common import DEFAULT_HW, HARDWARE, initial_estimate
 
 
 def _run(system: str, trace, hw) -> dict:
+    """Replay via the event-driven harness; probe per-step slack in a hook."""
     prof = TRACE_PROFILES["qwentrace"]
-    sched = make_scheduler("sarathi" if system == "sarathi" else "fairbatching",
-                           initial_estimate(hw),
-                           **({"token_budget": 256} if system == "sarathi" else {}))
-    eng = Engine(sched, SimExecutor(hw.model(), seed=3),
-                 EngineConfig(prof.ttft_slo, prof.tpot_slo))
-    for i, tr in enumerate(trace):
-        eng.submit(Request(i, tr.arrival, tr.prompt_len, tr.output_len,
-                           prof.ttft_slo, prof.tpot_slo))
-    slack_samples = []
+    slack_samples: list[float] = []
     ttft_late = 0
-    while eng.has_work:
-        rec = eng.step()
-        if rec is None:
-            continue
+
+    def probe(rank, eng, rec):
+        nonlocal ttft_late
         now = eng.now
         tasks = [eng.requests[i].to_sched_task() for i in eng.active]
         dec = [slack(t, now) / eng.requests[t.req_id].tpot_slo
@@ -39,7 +31,16 @@ def _run(system: str, trace, hw) -> dict:
             slack_samples.append(sum(dec))   # aggregate tokens-ahead
         ttft_late += sum(1 for t in tasks
                          if t.is_prefill and slack(t, now) < 0)
-    done = eng.done
+
+    res = replay(trace,
+                 scheduler="sarathi" if system == "sarathi" else "fairbatching",
+                 n_ranks=1, lb="roundrobin", ttft_slo=prof.ttft_slo,
+                 tpot_slo=prof.tpot_slo, true_model=hw.model(),
+                 est_model=initial_estimate(hw),
+                 sched_kwargs=({"token_budget": 256}
+                               if system == "sarathi" else {}),
+                 seed=3, step_hook=probe)
+    done = res.metrics
     return {
         "decode_tokens_ahead_mean": float(np.mean(slack_samples)) if slack_samples else 0.0,
         "decode_tokens_ahead_p95": float(np.percentile(slack_samples, 95)) if slack_samples else 0.0,

@@ -1,52 +1,61 @@
-"""DP cluster demo: PAB-LB vs count-LB, with a mid-run node failure, a
-straggler rank, and an elastic scale-out (paper §5.5 + DESIGN.md §7).
+"""DP cluster demo on the event-driven replay harness: PAB-LB vs count-LB,
+a straggler rank, a mid-run node failure with elastic rejoin, and the
+beyond-paper trace scenarios — all through ``repro.sim.replay``
+(paper §5.5 + DESIGN.md §7/§8).
 
     PYTHONPATH=src python examples/cluster_sim.py --dp 4
 """
 import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 from benchmarks.common import DEFAULT_HW, HARDWARE, capacity_rps, initial_estimate
-from repro.cluster import Cluster, ClusterConfig, PABLB, RequestCountLB
-from repro.data.traces import make_trace
+from repro.data.traces import make_gamma_trace
+from repro.sim import replay
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dp", type=int, default=4)
     ap.add_argument("--duration", type=float, default=90.0)
+    ap.add_argument("--seed", type=int, default=5)
     args = ap.parse_args()
     hw = HARDWARE[DEFAULT_HW]
     rps = 0.8 * capacity_rps(hw, "qwentrace") * args.dp
-    trace = make_trace("qwentrace", rps=rps, duration=args.duration, seed=5)
-    print(f"dp={args.dp} offered_rps={rps:.2f} requests={len(trace)}")
+    # seeded bursty Gamma arrivals (cv > 1): heavier clumps than the MMPP
+    trace = make_gamma_trace("qwentrace", rps=rps, duration=args.duration,
+                             seed=args.seed)
+    print(f"dp={args.dp} offered_rps={rps:.2f} requests={len(trace)} "
+          f"(bursty-gamma, seed={args.seed})")
 
-    scenarios = [
-        ("count-LB", RequestCountLB, False, {}),
-        ("PAB-LB", PABLB, True, {}),
-        ("PAB-LB + straggler(3x rank0)", PABLB, True,
-         {"straggler_ranks": {0: 3.0}}),
-    ]
-    for name, lb_cls, adm, extra in scenarios:
-        cfg = ClusterConfig(n_ranks=args.dp, scheduler="fairbatching",
-                            admission=adm, true_model=hw.model(),
-                            est_model=initial_estimate(hw), **extra)
-        cl = Cluster(cfg, lb_cls(args.dp))
-        cl.run(trace)
-        s = cl.summary()
+    def show(name: str, **kw):
+        res = replay(trace, scheduler="fairbatching", n_ranks=args.dp,
+                     true_model=hw.model(), est_model=initial_estimate(hw),
+                     seed=args.seed, **kw)
+        s = res.summary
         print(f"{name:32s} slo={s['slo_attainment']:.3f} "
-              f"eff_rps={s['effective_rps']:.2f} rej={s['rejected']}")
+              f"eff_rps={s['effective_rps']:.2f} rej={s['rejected']} "
+              f"dispatch={dict(sorted(res.rank_dispatch.items()))}")
+        return res
+
+    show("count-LB", lb="count", admission=False)
+    pab = show("PAB-LB", lb="pab", admission=True)
+    show("PAB-LB + straggler(3x rank0)", lb="pab", admission=True,
+         straggler_ranks={0: 3.0})
 
     print("-- failure + elastic rejoin (PAB-LB) --")
-    cfg = ClusterConfig(n_ranks=args.dp, scheduler="fairbatching",
-                        admission=True, true_model=hw.model(),
-                        est_model=initial_estimate(hw))
-    cl = Cluster(cfg, PABLB(args.dp))
-    cl.schedule_failure(args.duration * 0.3, 0)
-    cl.schedule_join(args.duration * 0.6, 0)
-    cl.run(trace)
-    s = cl.summary()
-    print(f"{'kill rank0 @30%, rejoin @60%':32s} slo={s['slo_attainment']:.3f} "
-          f"eff_rps={s['effective_rps']:.2f} rej={s['rejected']}")
+    show("kill rank0 @30%, rejoin @60%", lb="pab", admission=True,
+         failures=[(args.duration * 0.3, 0)],
+         joins=[(args.duration * 0.6, 0)])
+
+    # bit-reproducibility: the whole event-driven run is a function of the seed
+    again = replay(trace, scheduler="fairbatching", n_ranks=args.dp,
+                   lb="pab", admission=True, true_model=hw.model(),
+                   est_model=initial_estimate(hw), seed=args.seed)
+    print(f"deterministic replay (same seed): "
+          f"{again.summary == pab.summary}")
 
 
 if __name__ == "__main__":

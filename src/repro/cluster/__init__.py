@@ -1,6 +1,6 @@
 from .load_balancer import (LoadBalancer, RequestCountLB, PABLB,
-                            RoundRobinLB)
+                            RoundRobinLB, make_lb)
 from .cluster import Cluster, ClusterConfig
 
 __all__ = ["LoadBalancer", "RequestCountLB", "PABLB", "RoundRobinLB",
-           "Cluster", "ClusterConfig"]
+           "make_lb", "Cluster", "ClusterConfig"]

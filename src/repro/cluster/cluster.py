@@ -15,12 +15,19 @@ elasticity behaviours designed for 1000+-node fleets (DESIGN.md §7):
 
 The LB sees engine state only through periodic reports + its own local
 decrements — the eventual-consistency regime the paper designs PAB for.
+Reports are emitted on timed LB_REPORT ticks (``report_interval``) of the
+discrete-event clock, not after every step: between ticks the LB routes on
+stale snapshots, as a production router polling engine metrics would.
+
+``Cluster`` is the stateful container (engines, routing table, fail/join
+mechanics); the global clock that interleaves the ranks lives in
+``repro.sim`` (DESIGN.md §8) and ``run()`` simply delegates to it.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Optional
+from typing import Optional
 
 from ..core.cost_model import LinearCostModel
 from ..core.pab import PABAdmissionController
@@ -47,6 +54,9 @@ class ClusterConfig:
     # {rank: slowdown_factor}
     est_model: LinearCostModel = dataclasses.field(
         default_factory=lambda: LinearCostModel(a=0.003, b=150e-6, c=10e-9))
+    sched_kwargs: dict = dataclasses.field(default_factory=dict)
+    # seconds between per-rank LB report ticks (staleness of the LB's view)
+    report_interval: float = 0.05
     seed: int = 0
 
 
@@ -61,6 +71,9 @@ class Cluster:
         self.failures: list[tuple[float, int]] = []      # (time, rank)
         self.joins: list[tuple[float, int]] = []
         self.now = 0.0
+        # engine-incarnation counter: LB report tick chains are tagged with
+        # it so a tick scheduled for a dead incarnation dies on pop
+        self.epoch: dict[int, int] = {}
         for r in range(cfg.n_ranks):
             self._make_engine(r)
 
@@ -75,7 +88,9 @@ class Cluster:
         sched = make_scheduler(cfg.scheduler,
                                LinearCostModel(cfg.est_model.a,
                                                cfg.est_model.b,
-                                               cfg.est_model.c))
+                                               cfg.est_model.c),
+                               **cfg.sched_kwargs)
+        self.epoch[rank] = self.epoch.get(rank, 0) + 1
         adm = (PABAdmissionController(cfg.ttft_slo, cfg.tpot_slo)
                if cfg.admission else None)
         self.engines[rank] = Engine(
@@ -101,21 +116,27 @@ class Cluster:
         running = len(eng.active) - waiting
         self.lb.report(rank, {"pab": eng.pab(), "waiting": waiting,
                               "running": running + len(eng.pending)})
+        if hasattr(self.lb, "note_report"):
+            self.lb.note_report(rank, self.now)
 
-    def _route(self, tr: TraceRequest, req_id: int, arrival: float) -> None:
+    def _route(self, tr: TraceRequest, req_id: int,
+               arrival: float) -> Optional[int]:
+        """Route one arrival; returns the chosen rank (None if rejected)."""
+        # per-request SLO classes (heterogeneous traces) override defaults
+        ttft = tr.ttft_slo if tr.ttft_slo is not None else self.cfg.ttft_slo
+        tpot = tr.tpot_slo if tr.tpot_slo is not None else self.cfg.tpot_slo
         rank = self.lb.route(tr.prompt_len)
+        req = Request(req_id, arrival, tr.prompt_len, tr.output_len,
+                      ttft, tpot)
         if rank is None:
-            req = Request(req_id, arrival, tr.prompt_len, tr.output_len,
-                          self.cfg.ttft_slo, self.cfg.tpot_slo)
             req.state = RequestState.REJECTED
             self.done.append(measure(req))
-            return
+            return None
         self.lb.on_dispatch(rank, tr.prompt_len, tr.output_len)
-        req = Request(req_id, arrival, tr.prompt_len, tr.output_len,
-                      self.cfg.ttft_slo, self.cfg.tpot_slo)
         self.engines[rank].submit(req)
         self._rank_of[req_id] = rank
         self._req_src[req_id] = tr
+        return rank
 
     def _fail_rank(self, rank: int) -> None:
         """Kill a rank; re-route its work (DESIGN.md §7)."""
@@ -161,41 +182,9 @@ class Cluster:
     # ------------------------------------------------------------------
 
     def run(self, trace: list[TraceRequest]) -> list[RequestMetrics]:
-        arrivals = sorted(trace, key=lambda t: t.arrival)
-        idx = 0
-        next_id = 0
-        while True:
-            busy = [(e.now, r) for r, e in self.engines.items() if e.has_work]
-            t_engine = min(busy)[0] if busy else math.inf
-            t_arrival = arrivals[idx].arrival if idx < len(arrivals) else math.inf
-            t_fail = self.failures[0][0] if self.failures else math.inf
-            t_join = self.joins[0][0] if self.joins else math.inf
-            t = min(t_engine, t_arrival, t_fail, t_join)
-            if t is math.inf:
-                break
-            self.now = max(self.now, t)
-            if t_fail <= t:
-                _, rank = self.failures.pop(0)
-                self._fail_rank(rank)
-                continue
-            if t_join <= t:
-                _, rank = self.joins.pop(0)
-                self._join_rank(rank)
-                continue
-            if t_arrival <= t_engine:
-                self._route(arrivals[idx], next_id, t_arrival)
-                idx += 1
-                next_id += 1
-                continue
-            rank = min(busy)[1]
-            eng = self.engines[rank]
-            n_before = len(eng.done)
-            eng.step()
-            if len(eng.done) > n_before:
-                self.done.extend(eng.done[n_before:])
-            self._report(rank)
-        # requests that never finished (e.g. still queued at kill time)
-        return self.done
+        """Event-driven replay on the shared global clock (DESIGN.md §8)."""
+        from ..sim.replay import drive
+        return drive(self, trace, report_interval=self.cfg.report_interval)
 
     def summary(self) -> dict:
         dur = max((e.now for e in self.engines.values()), default=self.now)

@@ -9,6 +9,12 @@ consistency; no strong sync with engines).
   budget covers the incoming prompt; decrement the local view on dispatch.
   Doubles as the straggler/fault signal (DESIGN.md §7): dead or slow ranks
   report shrinking PAB and organically stop receiving work.
+
+Under the event-driven replay (DESIGN.md §8) ``report()`` fires on timed
+LB_REPORT ticks, so between ticks every decision runs on a stale snapshot;
+``_Base`` records the snapshot age (``last_report``) for diagnostics.
+``make_lb`` is the name→instance factory benchmarks and ``repro.sim.replay``
+use.
 """
 from __future__ import annotations
 
@@ -30,9 +36,16 @@ class _Base:
     def __init__(self, n_ranks: int):
         self.n_ranks = n_ranks
         self.alive = [True] * n_ranks
+        # wall-clock (sim time) of the last report per rank; None = never.
+        # Routing never reads this — it quantifies snapshot staleness.
+        self.last_report: dict[int, float] = {}
 
     def set_alive(self, rank: int, alive: bool) -> None:
         self.alive[rank] = alive
+
+    def note_report(self, rank: int, now: Optional[float]) -> None:
+        if now is not None:
+            self.last_report[rank] = now
 
     def _ranks(self):
         return [r for r in range(self.n_ranks) if self.alive[r]]
@@ -107,3 +120,22 @@ class PABLB(_Base):
         # local-view decrement until the next engine report (paper §3.4)
         if self.pab[rank] is not math.inf:
             self.pab[rank] -= prompt_len
+
+
+def make_lb(name: str, n_ranks: int, **kw) -> LoadBalancer:
+    """Factory used by ``repro.sim.replay`` and benchmark CLIs.
+
+    Names: ``pab`` (paper C5), ``count`` (vLLM DPLB), ``roundrobin``.
+    The LB classes' ``.name`` attributes ("pab-lb", "vllm-lb", "round-robin")
+    are also accepted.
+    """
+    aliases = {
+        "pab": PABLB, "pab-lb": PABLB,
+        "count": RequestCountLB, "vllm-lb": RequestCountLB,
+        "roundrobin": RoundRobinLB, "round-robin": RoundRobinLB,
+    }
+    try:
+        return aliases[name](n_ranks, **kw)
+    except KeyError:
+        raise ValueError(f"unknown load balancer: {name!r} "
+                         f"(choose from {sorted(set(aliases))})") from None

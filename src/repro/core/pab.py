@@ -18,7 +18,7 @@ request to a node with PAB >= prompt_len, then decrements its local view
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 from . import slo
 from .cost_model import LinearCostModel
@@ -68,9 +68,15 @@ class PABAdmissionController:
         self.rejected = 0
 
     def admit(self, prompt_len: int, tasks: Sequence[SchedTask], now: float,
-              model: LinearCostModel) -> bool:
-        pab = prefill_admission_budget(tasks, now, model, self.ttft_slo,
-                                       self.tpot_slo)
+              model: LinearCostModel, ttft_slo: Optional[float] = None,
+              tpot_slo: Optional[float] = None) -> bool:
+        """Admit iff the budget covers the prompt. Heterogeneous SLO tiers
+        pass the incoming request's own (ttft_slo, tpot_slo): the budget is
+        computed against *its* deadline, not the node default."""
+        pab = prefill_admission_budget(
+            tasks, now, model,
+            self.ttft_slo if ttft_slo is None else ttft_slo,
+            self.tpot_slo if tpot_slo is None else tpot_slo)
         ok = pab >= prompt_len * self.headroom
         if not ok:
             self.rejected += 1

@@ -26,6 +26,10 @@ class TraceRequest:
     arrival: float
     prompt_len: int
     output_len: int
+    # Per-request SLO class (heterogeneous-tier scenarios); None inherits
+    # the engine/cluster default.
+    ttft_slo: float | None = None
+    tpot_slo: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,3 +100,127 @@ def make_trace(profile: str | TraceProfile, *, rps: float, duration: float,
 def scale_trace(reqs: list[TraceRequest], factor: float) -> list[TraceRequest]:
     """Speed up arrivals by `factor` (paper's load-scaling replay)."""
     return [dataclasses.replace(r, arrival=r.arrival / factor) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# scenario generators beyond the paper's MMPP traces — used by the
+# event-driven replay harness (DESIGN.md §8) to stress coordination paths
+# the Table-2 profiles don't reach
+# ---------------------------------------------------------------------------
+
+
+def _sample_lengths(rng, p: TraceProfile, n: int,
+                    min_len: int = 4) -> list[tuple[int, int]]:
+    mu_p, sg_p = _lognormal_params(p.prompt_avg, p.prompt_p90)
+    mu_o, sg_o = _lognormal_params(p.output_avg, p.output_p90)
+    return [(max(min_len, int(rng.lognormal(mu_p, sg_p))),
+             max(2, int(rng.lognormal(mu_o, sg_o)))) for _ in range(n)]
+
+
+def make_gamma_trace(profile: str | TraceProfile = "qwentrace", *,
+                     rps: float, duration: float, seed: int = 0,
+                     cv: float = 2.5) -> list[TraceRequest]:
+    """Bursty Gamma-renewal arrivals (squared-CV clumping).
+
+    Inter-arrival gaps are Gamma with shape k = 1/cv² and mean 1/rps, so
+    ``cv`` > 1 produces heavy clumps followed by long silences — a harsher
+    burst shape than the two-state MMPP of ``make_trace`` because bursts have
+    no characteristic sojourn time. cv = 1 degenerates to Poisson.
+    """
+    p = TRACE_PROFILES[profile] if isinstance(profile, str) else profile
+    rng = np.random.default_rng(seed)
+    shape = 1.0 / (cv * cv)
+    scale = 1.0 / (max(rps, 1e-9) * shape)       # mean gap = 1/rps
+    reqs, t = [], 0.0
+    while True:
+        t += rng.gamma(shape, scale)
+        if t >= duration:
+            break
+        (plen, olen), = _sample_lengths(rng, p, 1)
+        reqs.append(TraceRequest(t, plen, olen))
+    return reqs
+
+
+# (name, ttft_slo, tpot_slo, mix weight): interactive chat, standard API
+# traffic, and latency-tolerant batch/agent jobs sharing one fleet.
+SLO_CLASSES = (
+    ("interactive", 0.3, 0.03, 0.3),
+    ("standard", 0.5, 0.05, 0.5),
+    ("relaxed", 2.0, 0.15, 0.2),
+)
+
+
+def make_slo_class_trace(profile: str | TraceProfile = "qwentrace", *,
+                         rps: float, duration: float, seed: int = 0,
+                         classes=SLO_CLASSES) -> list[TraceRequest]:
+    """Heterogeneous SLO tiers multiplexed onto one Poisson arrival stream.
+
+    Each request is tagged with its class's (ttft_slo, tpot_slo); schedulers
+    see them through ``SchedTask`` and must honor the tightest active tier
+    (the per-request floor in §3.2's capacity rule). Exercises envelope
+    tracking with non-uniform deadlines, which the paper's evaluation holds
+    constant.
+    """
+    p = TRACE_PROFILES[profile] if isinstance(profile, str) else profile
+    rng = np.random.default_rng(seed)
+    weights = np.array([c[3] for c in classes], dtype=float)
+    weights /= weights.sum()
+    reqs, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / max(rps, 1e-9))
+        if t >= duration:
+            break
+        _, ttft, tpot, _ = classes[int(rng.choice(len(classes), p=weights))]
+        (plen, olen), = _sample_lengths(rng, p, 1)
+        reqs.append(TraceRequest(t, plen, olen, ttft_slo=ttft, tpot_slo=tpot))
+    return reqs
+
+
+def make_longcontext_trace(profile: str | TraceProfile = "qwentrace", *,
+                           rps: float, duration: float, seed: int = 0,
+                           long_frac: float = 0.15, long_avg: float = 12_000,
+                           long_p90: float = 28_000) -> list[TraceRequest]:
+    """Long-context-heavy mixture: a base profile plus a heavy tail of
+    document-scale prompts (RAG / code-repo workloads).
+
+    A ``long_frac`` fraction of requests draws its prompt from a second
+    lognormal with ~10–30k-token prompts, stressing exactly the regime where
+    FB-TokenBudget's context-blind sizing mis-estimates (paper Fig 7) and
+    where a single admitted prefill can consume a whole PAB.
+    """
+    p = TRACE_PROFILES[profile] if isinstance(profile, str) else profile
+    rng = np.random.default_rng(seed)
+    mu_l, sg_l = _lognormal_params(long_avg, long_p90)
+    reqs, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / max(rps, 1e-9))
+        if t >= duration:
+            break
+        (plen, olen), = _sample_lengths(rng, p, 1)
+        if rng.random() < long_frac:
+            plen = max(plen, int(rng.lognormal(mu_l, sg_l)))
+        reqs.append(TraceRequest(t, plen, olen))
+    return reqs
+
+
+# scenario registry: name -> generator(rps=..., duration=..., seed=...).
+# `make_trace` partials cover the paper's Table-2 MMPP workloads; the rest
+# are the beyond-paper stress scenarios above.
+SCENARIOS = {
+    **{name: (lambda name: (lambda **kw: make_trace(name, **kw)))(name)
+       for name in TRACE_PROFILES},
+    "bursty-gamma": make_gamma_trace,
+    "slo-classes": make_slo_class_trace,
+    "long-context": make_longcontext_trace,
+}
+
+
+def make_scenario(name: str, *, rps: float, duration: float,
+                  seed: int = 0, **kw) -> list[TraceRequest]:
+    """Generate a named scenario (see ``SCENARIOS``) — the CLI entry point."""
+    try:
+        gen = SCENARIOS[name]
+    except KeyError:
+        raise ValueError(f"unknown scenario {name!r} "
+                         f"(choose from {sorted(SCENARIOS)})") from None
+    return gen(rps=rps, duration=duration, seed=seed, **kw)

@@ -1,9 +1,10 @@
 from .request import Request, RequestState
-from .engine import Engine, EngineConfig, StepRecord
+from .engine import Engine, EngineConfig, InflightStep, StepRecord
 from .executor import SimExecutor, PagedTransformerExecutor
 from .kv_manager import BlockAllocator
 from .metrics import RequestMetrics, summarize
 
-__all__ = ["Request", "RequestState", "Engine", "EngineConfig", "StepRecord",
+__all__ = ["Request", "RequestState", "Engine", "EngineConfig",
+           "InflightStep", "StepRecord",
            "SimExecutor", "PagedTransformerExecutor", "BlockAllocator",
            "RequestMetrics", "summarize"]

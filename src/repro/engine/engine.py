@@ -6,6 +6,11 @@ BatchPlan, execute it (simulated or real), advance request progress at step
 end, and feed the measured step time back into the scheduler's online
 cost-model calibration (§3.2).
 
+Steps are split into two phases so the engine can be driven either lock-step
+(``step()``/``run()``) or by the discrete-event simulator (DESIGN.md §8):
+``begin_step()`` forms and launches a batch, returning the in-flight step;
+``complete_step()`` applies its effects at the completion timestamp.
+
 Cluster integration (§3.4): ``pab()`` exposes the Prefill Admission Budget;
 ``snapshot()/restore()`` round-trip the host-side engine state for fault
 tolerance (KV is recomputed via prefix re-prefill on restore — DESIGN.md §7).
@@ -44,6 +49,20 @@ class StepRecord:
     predicted: float
 
 
+@dataclasses.dataclass
+class InflightStep:
+    """A launched-but-uncompleted batch (between begin_step and complete_step)."""
+    plan: BatchPlan
+    exec_time: float
+    emitted: dict
+    t_start: float
+    total_ctx: int
+
+    @property
+    def t_end(self) -> float:
+        return self.t_start + self.exec_time
+
+
 class Engine:
     def __init__(self, scheduler: Scheduler, executor, cfg: EngineConfig,
                  admission: Optional[PABAdmissionController] = None,
@@ -60,6 +79,7 @@ class Engine:
         self.done: list[RequestMetrics] = []
         self.steps: list[StepRecord] = []
         self.busy_time = 0.0
+        self.inflight: Optional[InflightStep] = None
 
     # ------------------------------------------------------------------
 
@@ -75,7 +95,9 @@ class Engine:
                 tasks = [self.requests[i].to_sched_task()
                          for i in self.active]
                 if not self.admission.admit(req.prompt_len, tasks, self.now,
-                                            self.sched.model):
+                                            self.sched.model,
+                                            ttft_slo=req.ttft_slo,
+                                            tpot_slo=req.tpot_slo):
                     req.state = RequestState.REJECTED
                     self.done.append(measure(req))
                     continue
@@ -88,44 +110,72 @@ class Engine:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.active or self.pending)
+        return bool(self.active or self.pending or self.inflight)
 
     # ------------------------------------------------------------------
+    # two-phase step: begin (form + launch) / complete (apply at t_end)
+    # ------------------------------------------------------------------
 
-    def step(self) -> Optional[StepRecord]:
-        if not self.active:
-            if not self.pending:
-                return None
-            self.now = max(self.now, self.pending[0].arrival)
+    def begin_step(self, now: Optional[float] = None) -> Optional[InflightStep]:
+        """Admit arrivals, form a batch, and launch it at ``max(self.now, now)``.
+
+        Returns the in-flight step (None if nothing is runnable). The caller
+        owns the clock: effects apply when it calls ``complete_step()``, at
+        which point ``self.now`` jumps to the step's completion time. The
+        event-driven simulator (DESIGN.md §8) schedules that call as a
+        STEP_DONE event; ``step()`` below does it immediately (lock-step).
+        """
+        assert self.inflight is None, "previous step not completed"
+        if now is not None:
+            self.now = max(self.now, now)
         self._admit_arrivals()
         if not self.active:
-            self.now += self.cfg.idle_step
             return None
         tasks = [self.requests[i].to_sched_task() for i in self.active]
         plan = self.sched.schedule(self.now, tasks)
         if not plan.items:
-            self.now += self.cfg.idle_step
             return None
         exec_time, emitted = self.executor.execute(plan, self.requests,
                                                    self.now)
-        finish = self.now + exec_time
-        total_ctx = 0
+        task_of = {t.req_id: t for t in tasks}
+        total_ctx = sum(task_of[it.req_id].cost_context()
+                        for it in plan.items)
+        self.inflight = InflightStep(plan, exec_time, emitted, self.now,
+                                     total_ctx)
+        return self.inflight
+
+    def complete_step(self) -> StepRecord:
+        """Apply the in-flight step's effects; advance the clock to its end."""
+        inf = self.inflight
+        assert inf is not None, "no step in flight"
+        self.inflight = None
+        plan, finish = inf.plan, inf.t_end
         for it in plan.items:
             req = self.requests[it.req_id]
-            total_ctx += req.to_sched_task().cost_context()
-            if emitted and it.req_id in emitted:
-                req.generated_tokens.append(emitted[it.req_id])
+            if inf.emitted and it.req_id in inf.emitted:
+                req.generated_tokens.append(inf.emitted[it.req_id])
             req.advance(it.n_tokens, finish)
             if req.state is RequestState.FINISHED:
                 self._finish(req)
-        self.sched.observe(plan.total_new_tokens, total_ctx, exec_time)
-        rec = StepRecord(self.now, finish, plan.total_new_tokens, total_ctx,
-                         len(plan.prefill_items), len(plan.decode_items),
-                         plan.predicted_time)
+        self.sched.observe(plan.total_new_tokens, inf.total_ctx, inf.exec_time)
+        rec = StepRecord(inf.t_start, finish, plan.total_new_tokens,
+                         inf.total_ctx, len(plan.prefill_items),
+                         len(plan.decode_items), plan.predicted_time)
         self.steps.append(rec)
-        self.busy_time += exec_time
+        self.busy_time += inf.exec_time
         self.now = finish
         return rec
+
+    def step(self) -> Optional[StepRecord]:
+        """Lock-step driver: begin and complete one step atomically."""
+        if not self.active:
+            if not self.pending:
+                return None
+            self.now = max(self.now, self.pending[0].arrival)
+        if self.begin_step() is None:
+            self.now += self.cfg.idle_step
+            return None
+        return self.complete_step()
 
     def _finish(self, req: Request) -> None:
         self.active.remove(req.req_id)

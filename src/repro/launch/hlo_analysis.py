@@ -119,13 +119,24 @@ def _trip_count(cond: Computation) -> int:
     return best
 
 
+def _operand_names(rest: str) -> list[str]:
+    """Operand value names of an op-call tail ``a, b), attrs...``.
+
+    Handles both operand syntaxes XLA emits: bare (``%a, %b``) and typed
+    (``f32[8,8]{1,0} %a, ...`` — newer dumps) by stripping shape annotations
+    before collecting names.
+    """
+    m = re.match(r"([^)]*)\)", rest)
+    if not m:
+        return []
+    body = re.sub(r"\w+\[[^\]]*\](?:\{[^}]*\})?", "", m.group(1))
+    return re.findall(r"%?([\w.\-]+)", body)
+
+
 def _dot_flops(op: Op, shapes: dict) -> float:
     out_dims = _shape_dims(op.shape) or []
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
-    operands = re.match(r"([^)]*)\)", op.rest)
-    if not operands:
-        return 0.0
-    names = re.findall(r"%?([\w.\-]+)", operands.group(1))
+    names = _operand_names(op.rest)
     if not names:
         return 0.0
     lhs_shape = shapes.get(names[0])
@@ -185,9 +196,7 @@ def analyze(text: str) -> dict:
                     "bitcast", "while", "conditional", "call"):
                 ob = shape_bytes(op.shape)
                 ib = 0
-                operands = re.match(r"([^)]*)\)", op.rest)
-                names = (re.findall(r"%?([\w.\-]+)", operands.group(1))
-                         if operands else [])
+                names = _operand_names(op.rest)
                 if kind == "dynamic-update-slice":
                     # in-place slice update: traffic = 2 × updated slice,
                     # not the whole buffer (XLA's own count is the known

@@ -1,0 +1,190 @@
+"""Event-driven multi-replica trace replay (DESIGN.md §8).
+
+``replay()`` is the single entry point every benchmark and example goes
+through: it builds a cluster of engines, replays a trace against it on one
+global discrete-event clock, and returns seeded, bit-reproducible metrics.
+
+``drive()`` is the underlying loop, usable on a pre-built ``Cluster``. Ranks
+interleave freely — one rank can finish three short decode steps while
+another grinds through a long prefill chunk — instead of the lock-step
+rounds the original ``Cluster.run`` used. The load balancer's view of each
+engine is refreshed only on periodic LB_REPORT ticks (plus its own local
+dispatch decrements), which models the eventual-consistency regime the
+paper designs PAB for (§3.4): between ticks the LB routes on stale
+snapshots, exactly like a production router polling engine metrics.
+
+Event causality per instant is fixed by ``EventKind`` priority (events.py);
+all randomness flows from the config seed, so two runs with the same seed
+produce identical event sequences and identical summary metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from ..engine.metrics import RequestMetrics
+from .events import Event, EventKind, EventQueue
+
+# Hard ceiling on processed events per drive() call — a livelock backstop,
+# orders of magnitude above any realistic replay.
+_MAX_EVENTS = 50_000_000
+
+
+def drive(cluster, trace, *, report_interval: float = 0.05,
+          step_hook: Optional[Callable] = None) -> list[RequestMetrics]:
+    """Replay ``trace`` against ``cluster`` on a single global event clock.
+
+    Consumes the cluster's scheduled ``failures``/``joins`` as timed events.
+    ``step_hook(rank, engine, record)`` fires after every completed step —
+    benchmarks use it to probe slack/fairness without re-running anything.
+    """
+    q = EventQueue()
+    for tr in sorted(trace, key=lambda t: t.arrival):
+        q.push(tr.arrival, EventKind.ARRIVAL, req=tr)
+    for t, rank in cluster.failures:
+        q.push(t, EventKind.RANK_FAIL, rank=rank)
+    for t, rank in cluster.joins:
+        q.push(t, EventKind.RANK_JOIN, rank=rank)
+    cluster.failures, cluster.joins = [], []
+    for rank in cluster.engines:
+        q.push(report_interval, EventKind.LB_REPORT, rank=rank,
+               epoch=cluster.epoch[rank])
+
+    def collect(eng) -> None:
+        """Sweep newly-finished/rejected metrics off an engine.
+
+        Rejections happen inside ``begin_step`` (admission control), finishes
+        inside ``complete_step`` — this marker-based sweep catches both.
+        """
+        n = getattr(eng, "_done_collected", 0)
+        if len(eng.done) > n:
+            cluster.done.extend(eng.done[n:])
+        eng._done_collected = len(eng.done)
+
+    def kick(rank: int, now: float) -> None:
+        """If `rank` is idle but has runnable work, launch its next step."""
+        eng = cluster.engines.get(rank)
+        if eng is None or eng.inflight is not None:
+            return
+        if not (eng.active or eng.pending):
+            return
+        inf = eng.begin_step(now)
+        collect(eng)                          # admission may have rejected
+        if inf is not None:
+            q.push(inf.t_end, EventKind.STEP_DONE, rank=rank, step=inf)
+        elif eng.active:
+            # admitted work but an empty plan: retry after an idle hop
+            q.push(eng.now + eng.cfg.idle_step, EventKind.RANK_WAKE, rank=rank)
+
+    def kick_all(now: float) -> None:
+        for rank in list(cluster.engines):
+            kick(rank, now)
+
+    next_id = 0
+    n_events = 0
+    while q:
+        ev = q.pop()
+        n_events += 1
+        if n_events > _MAX_EVENTS:
+            raise RuntimeError("replay exceeded event budget (livelock?)")
+        cluster.now = max(cluster.now, ev.time)
+
+        if ev.kind is EventKind.ARRIVAL:
+            rank = cluster._route(ev.req, next_id, ev.time)
+            next_id += 1
+            if rank is not None:
+                kick(rank, ev.time)
+
+        elif ev.kind is EventKind.STEP_DONE:
+            eng = cluster.engines.get(ev.rank)
+            if eng is None or eng.inflight is not ev.step:
+                continue                      # rank died/rejoined mid-step
+            rec = eng.complete_step()
+            collect(eng)
+            if step_hook is not None:
+                step_hook(ev.rank, eng, rec)
+            kick(ev.rank, eng.now)
+
+        elif ev.kind is EventKind.LB_REPORT:
+            eng = cluster.engines.get(ev.rank)
+            if eng is None or cluster.epoch[ev.rank] != ev.epoch:
+                continue                      # tick chain of a dead epoch
+            cluster._report(ev.rank)
+            # let the tick chain die once no work can ever arrive again
+            if q.pending_work > 0 or any(e.has_work
+                                         for e in cluster.engines.values()):
+                q.push(ev.time + report_interval, EventKind.LB_REPORT,
+                       rank=ev.rank, epoch=ev.epoch)
+
+        elif ev.kind is EventKind.RANK_FAIL:
+            cluster._fail_rank(ev.rank)
+            kick_all(ev.time)                 # re-routed orphans need service
+
+        elif ev.kind is EventKind.RANK_JOIN:
+            cluster._join_rank(ev.rank)
+            q.push(ev.time + report_interval, EventKind.LB_REPORT,
+                   rank=ev.rank, epoch=cluster.epoch[ev.rank])
+            kick(ev.rank, ev.time)
+
+        elif ev.kind is EventKind.RANK_WAKE:
+            kick(ev.rank, ev.time)
+
+    return cluster.done
+
+
+@dataclasses.dataclass
+class ReplayResult:
+    """Outcome of one ``replay()`` run."""
+    metrics: list[RequestMetrics]
+    summary: dict
+    duration: float
+    cluster: object                    # the driven Cluster (engines inspectable)
+
+    @property
+    def rank_dispatch(self) -> dict[int, int]:
+        """Requests per *final* rank: a request re-routed after a failure
+        counts only at the rank that ultimately served it."""
+        counts: dict[int, int] = {}
+        for rank in self.cluster._rank_of.values():
+            counts[rank] = counts.get(rank, 0) + 1
+        return counts
+
+
+def replay(trace, scheduler: str = "fairbatching", n_ranks: int = 1,
+           lb="pab", *, ttft_slo: float = 0.5, tpot_slo: float = 0.05,
+           admission: bool = False, true_model=None, est_model=None,
+           straggler_ranks: Optional[dict] = None, sched_kwargs:
+           Optional[dict] = None, failures=(), joins=(),
+           report_interval: float = 0.05, seed: int = 0,
+           step_hook: Optional[Callable] = None) -> ReplayResult:
+    """One-call event-driven cluster replay — the repo's canonical harness.
+
+    ``lb`` is a name for ``make_lb`` ("pab" | "count" | "roundrobin") or a
+    pre-built LoadBalancer. ``failures``/``joins`` are (time, rank) pairs.
+    All stochasticity (executor jitter, GC pauses) derives from ``seed``:
+    same arguments → identical summary metrics, bit for bit.
+    """
+    from ..cluster.cluster import Cluster, ClusterConfig
+    from ..cluster.load_balancer import make_lb
+
+    kw = {}
+    if true_model is not None:
+        kw["true_model"] = true_model
+    if est_model is not None:
+        kw["est_model"] = est_model
+    cfg = ClusterConfig(n_ranks=n_ranks, scheduler=scheduler,
+                        ttft_slo=ttft_slo, tpot_slo=tpot_slo,
+                        admission=admission,
+                        straggler_ranks=dict(straggler_ranks or {}),
+                        sched_kwargs=dict(sched_kwargs or {}),
+                        report_interval=report_interval, seed=seed, **kw)
+    cluster = Cluster(cfg, lb if not isinstance(lb, str)
+                      else make_lb(lb, n_ranks))
+    for t, rank in failures:
+        cluster.schedule_failure(t, rank)
+    for t, rank in joins:
+        cluster.schedule_join(t, rank)
+    metrics = drive(cluster, trace, report_interval=report_interval,
+                    step_hook=step_hook)
+    duration = max([e.now for e in cluster.engines.values()] + [cluster.now])
+    return ReplayResult(metrics, cluster.summary(), duration, cluster)

@@ -1,6 +1,9 @@
 """Algorithm 1 invariants (paper §3.3) — property-based."""
 import math
 
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (FormationConfig, LinearCostModel, SchedTask,

@@ -1,5 +1,8 @@
 """Linear step-time model + online calibration (paper §3.2)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (LinearCostModel, PaddedCostModel,

@@ -1,6 +1,9 @@
 """Prefill Admission Budget (paper §3.4 + Appendix A)."""
 import math
 
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (LinearCostModel, PABAdmissionController, SchedTask,

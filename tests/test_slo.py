@@ -1,6 +1,9 @@
 """Envelope-SLO tracking (paper §3.1): correctness + monotonicity property."""
 import math
 
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, strategies as st
 
 from repro.core import (SchedTask, TaskKind, attainment, request_deadline,

@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Verify that every ``DESIGN.md §N`` reference in the codebase resolves to a
+real ``## §N`` section of DESIGN.md.
+
+Used by CI (docs link-check step) and tests/test_docs.py. Exit 0 when all
+references resolve; exit 1 listing the dangling ones otherwise.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SCAN_DIRS = ("src", "tests", "examples", "benchmarks", "tools")
+SCAN_SUFFIXES = {".py", ".md", ".toml", ".yml", ".yaml"}
+
+# "DESIGN.md §7", "DESIGN.md §5/§6", "DESIGN.md §5, §8" → [7], [5, 6], [5, 8]
+_REF_RE = re.compile(r"DESIGN\.md\s*((?:§\d+[,/\s]*)+)")
+_SECTION_RE = re.compile(r"^##\s*§(\d+)\b", re.M)
+
+
+def design_sections(design_path: pathlib.Path) -> set[int]:
+    return {int(n) for n in _SECTION_RE.findall(design_path.read_text())}
+
+
+def find_references(root: pathlib.Path) -> list[tuple[str, int, int]]:
+    """All (file, line_number, section) DESIGN.md references under root."""
+    refs = []
+    files = [root / "README.md"]
+    for d in SCAN_DIRS:
+        files.extend(p for p in (root / d).rglob("*")
+                     if p.suffix in SCAN_SUFFIXES)
+    for path in files:
+        if not path.is_file() or path.name == "check_design_refs.py":
+            continue
+        for i, line in enumerate(path.read_text(errors="replace")
+                                 .splitlines(), 1):
+            for m in _REF_RE.finditer(line):
+                for n in re.findall(r"§(\d+)", m.group(1)):
+                    refs.append((str(path.relative_to(root)), i, int(n)))
+    return refs
+
+
+def main() -> int:
+    design = REPO / "DESIGN.md"
+    if not design.exists():
+        print("FAIL: DESIGN.md does not exist")
+        return 1
+    sections = design_sections(design)
+    refs = find_references(REPO)
+    dangling = [(f, ln, n) for f, ln, n in refs if n not in sections]
+    if dangling:
+        print(f"FAIL: {len(dangling)} dangling DESIGN.md reference(s) "
+              f"(sections present: {sorted(sections)}):")
+        for f, ln, n in dangling:
+            print(f"  {f}:{ln}  →  DESIGN.md §{n}")
+        return 1
+    print(f"OK: {len(refs)} DESIGN.md references across the repo all resolve "
+          f"(sections present: {sorted(sections)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
