@@ -82,13 +82,18 @@ def system_spec(system: str, hw: HardwareProfile, tpot_slo: float,
 def run_system(system: str, trace, hw: HardwareProfile, ttft_slo: float,
                tpot_slo: float, seed: int = 0, sarathi_budget: int = 0,
                n_ranks: int = 1, lb: str = "roundrobin",
+               prefix_cache_pages: int = 0,
                step_hook: Optional[Callable] = None) -> dict:
-    """Replay `trace` on one of the paper's systems via ``repro.sim.replay``."""
+    """Replay `trace` on one of the paper's systems via ``repro.sim.replay``.
+
+    ``prefix_cache_pages`` > 0 arms the per-rank radix prefix cache
+    (DESIGN.md §10); only traces carrying token ids can hit."""
     sched, admission, kw = system_spec(system, hw, tpot_slo, sarathi_budget)
     res = replay(trace, scheduler=sched, n_ranks=n_ranks, lb=lb,
                  ttft_slo=ttft_slo, tpot_slo=tpot_slo, admission=admission,
                  true_model=hw.model(), est_model=initial_estimate(hw),
-                 sched_kwargs=kw, seed=seed, step_hook=step_hook)
+                 sched_kwargs=kw, prefix_cache_pages=prefix_cache_pages,
+                 seed=seed, step_hook=step_hook)
     out = dict(res.summary)
     out["system"] = system
     return out

@@ -1,0 +1,95 @@
+"""Prefix-cache reuse (DESIGN.md §10): TTFT/TPOT and capacity vs hit rate.
+
+Beyond-paper bench backing the §5 load-estimation claims: FairBatching's
+fairness math charges prefill in tokens, and the radix cache shrinks those
+to *effective* tokens — so hit rate converts directly into admission
+capacity and TTFT headroom. Three views:
+
+* scheduler zoo × cache capacity on ``shared-sysprompt`` (hot Zipf system
+  prompts) and ``multi-turn`` (growing conversation histories): hit rate,
+  latency percentiles, SLO attainment per cache size (0 = cache off);
+* a per-scheduler comparison showing the reuse win is orthogonal to the
+  batching policy (every scheduler in the zoo benefits, FairBatching keeps
+  its fairness edge on top);
+* cluster affinity: ``CacheAwareLB`` vs ``RoundRobinLB`` fleet hit rate at
+  DP 4 under eviction pressure (the locality-vs-fairness trade).
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.prefix_cache_bench
+[--smoke]`` — ``--smoke`` is the seconds-scale CI mode (asserts reuse
+actually happens); also runs under the ``benchmarks.run`` driver as
+``--only prefix_cache``.
+"""
+from __future__ import annotations
+
+from repro.data.traces import TRACE_PROFILES, make_scenario
+
+from .common import DEFAULT_HW, HARDWARE, capacity_rps, run_system
+
+SCHEDULER_ZOO = ["fairbatching", "vllm-sarathi", "vllm-vanilla"]
+
+
+def run(quick: bool = True, smoke: bool = False) -> list[dict]:
+    hw = HARDWARE[DEFAULT_HW]
+    prof = TRACE_PROFILES["qwentrace"]
+    duration = 20.0 if smoke else (60.0 if quick else 150.0)
+    page_sweep = [0, 1024] if smoke else [0, 256, 1024, 4096]
+    rps = round(0.7 * capacity_rps(hw, "qwentrace"), 2)
+    rows: list[dict] = []
+
+    for scenario in ("shared-sysprompt", "multi-turn"):
+        trace = make_scenario(scenario, rps=rps, duration=duration, seed=13)
+        for sched in SCHEDULER_ZOO:
+            for pages in page_sweep:
+                s = run_system(sched if sched != "fairbatching"
+                               else "fb-vanilla", trace, hw,
+                               prof.ttft_slo, prof.tpot_slo,
+                               prefix_cache_pages=pages)
+                rows.append({
+                    "bench": "prefix_cache", "scenario": scenario,
+                    "system": sched, "cache_pages": pages, "rps": rps,
+                    "hit_rate": round(s["cache_hit_rate"], 3),
+                    "ttft_p50_ms": round(s["ttft_p50"] * 1e3, 1),
+                    "ttft_p99_ms": round(s["ttft_p99"] * 1e3, 1),
+                    "tpot_p99_ms": round(s["tpot_p99"] * 1e3, 1),
+                    "slo": round(s["slo_attainment"], 3),
+                })
+
+    # cluster affinity: fleet hit rate under eviction pressure, DP 4
+    trace = make_scenario("shared-sysprompt", rps=4 * rps,
+                          duration=duration, seed=7,
+                          n_sysprompts=48, zipf_a=0.9)
+    for lb in ("roundrobin", "cache"):
+        s = run_system("fb-vanilla", trace, hw, prof.ttft_slo, prof.tpot_slo,
+                       n_ranks=4, lb=lb, prefix_cache_pages=128)
+        rows.append({
+            "bench": "prefix_cache", "scenario": "affinity-dp4",
+            "system": "fairbatching", "lb": lb, "cache_pages": 128,
+            "rps": 4 * rps,
+            "hit_rate": round(s["engine_cache_hit_rate"], 3),
+            "ttft_p99_ms": round(s["ttft_p99"] * 1e3, 1),
+            "slo": round(s["slo_attainment"], 3),
+        })
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale run for CI")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    rows = run(quick=not args.full, smoke=args.smoke)
+    for r in rows:
+        print(json.dumps(r))
+    # smoke sanity: caching on must actually hit on the locality scenarios
+    warm = [r for r in rows if r.get("cache_pages", 0) > 0
+            and r["scenario"] != "affinity-dp4"]
+    assert warm and all(r["hit_rate"] > 0.05 for r in warm), \
+        "prefix cache produced no reuse on locality scenarios"
+
+
+if __name__ == "__main__":
+    main()

@@ -58,6 +58,18 @@ def _headline(name: str, rows: list[dict]) -> str:
             r = rows[0]
             return (f"token_only_p95={r['token_only_p95_err_pct']}% "
                     f"linear_p95={r['linear_p95_err_pct']}%")
+        if name == "prefix_cache":
+            fb = [r for r in rows if r["scenario"] == "shared-sysprompt"
+                  and r["system"] == "fairbatching"]
+            cold = next(r for r in fb if r["cache_pages"] == 0)
+            warm = max((r for r in fb if r["cache_pages"] > 0),
+                       key=lambda r: r["cache_pages"])
+            aff = {r["lb"]: r["hit_rate"] for r in rows
+                   if r["scenario"] == "affinity-dp4"}
+            return (f"sysprompt p99_ttft {cold['ttft_p99_ms']}ms -> "
+                    f"{warm['ttft_p99_ms']}ms @hit={warm['hit_rate']} | "
+                    f"dp4 hit cache-lb={aff.get('cache')} "
+                    f"rr={aff.get('roundrobin')}")
         if name == "roofline":
             n = len(rows)
             dom = {}
@@ -78,8 +90,8 @@ def main() -> None:
     quick = not args.full
 
     from . import (breakdown_bench, cluster_bench, cost_model_bench,
-                   goodput_bench, latency_bench, roofline_report,
-                   slo_grid_bench, unfairness_bench)
+                   goodput_bench, latency_bench, prefix_cache_bench,
+                   roofline_report, slo_grid_bench, unfairness_bench)
     benches = {
         "cost_model": cost_model_bench.run,      # paper §3.2 accuracy claim
         "unfairness": unfairness_bench.run,      # Fig 1/2
@@ -88,6 +100,7 @@ def main() -> None:
         "slo_grid": slo_grid_bench.run,          # Table 5
         "breakdown": breakdown_bench.run,        # Fig 7
         "cluster": cluster_bench.run,            # Fig 8
+        "prefix_cache": prefix_cache_bench.run,  # DESIGN.md §10 reuse
         "roofline": roofline_report.run,         # deliverable (g)
     }
     all_rows = {}

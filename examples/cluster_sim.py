@@ -12,7 +12,7 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 from benchmarks.common import DEFAULT_HW, HARDWARE, capacity_rps, initial_estimate
-from repro.data.traces import make_gamma_trace
+from repro.data.traces import make_gamma_trace, make_scenario
 from repro.sim import replay
 
 
@@ -49,6 +49,29 @@ def main() -> None:
     show("kill rank0 @30%, rejoin @60%", lb="pab", admission=True,
          failures=[(args.duration * 0.3, 0)],
          joins=[(args.duration * 0.6, 0)])
+
+    # prefix-cache reuse + cache-affinity routing (DESIGN.md §10): hot Zipf
+    # system prompts; per-rank radix caches report hit tokens / hit rate
+    # through the same stale LB report ticks that carry PAB
+    print("-- shared-sysprompt + per-rank prefix cache --")
+    sys_trace = make_scenario("shared-sysprompt", rps=rps,
+                              duration=args.duration, seed=args.seed)
+
+    def show_cached(name: str, **kw):
+        res = replay(sys_trace, scheduler="fairbatching", n_ranks=args.dp,
+                     true_model=hw.model(), est_model=initial_estimate(hw),
+                     seed=args.seed, **kw)
+        s = res.summary
+        print(f"{name:32s} slo={s['slo_attainment']:.3f} "
+              f"ttft_p99={s['ttft_p99']*1e3:.0f}ms "
+              f"hit_tokens={s['cache_hit_tokens']} "
+              f"hit_rate={s.get('engine_cache_hit_rate', 0.0):.3f}")
+
+    show_cached("no cache (round-robin)", lb="roundrobin")
+    show_cached("cache 1024pg (round-robin)", lb="roundrobin",
+                prefix_cache_pages=1024)
+    show_cached("cache 1024pg (cache-affinity LB)", lb="cache",
+                prefix_cache_pages=1024)
 
     # bit-reproducibility: the whole event-driven run is a function of the seed
     again = replay(trace, scheduler="fairbatching", n_ranks=args.dp,

@@ -1,6 +1,6 @@
 from .load_balancer import (LoadBalancer, RequestCountLB, PABLB,
-                            RoundRobinLB, make_lb)
+                            RoundRobinLB, CacheAwareLB, make_lb)
 from .cluster import Cluster, ClusterConfig
 
 __all__ = ["LoadBalancer", "RequestCountLB", "PABLB", "RoundRobinLB",
-           "make_lb", "Cluster", "ClusterConfig"]
+           "CacheAwareLB", "make_lb", "Cluster", "ClusterConfig"]

@@ -29,6 +29,7 @@ import dataclasses
 import math
 from typing import Optional
 
+from ..cache import PrefixCache
 from ..core.cost_model import LinearCostModel
 from ..core.pab import PABAdmissionController
 from ..core.schedulers import make_scheduler
@@ -57,6 +58,10 @@ class ClusterConfig:
     sched_kwargs: dict = dataclasses.field(default_factory=dict)
     # seconds between per-rank LB report ticks (staleness of the LB's view)
     report_interval: float = 0.05
+    # per-rank radix prefix cache (DESIGN.md §10): capacity in KV pages of
+    # ``prefix_block`` tokens; 0 disables caching (bit-identical to no cache)
+    prefix_cache_pages: int = 0
+    prefix_block: int = 128
     seed: int = 0
 
 
@@ -93,10 +98,13 @@ class Cluster:
         self.epoch[rank] = self.epoch.get(rank, 0) + 1
         adm = (PABAdmissionController(cfg.ttft_slo, cfg.tpot_slo)
                if cfg.admission else None)
+        cache = (PrefixCache(cfg.prefix_cache_pages,
+                             block_size=cfg.prefix_block)
+                 if cfg.prefix_cache_pages > 0 else None)
         self.engines[rank] = Engine(
             sched, SimExecutor(true, seed=cfg.seed * 131 + rank),
             EngineConfig(cfg.ttft_slo, cfg.tpot_slo), admission=adm,
-            rank=rank)
+            rank=rank, prefix_cache=cache)
 
     def schedule_failure(self, t: float, rank: int) -> None:
         self.failures.append((t, rank))
@@ -114,8 +122,18 @@ class Cluster:
                       if eng.requests[i].state in (RequestState.QUEUED,
                                                    RequestState.PREFILL))
         running = len(eng.active) - waiting
-        self.lb.report(rank, {"pab": eng.pab(), "waiting": waiting,
-                              "running": running + len(eng.pending)})
+        metrics = {"pab": eng.pab(), "waiting": waiting,
+                   "running": running + len(eng.pending)}
+        if eng.prefix_cache is not None:
+            # cache summary rides the existing report tick (DESIGN.md §10):
+            # token hit counters plus the prefix-hash digest CacheAwareLB
+            # matches incoming prompts against
+            st = eng.cache_stats()
+            metrics["cache_hit_tokens"] = st["hit_tokens"]
+            metrics["cache_hit_rate"] = st["hit_rate"]
+            metrics["cache_prefixes"] = \
+                tuple(eng.prefix_cache.prefix_hash_summary())
+        self.lb.report(rank, metrics)
         if hasattr(self.lb, "note_report"):
             self.lb.note_report(rank, self.now)
 
@@ -125,14 +143,16 @@ class Cluster:
         # per-request SLO classes (heterogeneous traces) override defaults
         ttft = tr.ttft_slo if tr.ttft_slo is not None else self.cfg.ttft_slo
         tpot = tr.tpot_slo if tr.tpot_slo is not None else self.cfg.tpot_slo
-        rank = self.lb.route(tr.prompt_len)
+        rank = self.lb.route(tr.prompt_len, tokens=tr.tokens)
         req = Request(req_id, arrival, tr.prompt_len, tr.output_len,
-                      ttft, tpot)
+                      ttft, tpot,
+                      tokens=list(tr.tokens) if tr.tokens else None)
         if rank is None:
             req.state = RequestState.REJECTED
             self.done.append(measure(req))
             return None
-        self.lb.on_dispatch(rank, tr.prompt_len, tr.output_len)
+        self.lb.on_dispatch(rank, tr.prompt_len, tr.output_len,
+                            tokens=tr.tokens)
         self.engines[rank].submit(req)
         self._rank_of[req_id] = rank
         self._req_src[req_id] = tr
@@ -146,18 +166,27 @@ class Cluster:
         for req in orphans:
             if not req.active:
                 continue
-            # decode → re-prefill of the full known prefix elsewhere
+            # decode → re-prefill of the full known prefix elsewhere. The
+            # original prompt token ids are kept (generated ids are not
+            # re-derivable here), so the destination's prefix cache can
+            # still serve the prompt part of the re-prefill; prompt_len may
+            # therefore exceed len(tokens) for migrated requests.
             new_prompt = req.prompt_len + max(0, req.generated)
+            src = self._req_src.get(req.req_id)
+            toks = src.tokens if src is not None else None
             tr = TraceRequest(req.arrival, new_prompt,
-                              max(1, req.max_new_tokens - req.generated))
-            nr = self.lb.route(tr.prompt_len)
+                              max(1, req.max_new_tokens - req.generated),
+                              tokens=toks)
+            nr = self.lb.route(tr.prompt_len, tokens=toks)
             if nr is None:
                 req.state = RequestState.REJECTED
                 self.done.append(measure(req))
                 continue
-            self.lb.on_dispatch(nr, tr.prompt_len, tr.output_len)
+            self.lb.on_dispatch(nr, tr.prompt_len, tr.output_len,
+                                tokens=toks)
             moved = Request(req.req_id, req.arrival, tr.prompt_len,
-                            req.max_new_tokens, req.ttft_slo, req.tpot_slo)
+                            req.max_new_tokens, req.ttft_slo, req.tpot_slo,
+                            tokens=list(toks) if toks else None)
             # keep already-emitted token times: SLO accounting is end-to-end
             moved.output_times = list(req.output_times)
             moved.generated = req.generated
@@ -176,6 +205,8 @@ class Cluster:
                 self.lb.pab.append(math.inf)
             if hasattr(self.lb, "counts"):
                 self.lb.counts.append(0.0)
+            if hasattr(self.lb, "prefixes"):
+                self.lb.prefixes.append(set())
         else:
             self.lb.set_alive(rank, True)
 
@@ -188,4 +219,15 @@ class Cluster:
 
     def summary(self) -> dict:
         dur = max((e.now for e in self.engines.values()), default=self.now)
-        return summarize(self.done, duration=max(dur, 1e-9))
+        out = summarize(self.done, duration=max(dur, 1e-9))
+        # engine-side cache counters (lookup-weighted, across live ranks) —
+        # unlike the per-request view above these include evictions/inserts
+        stats = [e.cache_stats() for e in self.engines.values()
+                 if e.prefix_cache is not None]
+        if stats:
+            looked = sum(s["lookup_tokens"] for s in stats)
+            out["engine_cache_hit_tokens"] = sum(s["hit_tokens"]
+                                                 for s in stats)
+            out["engine_cache_hit_rate"] = \
+                out["engine_cache_hit_tokens"] / max(looked, 1)
+        return out

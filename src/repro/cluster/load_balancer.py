@@ -9,6 +9,14 @@ consistency; no strong sync with engines).
   budget covers the incoming prompt; decrement the local view on dispatch.
   Doubles as the straggler/fault signal (DESIGN.md §7): dead or slow ranks
   report shrinking PAB and organically stop receiving work.
+* ``CacheAwareLB`` — cache-affinity routing (DESIGN.md §10): ranks report
+  compact prefix-hash summaries of their radix caches alongside PAB; routing
+  estimates each rank's longest-prefix hit for the incoming prompt and
+  trades that affinity against PAB load — the locality-vs-fairness tension
+  of *Locality-aware Fair Scheduling in LLM Serving*.
+
+``route``/``on_dispatch`` optionally receive the request's prompt token ids;
+balancers that don't exploit content locality ignore them.
 
 Under the event-driven replay (DESIGN.md §8) ``report()`` fires on timed
 LB_REPORT ticks, so between ticks every decision runs on a stale snapshot;
@@ -22,13 +30,16 @@ import dataclasses
 import math
 from typing import Optional, Protocol
 
+from ..cache.radix import block_hashes
+
 
 class LoadBalancer(Protocol):
     name: str
 
-    def route(self, prompt_len: int) -> Optional[int]: ...
+    def route(self, prompt_len: int, tokens=None) -> Optional[int]: ...
     def report(self, rank: int, metrics: dict) -> None: ...
-    def on_dispatch(self, rank: int, prompt_len: int, output_len_hint: int) -> None: ...
+    def on_dispatch(self, rank: int, prompt_len: int, output_len_hint: int,
+                    tokens=None) -> None: ...
     def set_alive(self, rank: int, alive: bool) -> None: ...
 
 
@@ -58,7 +69,7 @@ class RoundRobinLB(_Base):
         super().__init__(n_ranks)
         self._i = 0
 
-    def route(self, prompt_len: int) -> Optional[int]:
+    def route(self, prompt_len: int, tokens=None) -> Optional[int]:
         ranks = self._ranks()
         if not ranks:
             return None
@@ -68,7 +79,7 @@ class RoundRobinLB(_Base):
     def report(self, rank, metrics):
         pass
 
-    def on_dispatch(self, rank, prompt_len, output_len_hint):
+    def on_dispatch(self, rank, prompt_len, output_len_hint, tokens=None):
         pass
 
 
@@ -81,7 +92,7 @@ class RequestCountLB(_Base):
         self.counts = [0.0] * n_ranks
         self.ww = waiting_weight
 
-    def route(self, prompt_len: int) -> Optional[int]:
+    def route(self, prompt_len: int, tokens=None) -> Optional[int]:
         ranks = self._ranks()
         if not ranks:
             return None
@@ -91,7 +102,7 @@ class RequestCountLB(_Base):
         self.counts[rank] = (self.ww * metrics.get("waiting", 0)
                              + metrics.get("running", 0))
 
-    def on_dispatch(self, rank, prompt_len, output_len_hint):
+    def on_dispatch(self, rank, prompt_len, output_len_hint, tokens=None):
         self.counts[rank] += self.ww
 
 
@@ -103,7 +114,7 @@ class PABLB(_Base):
         super().__init__(n_ranks)
         self.pab = [math.inf] * n_ranks
 
-    def route(self, prompt_len: int) -> Optional[int]:
+    def route(self, prompt_len: int, tokens=None) -> Optional[int]:
         ranks = self._ranks()
         if not ranks:
             return None
@@ -116,23 +127,92 @@ class PABLB(_Base):
     def report(self, rank: int, metrics: dict) -> None:
         self.pab[rank] = metrics.get("pab", 0.0)
 
-    def on_dispatch(self, rank: int, prompt_len: int, output_len_hint: int) -> None:
+    def on_dispatch(self, rank: int, prompt_len: int, output_len_hint: int,
+                    tokens=None) -> None:
         # local-view decrement until the next engine report (paper §3.4)
         if self.pab[rank] is not math.inf:
             self.pab[rank] -= prompt_len
 
 
+class CacheAwareLB(_Base):
+    """Cache-affinity routing over stale per-rank cache summaries
+    (DESIGN.md §10).
+
+    Each LB_REPORT tick carries, besides ``pab``, a bounded set of
+    cumulative prefix-block hashes of the rank's radix cache
+    (``PrefixCache.prefix_hash_summary``). Routing hashes the incoming
+    prompt's blocks and estimates each rank's hit as the longest leading run
+    of hashes present in its summary; the estimated *uncached* remainder is
+    what must fit the rank's PAB.
+
+    The affinity/fairness trade: among ranks whose budget covers the
+    uncached tokens, pick the best (affinity_weight·est_hit, PAB) — with
+    ``affinity_weight=0`` this degenerates to ``PABLB``. When no rank fits,
+    affinity is abandoned and the request goes to max-PAB (fairness wins
+    under overload). ``on_dispatch`` adds the dispatched prompt's hashes to
+    the local view so a burst of identical prefixes sticks to one rank even
+    before its next report tick.
+    """
+    name = "cache-lb"
+
+    def __init__(self, n_ranks: int, affinity_weight: float = 1.0,
+                 block_size: int = 128, max_local_hashes: int = 8192):
+        super().__init__(n_ranks)
+        self.pab = [math.inf] * n_ranks
+        self.prefixes: list[set[int]] = [set() for _ in range(n_ranks)]
+        self.affinity_weight = affinity_weight
+        self.block_size = block_size
+        self.max_local_hashes = max_local_hashes
+
+    def _est_hit(self, rank: int, hashes: list[int]) -> int:
+        n = 0
+        known = self.prefixes[rank]
+        for h in hashes:
+            if h not in known:
+                break
+            n += 1
+        return n * self.block_size
+
+    def route(self, prompt_len: int, tokens=None) -> Optional[int]:
+        ranks = self._ranks()
+        if not ranks:
+            return None
+        hashes = block_hashes(tokens, self.block_size) if tokens else []
+        hit = {r: self._est_hit(r, hashes) for r in ranks}
+        fitting = [r for r in ranks if self.pab[r] >= prompt_len - hit[r]]
+        if fitting:
+            return max(fitting,
+                       key=lambda r: (self.affinity_weight * hit[r],
+                                      self.pab[r]))
+        return max(ranks, key=lambda r: self.pab[r])
+
+    def report(self, rank: int, metrics: dict) -> None:
+        self.pab[rank] = metrics.get("pab", 0.0)
+        if "cache_prefixes" in metrics:
+            self.prefixes[rank] = set(metrics["cache_prefixes"])
+
+    def on_dispatch(self, rank: int, prompt_len: int, output_len_hint: int,
+                    tokens=None) -> None:
+        hashes = block_hashes(tokens, self.block_size) if tokens else []
+        if self.pab[rank] is not math.inf:
+            self.pab[rank] -= prompt_len - self._est_hit(rank, hashes)
+        if len(self.prefixes[rank]) < self.max_local_hashes:
+            self.prefixes[rank].update(hashes)
+
+
 def make_lb(name: str, n_ranks: int, **kw) -> LoadBalancer:
     """Factory used by ``repro.sim.replay`` and benchmark CLIs.
 
-    Names: ``pab`` (paper C5), ``count`` (vLLM DPLB), ``roundrobin``.
-    The LB classes' ``.name`` attributes ("pab-lb", "vllm-lb", "round-robin")
-    are also accepted.
+    Names: ``pab`` (paper C5), ``count`` (vLLM DPLB), ``roundrobin``,
+    ``cache`` (cache-affinity + PAB, DESIGN.md §10).
+    The LB classes' ``.name`` attributes ("pab-lb", "vllm-lb", "round-robin",
+    "cache-lb") are also accepted.
     """
     aliases = {
         "pab": PABLB, "pab-lb": PABLB,
         "count": RequestCountLB, "vllm-lb": RequestCountLB,
         "roundrobin": RoundRobinLB, "round-robin": RoundRobinLB,
+        "cache": CacheAwareLB, "cache-lb": CacheAwareLB,
     }
     try:
         return aliases[name](n_ranks, **kw)

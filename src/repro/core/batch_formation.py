@@ -15,6 +15,12 @@ Three groups, packed in reversed-priority order:
 
 Each group is sorted by slack ascending. Prefills larger than the remaining
 budget are *chunked* (chunked-prefill) to exactly fill it.
+
+Prefix-cache interaction (DESIGN.md §10): tasks arrive with *effective*
+token counts — ``SchedTask.new_tokens`` excludes any cache-served prefix
+(``cached_context``) while ``cost_context()`` still includes it, so packing
+charges compute only for uncached tokens but KV traffic for the full
+context. No cache-specific logic lives here by design.
 """
 from __future__ import annotations
 

@@ -12,6 +12,12 @@ by ±5.2% vs ±1.3% for the linear model.
 TPU adaptation: XLA compiles fixed step shapes, so the engine pads
 ``total_new_tokens`` up to a bucket. ``PaddedCostModel`` charges the padded
 size — the analogue of the paper's CUDA-graph-size-driven token budget.
+
+With a prefix cache (DESIGN.md §10) the engine's per-step observations
+already reflect reuse: ``new_tokens`` counts only computed (uncached)
+tokens while ``context`` includes cache-served pages, so the online RLS
+calibration fits the hardware's true effective-token cost surface with no
+cache-awareness of its own.
 """
 from __future__ import annotations
 

@@ -69,15 +69,21 @@ class PABAdmissionController:
 
     def admit(self, prompt_len: int, tasks: Sequence[SchedTask], now: float,
               model: LinearCostModel, ttft_slo: Optional[float] = None,
-              tpot_slo: Optional[float] = None) -> bool:
+              tpot_slo: Optional[float] = None,
+              cached_tokens: int = 0) -> bool:
         """Admit iff the budget covers the prompt. Heterogeneous SLO tiers
         pass the incoming request's own (ttft_slo, tpot_slo): the budget is
-        computed against *its* deadline, not the node default."""
+        computed against *its* deadline, not the node default.
+
+        ``cached_tokens`` (DESIGN.md §10) is the prefix-cache hit for this
+        prompt: those tokens cost no prefill compute, so the budget only has
+        to cover the *effective* (uncached) prompt — cache hits raise
+        admission capacity exactly as they raise serving capacity."""
         pab = prefill_admission_budget(
             tasks, now, model,
             self.ttft_slo if ttft_slo is None else ttft_slo,
             self.tpot_slo if tpot_slo is None else tpot_slo)
-        ok = pab >= prompt_len * self.headroom
+        ok = pab >= (prompt_len - cached_tokens) * self.headroom
         if not ok:
             self.rejected += 1
         return ok

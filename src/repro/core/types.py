@@ -38,6 +38,12 @@ class SchedTask:
     # SSM layers the per-step KV traffic is bounded; configs set this so the
     # linear model charges what the hardware actually reads.
     effective_context: Optional[int] = None
+    # Prompt tokens served from the prefix cache (DESIGN.md §10). They are
+    # part of ``context`` (their KV is read every step) but were never
+    # computed by this request: ``new_tokens`` already excludes them, so
+    # batch formation / capacity / PAB charge prefill cost only for uncached
+    # tokens — the *effective-token* accounting the cache subsystem adds.
+    cached_context: int = 0
 
     @property
     def is_decode(self) -> bool:

@@ -30,6 +30,11 @@ class TraceRequest:
     # the engine/cluster default.
     ttft_slo: float | None = None
     tpot_slo: float | None = None
+    # Prompt token ids for content-locality scenarios (multi-turn,
+    # shared-sysprompt): the prefix cache (DESIGN.md §10) and CacheAwareLB
+    # match on them. None = lengths-only trace (cache never hits).
+    # Invariant when present: len(tokens) == prompt_len.
+    tokens: tuple[int, ...] | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -203,6 +208,91 @@ def make_longcontext_trace(profile: str | TraceProfile = "qwentrace", *,
     return reqs
 
 
+_VOCAB = 50_000   # synthetic token-id space for content-bearing scenarios
+
+
+def _rand_tokens(rng, n: int) -> tuple[int, ...]:
+    return tuple(int(t) for t in rng.integers(1, _VOCAB, size=n))
+
+
+def make_multiturn_trace(profile: str | TraceProfile = "qwentrace", *,
+                         rps: float, duration: float, seed: int = 0,
+                         max_turns: int = 6, think_mean: float = 6.0,
+                         user_frac: float = 0.25) -> list[TraceRequest]:
+    """Multi-turn conversations resubmitting their growing history.
+
+    Each conversation opens with a fresh prompt; every later turn's prompt is
+    the full previous history (prior prompt + a synthesized assistant
+    response) plus a new user message — the canonical prefix-cache workload:
+    turn k+1 re-prefills everything turn k computed unless a radix cache
+    (DESIGN.md §10) serves the shared history. Turn gaps are exponential
+    "think times", so the trace stays open-loop and seeded-deterministic.
+    Conversation starts arrive Poisson at a rate chosen so total request
+    rate ≈ ``rps`` given the mean turn count.
+    """
+    p = TRACE_PROFILES[profile] if isinstance(profile, str) else profile
+    rng = np.random.default_rng(seed)
+    mu_o, sg_o = _lognormal_params(p.output_avg, p.output_p90)
+    avg_turns = (1 + max_turns) / 2
+    conv_rate = max(rps / avg_turns, 1e-9)
+    reqs, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / conv_rate)
+        if t >= duration:
+            break
+        n_turns = int(rng.integers(1, max_turns + 1))
+        (first_len, _), = _sample_lengths(rng, p, 1)
+        history = _rand_tokens(rng, first_len)
+        arr = t
+        for turn in range(n_turns):
+            if arr >= duration:
+                break
+            olen = max(2, int(rng.lognormal(mu_o, sg_o)))
+            reqs.append(TraceRequest(arr, len(history), olen,
+                                     tokens=history))
+            # next turn resubmits history + synthesized response + new user
+            # message (response ids are synthetic stand-ins: the sim engine
+            # does not generate real tokens, but the *resubmitted* ids are
+            # identical across turns, which is all prefix matching needs)
+            user_len = max(4, int(user_frac * first_len))
+            history = history + _rand_tokens(rng, olen) \
+                + _rand_tokens(rng, user_len)
+            arr += rng.exponential(think_mean)
+    reqs.sort(key=lambda r: r.arrival)
+    return reqs
+
+
+def make_shared_sysprompt_trace(profile: str | TraceProfile = "qwentrace", *,
+                                rps: float, duration: float, seed: int = 0,
+                                n_sysprompts: int = 24, zipf_a: float = 1.1,
+                                sys_len: int = 512) -> list[TraceRequest]:
+    """Zipf-distributed pool of shared system prompts + unique user suffixes.
+
+    Production API traffic is dominated by a small set of hot system prompts
+    (agents, RAG templates); each request here draws one of ``n_sysprompts``
+    fixed ``sys_len``-token prefixes with Zipf(``zipf_a``) popularity and
+    appends a fresh user message. Under a radix prefix cache every request
+    after the first per sysprompt prefills only its suffix — the scenario
+    behind the cache-affinity-vs-fairness routing trade (DESIGN.md §10).
+    """
+    p = TRACE_PROFILES[profile] if isinstance(profile, str) else profile
+    rng = np.random.default_rng(seed)
+    pool = [_rand_tokens(rng, sys_len) for _ in range(n_sysprompts)]
+    weights = 1.0 / np.arange(1, n_sysprompts + 1) ** zipf_a
+    weights /= weights.sum()
+    reqs, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / max(rps, 1e-9))
+        if t >= duration:
+            break
+        sysp = pool[int(rng.choice(n_sysprompts, p=weights))]
+        (plen, olen), = _sample_lengths(rng, p, 1)
+        user = _rand_tokens(rng, max(4, plen - sys_len))
+        tokens = sysp + user
+        reqs.append(TraceRequest(t, len(tokens), olen, tokens=tokens))
+    return reqs
+
+
 # scenario registry: name -> generator(rps=..., duration=..., seed=...).
 # `make_trace` partials cover the paper's Table-2 MMPP workloads; the rest
 # are the beyond-paper stress scenarios above.
@@ -212,6 +302,8 @@ SCENARIOS = {
     "bursty-gamma": make_gamma_trace,
     "slo-classes": make_slo_class_trace,
     "long-context": make_longcontext_trace,
+    "multi-turn": make_multiturn_trace,
+    "shared-sysprompt": make_shared_sysprompt_trace,
 }
 
 

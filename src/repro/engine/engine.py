@@ -66,12 +66,17 @@ class InflightStep:
 class Engine:
     def __init__(self, scheduler: Scheduler, executor, cfg: EngineConfig,
                  admission: Optional[PABAdmissionController] = None,
-                 rank: int = 0):
+                 rank: int = 0, prefix_cache=None):
         self.sched = scheduler
         self.executor = executor
         self.cfg = cfg
         self.admission = admission
         self.rank = rank
+        # Optional repro.cache.PrefixCache (DESIGN.md §10). Real executors
+        # share their BlockAllocator with it; sim engines give it a virtual
+        # allocator. None (or capacity 0) reproduces cache-less behaviour
+        # bit for bit.
+        self.prefix_cache = prefix_cache
         self.now = 0.0
         self.requests: dict[int, Request] = {}
         self.pending: list[Request] = []       # submitted, arrival in future
@@ -91,14 +96,25 @@ class Engine:
         while self.pending and self.pending[0].arrival <= self.now:
             req = self.pending.pop(0)
             self.requests[req.req_id] = req
+            if self.prefix_cache is not None and req.tokens:
+                # split the prompt into cached + new *before* admission so
+                # PAB charges only the effective (uncached) tokens
+                cached = self.prefix_cache.begin_request(
+                    req.req_id, req.tokens, self.now)
+                if cached:
+                    req.cached_context = cached
+                    req.prefilled = cached
             if self.admission is not None:
                 tasks = [self.requests[i].to_sched_task()
                          for i in self.active]
                 if not self.admission.admit(req.prompt_len, tasks, self.now,
                                             self.sched.model,
                                             ttft_slo=req.ttft_slo,
-                                            tpot_slo=req.tpot_slo):
+                                            tpot_slo=req.tpot_slo,
+                                            cached_tokens=req.cached_context):
                     req.state = RequestState.REJECTED
+                    if self.prefix_cache is not None and req.tokens:
+                        self.prefix_cache.abort_request(req.req_id)
                     self.done.append(measure(req))
                     continue
             self.active.append(req.req_id)
@@ -154,7 +170,16 @@ class Engine:
             req = self.requests[it.req_id]
             if inf.emitted and it.req_id in inf.emitted:
                 req.generated_tokens.append(inf.emitted[it.req_id])
+            was_prefill = req.state in (RequestState.QUEUED,
+                                        RequestState.PREFILL)
             req.advance(it.n_tokens, finish)
+            if self.prefix_cache is not None and req.tokens and was_prefill:
+                self.prefix_cache.on_prefill_progress(req.req_id, it.n_tokens)
+                if req.prefilled == req.prompt_len:
+                    # prefill complete: publish the prompt's full-block pages
+                    # so concurrent identical prefixes hit (DESIGN.md §10)
+                    self.prefix_cache.insert_request(req.req_id, req.tokens,
+                                                     finish)
             if req.state is RequestState.FINISHED:
                 self._finish(req)
         self.sched.observe(plan.total_new_tokens, inf.total_ctx, inf.exec_time)
@@ -180,8 +205,19 @@ class Engine:
     def _finish(self, req: Request) -> None:
         self.active.remove(req.req_id)
         self.done.append(measure(req))
+        if self.prefix_cache is not None and req.tokens:
+            # drops the request's page refs; cache-adopted pages stay live
+            # until evicted (executor.release below is then a no-op)
+            self.prefix_cache.end_request(req.req_id)
         if hasattr(self.executor, "release"):
             self.executor.release(req.req_id)
+
+    def cache_stats(self) -> dict:
+        """Prefix-cache counters for metrics/LB reports (zeros if disabled)."""
+        if self.prefix_cache is None:
+            return {"hit_rate": 0.0, "hit_tokens": 0, "lookup_tokens": 0,
+                    "held_pages": 0}
+        return self.prefix_cache.stats_dict()
 
     def run(self, until_idle: bool = True, max_steps: Optional[int] = None):
         limit = max_steps or self.cfg.max_steps
@@ -226,10 +262,18 @@ class Engine:
         self.sched.model = LinearCostModel(a=a, b=b, c=c)
         # KV cache is not checkpointed: in-flight requests re-prefill their
         # full known prefix (prompt + generated) — reset prefill progress.
+        # Prefix-cache pages are gone with the KV, so the cached split is
+        # reset too (a live cache on the restored engine may re-match), and
+        # any per-request cache tables from a previous incarnation are
+        # released so the re-prefill doesn't double-count allocator pages.
+        if self.prefix_cache is not None:
+            for rid in self.requests:
+                self.prefix_cache.end_request(rid)
         for rid in self.active:
             req = self.requests[rid]
             if req.state in (RequestState.PREFILL, RequestState.DECODE):
                 req.prefilled = 0
+                req.cached_context = 0
                 if req.state is RequestState.DECODE:
                     # re-prefill prompt+generated, then continue decoding
                     req.prompt_len = req.prompt_len + req.generated

@@ -76,6 +76,10 @@ class PagedTransformerExecutor:
         self.params = params
         self.page_size = page_size
         self.alloc = BlockAllocator(num_pages, page_size)
+        # Optional repro.cache.PrefixCache sharing this allocator
+        # (DESIGN.md §10): cache-hit requests arrive with forked block
+        # tables, and under memory pressure we evict its unpinned leaves.
+        self.prefix_cache = None
         # page 0 is the trash page: bucket-padding tokens write there so
         # they can never clobber a live slot (attention masks them anyway)
         reserved = self.alloc.extend(-1, page_size)
@@ -158,13 +162,32 @@ class PagedTransformerExecutor:
 
     # ------------------------------------------------------------------
 
+    def attach_cache(self, prefix_cache) -> None:
+        """Wire a ``PrefixCache`` built on this executor's allocator."""
+        assert prefix_cache.alloc is self.alloc, \
+            "prefix cache must share the executor's BlockAllocator"
+        self.prefix_cache = prefix_cache
+
+    def _extend(self, req_id: int, n_tokens: int) -> Optional[list]:
+        """Allocator extend with prefix-cache eviction under pressure and
+        COW page copies mirrored into the device K/V arrays."""
+        tbl = self.alloc.extend(req_id, n_tokens)
+        if tbl is None and self.prefix_cache is not None:
+            self.prefix_cache.evict_for(
+                self.alloc.blocks_needed(req_id, n_tokens) + 1)
+            tbl = self.alloc.extend(req_id, n_tokens)
+        for old, new in self.alloc.pop_cow_events():
+            self.k_pages = self.k_pages.at[:, new].set(self.k_pages[:, old])
+            self.v_pages = self.v_pages.at[:, new].set(self.v_pages[:, old])
+        return tbl
+
     def execute(self, plan: BatchPlan, requests, now: float) -> tuple[float, dict]:
         t0 = time.perf_counter()
         emitted: dict[int, int] = {}
         decode_items = plan.decode_items
         for it in plan.prefill_items:
             req = requests[it.req_id]
-            if self.alloc.extend(it.req_id, it.n_tokens) is None:
+            if self._extend(it.req_id, it.n_tokens) is None:
                 continue  # out of KV blocks: defer (scheduler retries)
             chunk = req.tokens[req.prefilled:req.prefilled + it.n_tokens]
             n_tok = _bucket(len(chunk), 16)
@@ -180,7 +203,7 @@ class PagedTransformerExecutor:
             bsz = _bucket(len(decode_items), 4)
             ids = [it.req_id for it in decode_items]
             for rid in ids:
-                self.alloc.extend(rid, 1)
+                self._extend(rid, 1)
             toks, pos, tables, ctx = [], [], [], []
             for rid in ids:
                 req = requests[rid]

@@ -1,4 +1,19 @@
-"""Paged KV-cache block allocator (vLLM-style, 128-token TPU pages)."""
+"""Paged KV-cache block allocator (vLLM-style, 128-token TPU pages).
+
+Pages are reference-counted so the prefix cache (DESIGN.md §10) can share
+them across requests: a cache hit ``fork()``s the matched pages into the new
+request's block table (refcount++), and the radix tree itself holds one
+reference per page it has adopted. A page returns to the free list only when
+its last reference drops — shared pages are therefore pinned while any
+active request maps them.
+
+Copy-on-write: block-granular prefix matching means shared pages are always
+*full*, so the serving path never writes into one; the COW branch in
+``extend()`` is the safety net for non-aligned forks (a partially-filled
+tail page with refcount > 1 is copied before new tokens land in it). Real
+executors drain ``pop_cow_events()`` after every ``extend`` and mirror the
+page copy into the device K/V arrays.
+"""
 from __future__ import annotations
 
 from typing import Optional
@@ -11,10 +26,16 @@ class BlockAllocator:
         self._free = list(range(num_blocks - 1, -1, -1))
         self.tables: dict[int, list[int]] = {}    # req_id -> page ids
         self.lens: dict[int, int] = {}            # req_id -> tokens stored
+        self.refcount: dict[int, int] = {}        # page id -> live references
+        self._cow_events: list[tuple[int, int]] = []   # (old_page, new_page)
 
     @property
     def free_blocks(self) -> int:
         return len(self._free)
+
+    @property
+    def live_pages(self) -> int:
+        return len(self.refcount)
 
     def blocks_needed(self, req_id: int, extra_tokens: int) -> int:
         have = len(self.tables.get(req_id, ())) * self.block_size
@@ -24,22 +45,80 @@ class BlockAllocator:
     def can_fit(self, req_id: int, extra_tokens: int) -> bool:
         return self.blocks_needed(req_id, extra_tokens) <= self.free_blocks
 
+    def _needs_cow(self, req_id: int, extra_tokens: int) -> bool:
+        tbl = self.tables.get(req_id)
+        return bool(extra_tokens > 0 and tbl
+                    and self.lens.get(req_id, 0) % self.block_size
+                    and self.refcount.get(tbl[-1], 0) > 1)
+
     def extend(self, req_id: int, extra_tokens: int) -> Optional[list[int]]:
         """Reserve space for extra tokens; returns the request's full table
-        or None if out of blocks (caller defers the request)."""
+        or None if out of blocks (caller defers the request or asks the
+        prefix cache to evict). Atomic: no state changes on failure."""
         n = self.blocks_needed(req_id, extra_tokens)
-        if n > len(self._free):
+        cow = self._needs_cow(req_id, extra_tokens)
+        if n + cow > len(self._free):
             return None
         tbl = self.tables.setdefault(req_id, [])
+        if cow:
+            # shared partial tail page: copy before writing into it
+            old = tbl[-1]
+            new = self._free.pop()
+            self.refcount[old] -= 1
+            self.refcount[new] = 1
+            tbl[-1] = new
+            self._cow_events.append((old, new))
         for _ in range(n):
-            tbl.append(self._free.pop())
+            page = self._free.pop()
+            self.refcount[page] = 1
+            tbl.append(page)
         self.lens[req_id] = self.lens.get(req_id, 0) + extra_tokens
         return tbl
 
+    def fork(self, req_id: int, pages: list[int], n_tokens: int) -> list[int]:
+        """Adopt already-populated shared ``pages`` as the table prefix of a
+        new request (prefix-cache hit): refcount++ each, no data movement."""
+        assert req_id not in self.tables, f"req {req_id} already has a table"
+        for p in pages:
+            self.refcount[p] += 1
+        self.tables[req_id] = list(pages)
+        self.lens[req_id] = n_tokens
+        return self.tables[req_id]
+
+    def acquire_page(self, page: int) -> None:
+        """Add a reference to a live page (prefix-cache adoption)."""
+        self.refcount[page] += 1
+
+    def release_page(self, page: int) -> None:
+        """Drop one reference; the page frees when the last one goes."""
+        rc = self.refcount[page] - 1
+        if rc:
+            self.refcount[page] = rc
+        else:
+            del self.refcount[page]
+            self._free.append(page)
+
     def release(self, req_id: int) -> None:
-        for b in self.tables.pop(req_id, ()):
-            self._free.append(b)
+        for p in self.tables.pop(req_id, ()):
+            self.release_page(p)
         self.lens.pop(req_id, None)
+
+    def pop_cow_events(self) -> list[tuple[int, int]]:
+        """Drain (old_page, new_page) copies the data plane must mirror."""
+        ev, self._cow_events = self._cow_events, []
+        return ev
 
     def context_len(self, req_id: int) -> int:
         return self.lens.get(req_id, 0)
+
+    def check_invariants(self) -> None:
+        """free + referenced == total, refcounts positive, no free dupes.
+
+        The conservation law the property tests assert after every op."""
+        assert len(self._free) + len(self.refcount) == self.num_blocks, (
+            f"leak/double-free: {len(self._free)} free + "
+            f"{len(self.refcount)} live != {self.num_blocks}")
+        assert len(set(self._free)) == len(self._free), "free-list dupes"
+        assert all(rc > 0 for rc in self.refcount.values())
+        assert not (set(self._free) & set(self.refcount)), \
+            "page both free and referenced"

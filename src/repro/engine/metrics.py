@@ -18,6 +18,8 @@ class RequestMetrics:
     ttft_ok: bool
     tpot_ok: bool
     rejected: bool = False
+    prompt_len: int = 0
+    cached_tokens: int = 0         # prompt tokens served by the prefix cache
 
     @property
     def slo_ok(self) -> bool:
@@ -27,7 +29,9 @@ class RequestMetrics:
 def measure(req: Request) -> RequestMetrics:
     if req.state is RequestState.REJECTED:
         return RequestMetrics(req.req_id, req.arrival, None, None, False,
-                              False, rejected=True)
+                              False, rejected=True,
+                              prompt_len=req.prompt_len,
+                              cached_tokens=req.cached_context)
     ot = req.output_times
     ttft = (ot[0] - req.arrival) if ot else None
     tpot_max = None
@@ -36,7 +40,8 @@ def measure(req: Request) -> RequestMetrics:
     ttft_ok = ttft is not None and ttft <= req.ttft_slo
     tpot_ok = tpot_max is None or tpot_max <= req.tpot_slo
     return RequestMetrics(req.req_id, req.arrival, ttft, tpot_max,
-                          ttft_ok, tpot_ok)
+                          ttft_ok, tpot_ok, prompt_len=req.prompt_len,
+                          cached_tokens=req.cached_context)
 
 
 def summarize(metrics: list[RequestMetrics], duration: float) -> dict:
@@ -58,4 +63,8 @@ def summarize(metrics: list[RequestMetrics], duration: float) -> dict:
         "tpot_p50": pct(tpots, 50), "tpot_p95": pct(tpots, 95),
         "tpot_p99": pct(tpots, 99),
         "rejected": sum(m.rejected for m in metrics),
+        # prefix-cache reuse (DESIGN.md §10): token hit rate over all prompts
+        "cache_hit_tokens": int(sum(m.cached_tokens for m in metrics)),
+        "cache_hit_rate": (sum(m.cached_tokens for m in metrics)
+                           / max(sum(m.prompt_len for m in metrics), 1)),
     }

@@ -28,6 +28,9 @@ class Request:
     state: RequestState = RequestState.QUEUED
     prefilled: int = 0
     generated: int = 0
+    # prompt tokens served by the prefix cache at admission (DESIGN.md §10);
+    # counted into ``prefilled`` (their KV exists) but never computed here
+    cached_context: int = 0
     output_times: list = dataclasses.field(default_factory=list)
     tokens: Optional[list] = None          # real-mode prompt token ids
     generated_tokens: list = dataclasses.field(default_factory=list)
@@ -69,7 +72,8 @@ class Request:
                          ttft_slo=self.ttft_slo, tpot_slo=self.tpot_slo,
                          next_output_idx=next_idx, new_tokens=new_tokens,
                          context=ctx, kind=kind, prompt_len=self.prompt_len,
-                         effective_context=eff)
+                         effective_context=eff,
+                         cached_context=self.cached_context)
 
     def advance(self, n_tokens: int, finish_time: float) -> None:
         """Apply a step's granted tokens; emit output tokens at step end."""

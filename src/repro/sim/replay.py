@@ -155,14 +155,18 @@ def replay(trace, scheduler: str = "fairbatching", n_ranks: int = 1,
            admission: bool = False, true_model=None, est_model=None,
            straggler_ranks: Optional[dict] = None, sched_kwargs:
            Optional[dict] = None, failures=(), joins=(),
-           report_interval: float = 0.05, seed: int = 0,
+           report_interval: float = 0.05, prefix_cache_pages: int = 0,
+           prefix_block: int = 128, seed: int = 0,
            step_hook: Optional[Callable] = None) -> ReplayResult:
     """One-call event-driven cluster replay — the repo's canonical harness.
 
-    ``lb`` is a name for ``make_lb`` ("pab" | "count" | "roundrobin") or a
-    pre-built LoadBalancer. ``failures``/``joins`` are (time, rank) pairs.
-    All stochasticity (executor jitter, GC pauses) derives from ``seed``:
-    same arguments → identical summary metrics, bit for bit.
+    ``lb`` is a name for ``make_lb`` ("pab" | "count" | "roundrobin" |
+    "cache") or a pre-built LoadBalancer. ``failures``/``joins`` are
+    (time, rank) pairs. ``prefix_cache_pages`` > 0 gives every rank a radix
+    prefix cache of that many KV pages (DESIGN.md §10); traces must carry
+    token ids (e.g. the multi-turn / shared-sysprompt scenarios) for it to
+    hit. All stochasticity (executor jitter, GC pauses) derives from
+    ``seed``: same arguments → identical summary metrics, bit for bit.
     """
     from ..cluster.cluster import Cluster, ClusterConfig
     from ..cluster.load_balancer import make_lb
@@ -177,9 +181,15 @@ def replay(trace, scheduler: str = "fairbatching", n_ranks: int = 1,
                         admission=admission,
                         straggler_ranks=dict(straggler_ranks or {}),
                         sched_kwargs=dict(sched_kwargs or {}),
-                        report_interval=report_interval, seed=seed, **kw)
+                        report_interval=report_interval,
+                        prefix_cache_pages=prefix_cache_pages,
+                        prefix_block=prefix_block, seed=seed, **kw)
+    # the cache-affinity LB must hash prompts at the engines' page size or
+    # its prefix estimates never match the reported summaries
+    lb_kw = {"block_size": prefix_block} if lb in ("cache", "cache-lb") \
+        else {}
     cluster = Cluster(cfg, lb if not isinstance(lb, str)
-                      else make_lb(lb, n_ranks))
+                      else make_lb(lb, n_ranks, **lb_kw))
     for t, rank in failures:
         cluster.schedule_failure(t, rank)
     for t, rank in joins:

@@ -1,0 +1,356 @@
+"""Prefix-cache subsystem (DESIGN.md §10): radix matching, refcounted COW
+allocator, effective-token accounting, scenario wins, cache-affinity LB."""
+import random
+
+from repro.cache import PrefixCache, RadixTree, block_hashes, split_blocks
+from repro.core import LinearCostModel, PABAdmissionController, make_scheduler
+from repro.core.types import SchedTask, TaskKind
+from repro.data.traces import SCENARIOS, make_scenario
+from repro.engine import Engine, EngineConfig, Request, SimExecutor
+from repro.engine.kv_manager import BlockAllocator
+from repro.sim import replay
+
+TRUE = LinearCostModel(a=0.003, b=190e-6, c=20e-9)
+EST = lambda: LinearCostModel(a=0.003, b=150e-6, c=10e-9)
+BS = 4   # tiny block size for structural tests
+
+
+# ---------------------------------------------------------------------------
+# radix tree
+# ---------------------------------------------------------------------------
+
+
+def _blocks(tokens):
+    return split_blocks(tokens, BS)
+
+
+def _hashes(tokens):
+    return block_hashes(tokens, BS)
+
+
+def test_radix_match_insert_and_split():
+    tree = RadixTree()
+    a = list(range(12))                      # 3 blocks
+    tree.insert(_blocks(a), [10, 11, 12], _hashes(a), now=1.0)
+    # full match
+    assert tree.match(_blocks(a), 2.0) == [10, 11, 12]
+    # block-granular partial match stops mid-edge without splitting
+    b = a[:8] + [99, 98, 97, 96]
+    assert tree.match(_blocks(b), 3.0) == [10, 11]
+    # inserting the diverging path splits the edge at block 2
+    adopted = tree.insert(_blocks(b), [20, 21, 22], _hashes(b), now=4.0)
+    assert adopted == [2]                    # only the new tail block adopted
+    assert tree.match(_blocks(a), 5.0) == [10, 11, 12]
+    assert tree.match(_blocks(b), 5.0) == [10, 11, 22]
+    tree.check_invariants()
+    assert tree.n_pages == 4
+
+
+def test_radix_insert_existing_path_adopts_nothing():
+    tree = RadixTree()
+    a = list(range(8))
+    tree.insert(_blocks(a), [1, 2], _hashes(a), 1.0)
+    assert tree.insert(_blocks(a), [7, 8], _hashes(a), 2.0) == []
+    tree.check_invariants()
+
+
+def test_radix_lru_eviction_prefers_oldest_leaf():
+    tree = RadixTree()
+    a, b = [1] * 8, [2] * 8                  # two disjoint cached paths
+    tree.insert(_blocks(a), [10, 11], _hashes(a), now=1.0)
+    tree.insert(_blocks(b), [20, 21], _hashes(b), now=5.0)
+    assert tree.evict_one(lambda pages: True) == [10, 11]   # LRU leaf
+    assert tree.match(_blocks(b), 6.0) == [20, 21]
+    tree.check_invariants()
+    # pinned pages veto eviction
+    assert tree.evict_one(lambda pages: False) == []
+
+
+def test_prefix_hashes_are_prefix_consistent():
+    a = list(range(16))
+    b = a[:8] + [77] * 8
+    ha, hb = _hashes(a), _hashes(b)
+    assert ha[:2] == hb[:2] and ha[2:] != hb[2:]
+
+
+# ---------------------------------------------------------------------------
+# refcounted COW allocator
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_fork_shares_and_release_frees():
+    alloc = BlockAllocator(8, BS)
+    tbl = alloc.extend(1, 8)                 # two full pages
+    alloc.fork(2, tbl, 8)
+    assert alloc.refcount[tbl[0]] == 2
+    alloc.release(1)
+    alloc.check_invariants()
+    assert alloc.free_blocks == 6            # pages survive via req 2
+    alloc.release(2)
+    alloc.check_invariants()
+    assert alloc.free_blocks == 8
+
+
+def test_allocator_cow_on_shared_partial_tail():
+    alloc = BlockAllocator(8, BS)
+    tbl = alloc.extend(1, 6)                 # page 2 half-full
+    alloc.fork(2, list(tbl), 6)              # non-aligned fork shares it
+    new_tbl = alloc.extend(2, 1)             # write into shared partial page
+    events = alloc.pop_cow_events()
+    assert len(events) == 1
+    old, new = events[0]
+    assert old == tbl[1] and new == new_tbl[1] and new != old
+    assert alloc.refcount[old] == 1 and alloc.refcount[new] == 1
+    alloc.check_invariants()
+    # req 1's view is untouched
+    assert alloc.tables[1] == tbl
+
+
+def test_allocator_extend_is_atomic_when_full():
+    alloc = BlockAllocator(2, BS)
+    alloc.extend(1, 8)
+    assert alloc.extend(2, 4) is None
+    alloc.check_invariants()
+    assert 2 not in alloc.tables and alloc.free_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache facade
+# ---------------------------------------------------------------------------
+
+
+def _drive_request(cache, req_id, tokens, now=0.0):
+    """Engine-lifecycle shorthand: admit, prefill fully, publish, finish."""
+    cached = cache.begin_request(req_id, tokens, now)
+    cache.on_prefill_progress(req_id, len(tokens) - cached)
+    cache.insert_request(req_id, tokens, now)
+    cache.end_request(req_id)
+    return cached
+
+
+def test_cache_hits_shared_prefix_block_granular():
+    cache = PrefixCache(capacity_pages=16, block_size=BS)
+    base = list(range(10))                   # 2 full blocks + 2 spare tokens
+    assert _drive_request(cache, 1, base, 1.0) == 0
+    assert _drive_request(cache, 2, base + [50, 51], 2.0) == 8
+    # divergence after one block
+    assert _drive_request(cache, 3, base[:4] + [9] * 6, 3.0) == 4
+    assert cache.stats.hit_requests == 2
+
+
+def test_cache_never_serves_whole_prompt():
+    """At least the final prompt token must be computed (its logits emit the
+    first output), so hits cap at prompt_len - 1, block-aligned."""
+    cache = PrefixCache(capacity_pages=16, block_size=BS)
+    toks = list(range(8))                    # exactly 2 blocks
+    _drive_request(cache, 1, toks, 1.0)
+    assert _drive_request(cache, 2, toks, 2.0) == 4   # not 8
+
+
+def test_cache_capacity_evicts_lru_and_never_leaks():
+    cache = PrefixCache(capacity_pages=4, block_size=BS)
+    rng = random.Random(0)
+    for i in range(12):
+        toks = [rng.randrange(5) for _ in range(rng.randrange(4, 20))]
+        _drive_request(cache, i, toks, float(i))
+        cache.alloc.check_invariants()
+        cache.tree.check_invariants()
+        assert cache.held_pages <= cache.capacity_pages
+    assert cache.stats.evicted_pages > 0
+    # draining the cache returns every page to the free list
+    cache.evict_for(10 ** 9)
+    assert cache.held_pages == 0
+    assert cache.alloc.free_blocks == cache.alloc.num_blocks
+
+
+def test_cache_pinned_pages_survive_eviction():
+    cache = PrefixCache(capacity_pages=4, block_size=BS)
+    toks = list(range(9))
+    _drive_request(cache, 1, toks, 1.0)
+    cached = cache.begin_request(2, toks, 2.0)        # req 2 pins the pages
+    assert cached == 8
+    assert cache.evict_for(10 ** 9) == 0              # everything pinned
+    pages = list(cache.alloc.tables[2])
+    cache.end_request(2)
+    assert cache.evict_for(10 ** 9) == len(pages)     # now evictable
+
+
+# ---------------------------------------------------------------------------
+# effective-token accounting (PAB / SchedTask)
+# ---------------------------------------------------------------------------
+
+
+def test_pab_admission_charges_only_uncached_tokens():
+    ctl = PABAdmissionController(ttft_slo=0.5, tpot_slo=0.05)
+    model = LinearCostModel(a=0.003, b=150e-6, c=10e-9)
+    tasks = [SchedTask(req_id=0, arrival=0.0, ttft_slo=0.5, tpot_slo=0.05,
+                       next_output_idx=3, new_tokens=1, context=900,
+                       kind=TaskKind.DECODE)]
+    # find a prompt the node cannot absorb cold but can with a 75% hit
+    from repro.core.pab import prefill_admission_budget
+    pab = prefill_admission_budget(tasks, 0.12, model, 0.5, 0.05)
+    prompt = int(pab * 2)
+    assert not ctl.admit(prompt, tasks, 0.12, model)
+    assert ctl.admit(prompt, tasks, 0.12, model,
+                     cached_tokens=int(prompt * 0.75))
+    assert ctl.rejected == 1
+
+
+def test_sched_task_carries_cached_context():
+    req = Request(1, 0.0, prompt_len=200, max_new_tokens=4, ttft_slo=0.5,
+                  tpot_slo=0.05, tokens=list(range(200)))
+    req.cached_context = 128
+    req.prefilled = 128
+    t = req.to_sched_task()
+    assert t.cached_context == 128
+    assert t.new_tokens == 72           # only uncached prefill is charged
+    assert t.context == 128             # cached KV still counts as context
+
+
+# ---------------------------------------------------------------------------
+# engine/sim integration
+# ---------------------------------------------------------------------------
+
+
+def _scenario_trace(**kw):
+    return make_scenario("shared-sysprompt", rps=4.0, duration=30, seed=3,
+                         **kw)
+
+
+def _run_engine(trace, cache):
+    eng = Engine(make_scheduler("fairbatching", EST()),
+                 SimExecutor(TRUE, seed=7), EngineConfig(0.5, 0.05),
+                 prefix_cache=cache)
+    for i, tr in enumerate(trace):
+        eng.submit(Request(i, tr.arrival, tr.prompt_len, tr.output_len,
+                           0.5, 0.05, tokens=list(tr.tokens)))
+    done = eng.run()
+    return [(m.req_id, m.ttft, m.tpot_max, m.cached_tokens) for m in done], \
+        [(s.t_start, s.t_end, s.new_tokens, s.context) for s in eng.steps]
+
+
+def test_capacity_zero_is_bit_identical_to_no_cache():
+    """The regression guarantee: a disabled cache changes nothing."""
+    trace = _scenario_trace()
+    assert _run_engine(trace, None) == _run_engine(trace, PrefixCache(0))
+
+
+def test_new_scenarios_registered_and_deterministic():
+    for name in ("multi-turn", "shared-sysprompt"):
+        assert name in SCENARIOS
+        a = make_scenario(name, rps=2.0, duration=20, seed=11)
+        b = make_scenario(name, rps=2.0, duration=20, seed=11)
+        assert a == b
+        assert a != make_scenario(name, rps=2.0, duration=20, seed=12)
+        assert all(r.tokens is not None and len(r.tokens) == r.prompt_len
+                   for r in a)
+
+
+def test_multiturn_histories_grow_and_share_prefixes():
+    trace = make_scenario("multi-turn", rps=2.0, duration=30, seed=4)
+    by_prefix = {}
+    for r in trace:
+        by_prefix.setdefault(r.tokens[:8], []).append(r)
+    multi = [v for v in by_prefix.values() if len(v) > 1]
+    assert multi, "no conversation produced a follow-up turn"
+    for turns in multi:
+        turns.sort(key=lambda r: r.arrival)
+        for prev, nxt in zip(turns, turns[1:]):
+            assert nxt.tokens[:len(prev.tokens)] == prev.tokens, \
+                "later turn does not extend the earlier history"
+
+
+def test_shared_sysprompt_cache_lowers_p99_ttft_at_equal_load():
+    """Acceptance: FairBatching + prefix cache measurably beats FairBatching
+    without one on the shared-sysprompt workload, at the same offered load."""
+    trace = _scenario_trace()
+    cold = replay(trace, scheduler="fairbatching", n_ranks=1,
+                  lb="roundrobin", seed=1)
+    warm = replay(trace, scheduler="fairbatching", n_ranks=1,
+                  lb="roundrobin", prefix_cache_pages=2048, seed=1)
+    assert warm.summary["cache_hit_rate"] > 0.2
+    assert warm.summary["ttft_p99"] < 0.7 * cold.summary["ttft_p99"], \
+        (warm.summary["ttft_p99"], cold.summary["ttft_p99"])
+    assert warm.summary["slo_attainment"] >= cold.summary["slo_attainment"]
+
+
+def test_cache_aware_lb_beats_roundrobin_hit_rate():
+    """Acceptance: affinity routing concentrates shared prefixes, so the
+    fleet-wide hit rate beats spreading them round-robin (under eviction
+    pressure, where duplication across ranks actually costs)."""
+    trace = make_scenario("shared-sysprompt", rps=10.0, duration=40, seed=7,
+                          n_sysprompts=48, zipf_a=0.9)
+    hit = {}
+    for lb in ("roundrobin", "cache"):
+        res = replay(trace, scheduler="fairbatching", n_ranks=4, lb=lb,
+                     prefix_cache_pages=128, seed=2)
+        hit[lb] = res.summary["engine_cache_hit_rate"]
+    assert hit["cache"] > 1.15 * hit["roundrobin"], hit
+
+
+def test_cached_tokens_reported_in_summary_and_lb_reports():
+    trace = _scenario_trace()
+    res = replay(trace, scheduler="fairbatching", n_ranks=2, lb="cache",
+                 prefix_cache_pages=1024, seed=1)
+    s = res.summary
+    assert s["cache_hit_tokens"] > 0
+    assert 0.0 < s["cache_hit_rate"] <= 1.0
+    assert s["engine_cache_hit_tokens"] >= s["cache_hit_tokens"]
+    lb = res.cluster.lb
+    assert any(lb.prefixes[r] for r in range(2)), \
+        "LB never received a cache summary in report ticks"
+
+
+def test_cache_replay_is_seed_deterministic():
+    trace = make_scenario("multi-turn", rps=3.0, duration=30, seed=5)
+    runs = [replay(trace, scheduler="fairbatching", n_ranks=2, lb="cache",
+                   prefix_cache_pages=512, admission=True, seed=9).summary
+            for _ in range(2)]
+    assert runs[0] == runs[1]
+
+
+def test_cache_lb_survives_failure_and_elastic_join():
+    """Regression: scale-out must grow the cache LB's per-rank summary
+    table, and orphans re-routed off a dead rank keep their prompt tokens
+    (so the re-prefill can still hit the destination's cache)."""
+    trace = _scenario_trace()
+    res = replay(trace, scheduler="fairbatching", n_ranks=2, lb="cache",
+                 prefix_cache_pages=512, seed=4,
+                 failures=[(8.0, 0)], joins=[(15.0, 2)])
+    assert len(res.cluster.lb.prefixes) == 3
+    assert len(res.metrics) == len(trace)
+    moved = [rid for rid, rk in res.cluster._rank_of.items() if rk != 0]
+    assert moved, "nothing was ever routed off rank 0"
+
+
+def test_cache_lb_honors_custom_prefix_block():
+    """Regression: replay must hash LB prompts at the engines' page size or
+    affinity silently degenerates to PAB."""
+    trace = _scenario_trace()
+    res = replay(trace, scheduler="fairbatching", n_ranks=2, lb="cache",
+                 prefix_cache_pages=512, prefix_block=256, seed=4)
+    lb = res.cluster.lb
+    assert lb.block_size == 256
+    assert any(lb.prefixes[r] for r in range(2))
+
+
+def test_restore_with_cache_does_not_double_count_pages():
+    """Regression: restore resets prefill progress; the cache's allocator
+    tables from the previous incarnation must be released or re-prefill
+    extends them to ~2x their true size."""
+    cache = PrefixCache(capacity_pages=64, block_size=BS)
+    eng = Engine(make_scheduler("fairbatching", EST()),
+                 SimExecutor(TRUE, seed=7), EngineConfig(0.5, 0.05),
+                 prefix_cache=cache)
+    toks = list(range(12))
+    eng.submit(Request(0, 0.0, 12, 8, 0.5, 0.05, tokens=toks))
+    for _ in range(4):
+        eng.step()
+    assert eng.requests[0].generated >= 1        # mid-decode
+    blob = eng.snapshot()
+    eng.restore(blob)
+    eng.run()
+    assert cache.alloc.context_len(0) == 0       # released at finish
+    cache.alloc.check_invariants()
+    cache.evict_for(10 ** 9)
+    assert cache.alloc.free_blocks == cache.alloc.num_blocks

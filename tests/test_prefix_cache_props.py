@@ -1,0 +1,113 @@
+"""Property tests for the refcounted COW allocator + radix tree
+(DESIGN.md §10): arbitrary interleavings of the cache lifecycle ops never
+leak or double-free pages, and the radix structural invariants hold."""
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.cache import PrefixCache
+from repro.engine.kv_manager import BlockAllocator
+
+BS = 4
+
+
+def _check_all(cache: PrefixCache) -> None:
+    """Conservation + structure after every op:
+    free_blocks + referenced pages == total, and tree invariants."""
+    cache.alloc.check_invariants()
+    cache.tree.check_invariants()
+    assert cache.held_pages == cache.tree.n_pages
+    # every page the tree references is live in the allocator
+    stack = [cache.tree.root]
+    while stack:
+        node = stack.pop()
+        for p in node.pages:
+            assert cache.alloc.refcount.get(p, 0) >= 1, \
+                f"tree references freed page {p}"
+        stack.extend(node.children.values())
+
+
+@st.composite
+def _op_sequences(draw):
+    """Interleaved begin/progress/insert/end/evict across overlapping
+    requests. Tokens come from a 3-symbol alphabet so shared prefixes,
+    edge splits, and duplicate inserts all occur frequently."""
+    n = draw(st.integers(4, 30))
+    ops = []
+    for _ in range(n):
+        ops.append(draw(st.tuples(
+            st.sampled_from(["begin", "progress", "insert", "end", "evict"]),
+            st.integers(0, 5),                       # request slot
+            st.lists(st.integers(0, 2), min_size=1, max_size=4 * BS + 3),
+            st.integers(1, 2 * BS))))                # progress chunk
+    return ops
+
+
+@given(_op_sequences())
+@settings(max_examples=80, deadline=None)
+def test_lifecycle_interleavings_never_leak_or_double_free(ops):
+    cache = PrefixCache(capacity_pages=6, block_size=BS, alloc_pages=20)
+    live: dict[int, tuple[list[int], int]] = {}      # slot -> (tokens, done)
+    now = 0.0
+    for kind, slot, tokens, chunk in ops:
+        now += 1.0
+        if kind == "begin" and slot not in live:
+            cached = cache.begin_request(slot, tokens, now)
+            assert cached <= max(len(tokens) - 1, 0)
+            assert cached % BS == 0
+            live[slot] = (tokens, cached)
+        elif kind == "progress" and slot in live:
+            tokens_, got = live[slot]
+            grant = min(chunk, len(tokens_) - got)
+            if grant > 0:
+                cache.on_prefill_progress(slot, grant)
+                live[slot] = (tokens_, got + grant)
+        elif kind == "insert" and slot in live:
+            tokens_, got = live[slot]
+            if got == len(tokens_):
+                cache.insert_request(slot, tokens_, now)
+        elif kind == "end" and slot in live:
+            cache.end_request(slot)
+            del live[slot]
+        elif kind == "evict":
+            cache.evict_for(chunk)
+        _check_all(cache)
+    # drain: end every request, evict everything -> zero pages outstanding
+    for slot in list(live):
+        cache.end_request(slot)
+    cache.evict_for(10 ** 9)
+    _check_all(cache)
+    assert cache.alloc.free_blocks == cache.alloc.num_blocks
+    assert cache.held_pages == 0
+
+
+@given(st.lists(st.tuples(st.sampled_from(["extend", "fork", "release"]),
+                          st.integers(0, 3), st.integers(1, 9)),
+                min_size=1, max_size=30))
+@settings(max_examples=80, deadline=None)
+def test_raw_allocator_fork_extend_release_conserve_pages(ops):
+    """Direct allocator interleavings, including non-aligned forks that make
+    the COW branch fire: conservation holds and COW never aliases."""
+    alloc = BlockAllocator(10, BS)
+    for kind, rid, n in ops:
+        if kind == "extend":
+            before = alloc.tables.get(rid, [])[:]
+            if alloc.extend(rid, n) is None:
+                assert alloc.tables.get(rid, [])[:len(before)] == before
+            for old, new in alloc.pop_cow_events():
+                assert old != new
+                assert alloc.refcount[new] == 1
+        elif kind == "fork":
+            src = alloc.tables.get(rid)
+            dst = rid + 4                    # forked ids live in 4..7
+            if src is not None and dst not in alloc.tables:
+                alloc.fork(dst, list(src), alloc.context_len(rid))
+        else:
+            alloc.release(rid)
+            alloc.release(rid + 4)
+        alloc.check_invariants()
+    for rid in range(8):
+        alloc.release(rid)
+    alloc.check_invariants()
+    assert alloc.free_blocks == alloc.num_blocks
