@@ -76,6 +76,13 @@ def _headline(name: str, rows: list[dict]) -> str:
             for r in rows:
                 dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
             return f"cells={n} dominant={dom}"
+        if name == "hybrid_step":
+            sp = {r["mix"]: r["speedup"] for r in rows
+                  if r["mode"] == "speedup"}
+            disp = {r["mix"]: r["dispatches_per_step"] for r in rows
+                    if r["mode"] == "fused"}
+            return (f"fused_speedup {sp} dispatches/step "
+                    f"{sorted(set(disp.values()))}")
     except (StopIteration, KeyError, ZeroDivisionError):
         pass
     return f"rows={len(rows)}"
@@ -90,8 +97,9 @@ def main() -> None:
     quick = not args.full
 
     from . import (breakdown_bench, cluster_bench, cost_model_bench,
-                   goodput_bench, latency_bench, prefix_cache_bench,
-                   roofline_report, slo_grid_bench, unfairness_bench)
+                   goodput_bench, hybrid_step_bench, latency_bench,
+                   prefix_cache_bench, roofline_report, slo_grid_bench,
+                   unfairness_bench)
     benches = {
         "cost_model": cost_model_bench.run,      # paper §3.2 accuracy claim
         "unfairness": unfairness_bench.run,      # Fig 1/2
@@ -101,6 +109,7 @@ def main() -> None:
         "breakdown": breakdown_bench.run,        # Fig 7
         "cluster": cluster_bench.run,            # Fig 8
         "prefix_cache": prefix_cache_bench.run,  # DESIGN.md §10 reuse
+        "hybrid_step": hybrid_step_bench.run,    # DESIGN.md §11 fused step
         "roofline": roofline_report.run,         # deliverable (g)
     }
     all_rows = {}

@@ -25,7 +25,7 @@ from typing import Optional
 from ..core.cost_model import LinearCostModel
 from ..core.pab import PABAdmissionController, prefill_admission_budget
 from ..core.schedulers import Scheduler
-from ..core.types import BatchPlan
+from ..core.types import BatchPlan, TaskKind
 from .metrics import RequestMetrics, measure
 from .request import Request, RequestState
 
@@ -57,6 +57,9 @@ class InflightStep:
     emitted: dict
     t_start: float
     total_ctx: int
+    # req_ids the executor could not serve this step (out of KV blocks):
+    # their progress is NOT advanced, so the scheduler retries them
+    deferred: frozenset = frozenset()
 
     @property
     def t_end(self) -> float:
@@ -85,6 +88,7 @@ class Engine:
         self.steps: list[StepRecord] = []
         self.busy_time = 0.0
         self.inflight: Optional[InflightStep] = None
+        self._stalled_steps = 0     # consecutive fully-deferred steps
 
     # ------------------------------------------------------------------
 
@@ -153,11 +157,12 @@ class Engine:
             return None
         exec_time, emitted = self.executor.execute(plan, self.requests,
                                                    self.now)
+        deferred = frozenset(getattr(self.executor, "last_deferred", ()))
         task_of = {t.req_id: t for t in tasks}
         total_ctx = sum(task_of[it.req_id].cost_context()
-                        for it in plan.items)
+                        for it in plan.items if it.req_id not in deferred)
         self.inflight = InflightStep(plan, exec_time, emitted, self.now,
-                                     total_ctx)
+                                     total_ctx, deferred)
         return self.inflight
 
     def complete_step(self) -> StepRecord:
@@ -166,7 +171,11 @@ class Engine:
         assert inf is not None, "no step in flight"
         self.inflight = None
         plan, finish = inf.plan, inf.t_end
+        executed = 0
         for it in plan.items:
+            if it.req_id in inf.deferred:
+                continue              # executor deferred it (out of KV blocks)
+            executed += it.n_tokens
             req = self.requests[it.req_id]
             if inf.emitted and it.req_id in inf.emitted:
                 req.generated_tokens.append(inf.emitted[it.req_id])
@@ -182,10 +191,20 @@ class Engine:
                                                      finish)
             if req.state is RequestState.FINISHED:
                 self._finish(req)
-        self.sched.observe(plan.total_new_tokens, inf.total_ctx, inf.exec_time)
-        rec = StepRecord(inf.t_start, finish, plan.total_new_tokens,
-                         inf.total_ctx, len(plan.prefill_items),
-                         len(plan.decode_items), plan.predicted_time)
+        # fail loudly on a KV-pool deadlock: if every item keeps deferring,
+        # no request can ever free pages and retrying forever is a silent
+        # livelock (preemption/eviction would be the real fix)
+        self._stalled_steps = self._stalled_steps + 1 if executed == 0 else 0
+        if self._stalled_steps >= 1000:
+            raise RuntimeError(
+                "KV pool deadlock: every batch item was deferred for "
+                "1000 consecutive steps (pool too small for the working set)")
+        self.sched.observe(executed, inf.total_ctx, inf.exec_time)
+        ran = [it for it in plan.items if it.req_id not in inf.deferred]
+        rec = StepRecord(inf.t_start, finish, executed, inf.total_ctx,
+                         sum(it.kind is TaskKind.PREFILL for it in ran),
+                         sum(it.kind is TaskKind.DECODE for it in ran),
+                         plan.predicted_time)
         self.steps.append(rec)
         self.busy_time += inf.exec_time
         self.now = finish

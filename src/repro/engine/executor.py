@@ -7,10 +7,13 @@
 
 * ``PagedTransformerExecutor`` — real JAX execution of the FairBatching
   hybrid step for dense-GQA archs at smoke scale: paged KV cache
-  (kv_manager), chunked-prefill + batched-decode through the
-  paged-attention kernel contract (ref backend on CPU, Pallas on TPU).
-  Wall-clock step times feed the scheduler's online calibration, closing
-  the paper's §3.2 loop for real.
+  (kv_manager) driven through the paged-attention kernel contract (ref
+  backend on CPU, Pallas on TPU). The default ``mode="fused"`` packs the
+  whole BatchPlan — every prefill chunk and decode token — into ONE padded
+  token stream and launches a single forward per step (DESIGN.md §11), so
+  the wall-clock step times feeding the scheduler's online calibration
+  (paper §3.2) measure the unified batch the fairness math reasons about.
+  ``mode="sequential"`` keeps the per-item launch loop as the parity oracle.
 """
 from __future__ import annotations
 
@@ -26,7 +29,7 @@ import numpy as np
 from ..configs.base import ArchConfig
 from ..core.cost_model import LinearCostModel
 from ..core.types import BatchPlan, TaskKind
-from ..kernels.ops import paged_attention_op
+from ..kernels.ops import paged_attention_op, paged_attention_ragged_op
 from ..models.layers import attn_qkv, mlp_apply
 from ..models.module import rmsnorm
 from .kv_manager import BlockAllocator
@@ -66,15 +69,47 @@ def _bucket(n: int, lo: int = 8) -> int:
     return b
 
 
+def _ladder(n: int, lo: int) -> int:
+    """1.5-step bucket ladder: lo, 1.5·lo, 2·lo, 3·lo, 4·lo, … — finer than
+    powers of two (≤ 33% padding waste) at ~2× the compile-key count, which
+    the two-axis compile guard still bounds (DESIGN.md §11)."""
+    b = lo
+    while b < n:
+        b = b * 3 // 2 if b % 3 else b * 4 // 3
+    return b
+
+
+@dataclasses.dataclass
+class _PackedSeq:
+    """Host-side view of one sequence in the packed step (DESIGN.md §11)."""
+    req_id: int
+    tokens: list            # new tokens this step (chunk, or [fed-back token])
+    pos0: int               # global position of tokens[0]
+    ctx: int                # context_len incl. this step's tokens
+    emits: bool             # produces an output token this step
+
+
 class PagedTransformerExecutor:
     """Real hybrid-step executor over a paged KV cache (dense GQA family)."""
 
     def __init__(self, cfg: ArchConfig, params, *, num_pages: int = 256,
-                 page_size: int = 128, max_pages_per_seq: int = 16):
+                 page_size: int = 128, max_pages_per_seq: int = 16,
+                 mode: str = "fused",
+                 ragged_attention: Optional[bool] = None,
+                 capture_logits: bool = False):
         assert cfg.family in ("dense",) and cfg.moe is None and cfg.ssm is None
+        assert mode in ("fused", "sequential")
         self.cfg = cfg
         self.params = params
         self.page_size = page_size
+        self.mode = mode
+        # fused-step attention backend (DESIGN.md §11): on TPU the packed
+        # stream feeds the ragged Pallas kernel directly; elsewhere the
+        # jnp oracle would re-gather each token's whole context, so the step
+        # routes q through a host-staged per-sequence padded view into the
+        # same batched paged-attention op the sequential path uses
+        self._ragged_attn = (jax.default_backend() == "tpu"
+                             if ragged_attention is None else ragged_attention)
         self.alloc = BlockAllocator(num_pages, page_size)
         # Optional repro.cache.PrefixCache sharing this allocator
         # (DESIGN.md §10): cache-hit requests arrive with forked block
@@ -93,6 +128,23 @@ class PagedTransformerExecutor:
                                  static_argnames=("n_tok",))
         self._decode_fn = jax.jit(self._decode_step,
                                   static_argnames=("bsz",))
+        self._fused_fn = jax.jit(self._fused_step,
+                                 static_argnames=("t_bucket", "s_bucket",
+                                                  "tq_bucket"))
+        # items the last execute() could not serve (out of KV blocks); the
+        # engine skips their progress so the scheduler retries them
+        self.last_deferred: frozenset[int] = frozenset()
+        # opt-in test/bench introspection: req_id -> np logits of the last
+        # step. Off by default — the extra device→host logits copy would
+        # land inside the wall-clock the §3.2 calibration observes.
+        self.capture_logits = capture_logits
+        self.last_logits: dict[int, np.ndarray] = {}
+        # dispatch / compile-ladder accounting (DESIGN.md §11): steady-state
+        # serving must hit a warm jit cache — benches and the regression
+        # guard in tests/test_fused_executor.py read these
+        self.n_dispatches = 0
+        self.compile_keys: set = set()
+        self._staging: dict[tuple[int, int, int], dict[str, np.ndarray]] = {}
 
     # ------------------------------------------------------------------
     # jitted step bodies
@@ -140,7 +192,11 @@ class PagedTransformerExecutor:
 
     def _chunk_step(self, k_pages, v_pages, tokens, pos0, table, n_valid,
                     *, n_tok):
-        """One prefill chunk, B=1. tokens: (n_tok,) padded; n_valid real."""
+        """One prefill chunk, B=1. tokens: (n_tok,) padded; n_valid real.
+
+        Sequential-mode (and parity-test) body; the serving path is
+        ``_fused_step`` below.
+        """
         x = self._embed(tokens)[None]                      # (1, T, d)
         positions = (pos0 + jnp.arange(n_tok))[None]
         valid = (jnp.arange(n_tok)[None] < n_valid)
@@ -160,6 +216,46 @@ class PagedTransformerExecutor:
                                             ctx_lens)
         return k_pages, v_pages, self._head(x[:, 0])
 
+    def _fused_step(self, k_pages, v_pages, tokens, positions, tok_pages,
+                    tok_slots, tables, ctx_lens, q_starts, q_lens, pos0,
+                    last_idx, seq_gather, pack_gather,
+                    *, t_bucket, s_bucket, tq_bucket):
+        """The whole BatchPlan as ONE forward (DESIGN.md §11).
+
+        tokens/positions/tok_pages/tok_slots: (T,) packed stream — every
+        prefill-chunk token and decode token of the step, padding → trash
+        page. tables: (S, max_pages); ctx_lens/q_starts/q_lens/pos0/last_idx:
+        (S,). seq_gather (S, Tq)/pack_gather (T,) are the host-staged
+        packed↔per-seq row index maps for the batched attention backend.
+        Per layer: one K/V scatter for every sequence's writes, one
+        attention launch; at the top: one head projection over each
+        sequence's last-token hidden state. Returns (k_pages, v_pages,
+        logits (S, vocab)).
+        """
+        cfg = self.cfg
+        x = self._embed(tokens)[None]                     # (1, T, d)
+        pos2d = positions[None]
+        for l in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[l], self.params["layers"])
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(lp["attn"], h, pos2d, cfg)
+            k_pages = k_pages.at[l, tok_pages, tok_slots].set(k[0])
+            v_pages = v_pages.at[l, tok_pages, tok_slots].set(v[0])
+            if self._ragged_attn:
+                o = paged_attention_ragged_op(
+                    q[0], k_pages[l], v_pages[l], tables, ctx_lens,
+                    q_starts, q_lens, pos0, window=cfg.window)
+            else:
+                qv = q[0][seq_gather]                     # (S, Tq, H, D)
+                ov = paged_attention_op(qv, k_pages[l], v_pages[l], tables,
+                                        ctx_lens, pos0, window=cfg.window)
+                o = ov.reshape(s_bucket * tq_bucket,
+                               *ov.shape[2:])[pack_gather]
+            x = x + o.reshape(1, t_bucket, cfg.q_dim) @ lp["attn"]["wo"]
+            x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
+        h_last = x[0][last_idx]                           # (S, d)
+        return k_pages, v_pages, self._head(h_last)
+
     # ------------------------------------------------------------------
 
     def attach_cache(self, prefix_cache) -> None:
@@ -168,42 +264,192 @@ class PagedTransformerExecutor:
             "prefix cache must share the executor's BlockAllocator"
         self.prefix_cache = prefix_cache
 
-    def _extend(self, req_id: int, n_tokens: int) -> Optional[list]:
-        """Allocator extend with prefix-cache eviction under pressure and
-        COW page copies mirrored into the device K/V arrays."""
+    def _extend(self, req_id: int, n_tokens: int, *,
+                mirror_cow: bool = True) -> Optional[list]:
+        """Allocator extend with prefix-cache eviction under pressure.
+
+        COW page copies are mirrored into the device K/V arrays per call
+        unless ``mirror_cow=False`` (the fused path drains the whole step's
+        events in one batched gather/scatter — ``_mirror_cow_batched``).
+        """
         tbl = self.alloc.extend(req_id, n_tokens)
         if tbl is None and self.prefix_cache is not None:
             self.prefix_cache.evict_for(
                 self.alloc.blocks_needed(req_id, n_tokens) + 1)
             tbl = self.alloc.extend(req_id, n_tokens)
-        for old, new in self.alloc.pop_cow_events():
-            self.k_pages = self.k_pages.at[:, new].set(self.k_pages[:, old])
-            self.v_pages = self.v_pages.at[:, new].set(self.v_pages[:, old])
+        if mirror_cow:
+            for old, new in self.alloc.pop_cow_events():
+                self.k_pages = self.k_pages.at[:, new].set(self.k_pages[:, old])
+                self.v_pages = self.v_pages.at[:, new].set(self.v_pages[:, old])
         return tbl
 
+    def _mirror_cow_batched(self) -> None:
+        """Drain every pending COW event as one vectorized gather/scatter."""
+        old, new = self.alloc.pop_cow_events_batched()
+        if old:
+            src_k = self.k_pages[:, old]
+            src_v = self.v_pages[:, old]
+            self.k_pages = self.k_pages.at[:, new].set(src_k)
+            self.v_pages = self.v_pages.at[:, new].set(src_v)
+
     def execute(self, plan: BatchPlan, requests, now: float) -> tuple[float, dict]:
+        if self.mode == "sequential":
+            return self._execute_sequential(plan, requests, now)
+        return self._execute_fused(plan, requests, now)
+
+    # ------------------------------------------------------------------
+    # fused path: pack the whole plan, launch once
+    # ------------------------------------------------------------------
+
+    def _get_staging(self, t_bucket: int, s_bucket: int,
+                     tq_bucket: int) -> dict:
+        """Preallocated numpy staging buffers, one set per bucket triple."""
+        key = (t_bucket, s_bucket, tq_bucket)
+        st = self._staging.get(key)
+        if st is None:
+            st = {
+                "tokens": np.zeros(t_bucket, np.int32),
+                "positions": np.zeros(t_bucket, np.int32),
+                "tok_pages": np.zeros(t_bucket, np.int32),
+                "tok_slots": np.zeros(t_bucket, np.int32),
+                "tables": np.zeros((s_bucket, self.max_pages), np.int32),
+                "ctx": np.zeros(s_bucket, np.int32),
+                "q_starts": np.zeros(s_bucket, np.int32),
+                "q_lens": np.zeros(s_bucket, np.int32),
+                "pos0": np.zeros(s_bucket, np.int32),
+                "last_idx": np.zeros(s_bucket, np.int32),
+                "seq_gather": np.zeros((s_bucket, tq_bucket), np.int32),
+                "pack_gather": np.zeros(t_bucket, np.int32),
+            }
+            self._staging[key] = st
+        else:
+            for a in st.values():
+                a.fill(0)
+        return st
+
+    def _execute_fused(self, plan: BatchPlan, requests,
+                       now: float) -> tuple[float, dict]:
+        t0 = time.perf_counter()
+        seqs: list[_PackedSeq] = []
+        deferred: set[int] = set()
+        prefill_rids = set()
+        for it in plan.prefill_items:
+            req = requests[it.req_id]
+            prefill_rids.add(it.req_id)
+            if self._extend(it.req_id, it.n_tokens, mirror_cow=False) is None:
+                deferred.add(it.req_id)   # out of KV blocks: defer & retry
+                continue
+            chunk = req.tokens[req.prefilled:req.prefilled + it.n_tokens]
+            seqs.append(_PackedSeq(
+                it.req_id, chunk, pos0=req.prefilled,
+                ctx=req.prefilled + len(chunk),
+                emits=req.prefilled + it.n_tokens == req.prompt_len))
+        for it in plan.decode_items:
+            req = requests[it.req_id]
+            # a single launch computes every emission at once, so it cannot
+            # feed a same-step prefill emission back into a decode item
+            assert it.req_id not in prefill_rids, \
+                "fused step: request cannot both prefill and decode in one plan"
+            if self._extend(it.req_id, 1, mirror_cow=False) is None:
+                deferred.add(it.req_id)
+                continue
+            last = req.generated_tokens[-1] if req.generated_tokens else 0
+            # the fed-back token's position: context counts it as emitted,
+            # but its K/V enters the cache only now
+            seqs.append(_PackedSeq(it.req_id, [last], pos0=req.context - 1,
+                                   ctx=req.context, emits=True))
+        self.last_deferred = frozenset(deferred)
+        self.last_logits = {}
+        if not seqs:
+            return time.perf_counter() - t0, {}
+        self._mirror_cow_batched()
+
+        n_tok = sum(len(s.tokens) for s in seqs)
+        t_bucket = _ladder(n_tok, 4)
+        s_bucket = _ladder(len(seqs), 4)
+        tq_bucket = _bucket(max(len(s.tokens) for s in seqs), 1)
+        st = self._get_staging(t_bucket, s_bucket, tq_bucket)
+        off = 0
+        for i, s in enumerate(seqs):
+            n = len(s.tokens)
+            pos = np.arange(s.pos0, s.pos0 + n, dtype=np.int32)
+            tbl = np.asarray(self.alloc.tables[s.req_id], np.int32)
+            assert len(tbl) <= self.max_pages, "max_pages_per_seq exceeded"
+            st["tokens"][off:off + n] = s.tokens
+            st["positions"][off:off + n] = pos
+            st["tok_pages"][off:off + n] = tbl[pos // self.page_size]
+            st["tok_slots"][off:off + n] = pos % self.page_size
+            st["tables"][i, :len(tbl)] = tbl
+            st["ctx"][i] = s.ctx
+            st["q_starts"][i] = off
+            st["q_lens"][i] = n
+            st["pos0"][i] = s.pos0
+            st["last_idx"][i] = off + n - 1
+            st["seq_gather"][i, :n] = np.arange(off, off + n)
+            st["pack_gather"][off:off + n] = i * tq_bucket + np.arange(n)
+            off += n
+
+        self.n_dispatches += 1
+        self.compile_keys.add(("fused", t_bucket, s_bucket, tq_bucket))
+        self.k_pages, self.v_pages, logits = self._fused_fn(
+            self.k_pages, self.v_pages,
+            jnp.asarray(st["tokens"]), jnp.asarray(st["positions"]),
+            jnp.asarray(st["tok_pages"]), jnp.asarray(st["tok_slots"]),
+            jnp.asarray(st["tables"]), jnp.asarray(st["ctx"]),
+            jnp.asarray(st["q_starts"]), jnp.asarray(st["q_lens"]),
+            jnp.asarray(st["pos0"]), jnp.asarray(st["last_idx"]),
+            jnp.asarray(st["seq_gather"]), jnp.asarray(st["pack_gather"]),
+            t_bucket=t_bucket, s_bucket=s_bucket, tq_bucket=tq_bucket)
+        emitted: dict[int, int] = {}
+        if any(s.emits for s in seqs):
+            # one device→host sync for the whole step
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            lg = np.asarray(logits) if self.capture_logits else None
+            for i, s in enumerate(seqs):
+                if s.emits:
+                    emitted[s.req_id] = int(nxt[i])
+                    if lg is not None:
+                        self.last_logits[s.req_id] = lg[i].copy()
+        return time.perf_counter() - t0, emitted
+
+    # ------------------------------------------------------------------
+    # sequential escape hatch: per-item launches (parity oracle / benches)
+    # ------------------------------------------------------------------
+
+    def _execute_sequential(self, plan: BatchPlan, requests,
+                            now: float) -> tuple[float, dict]:
         t0 = time.perf_counter()
         emitted: dict[int, int] = {}
+        deferred: set[int] = set()
+        self.last_logits = {}
         decode_items = plan.decode_items
         for it in plan.prefill_items:
             req = requests[it.req_id]
             if self._extend(it.req_id, it.n_tokens) is None:
-                continue  # out of KV blocks: defer (scheduler retries)
+                deferred.add(it.req_id)   # out of KV blocks: defer & retry
+                continue
             chunk = req.tokens[req.prefilled:req.prefilled + it.n_tokens]
             n_tok = _bucket(len(chunk), 16)
             toks = jnp.asarray(chunk + [0] * (n_tok - len(chunk)), jnp.int32)
             table = self._table(it.req_id)
+            self.n_dispatches += 1
+            self.compile_keys.add(("chunk", n_tok))
             self.k_pages, self.v_pages, logits = self._chunk_fn(
                 self.k_pages, self.v_pages, toks,
                 jnp.int32(req.prefilled), table, jnp.int32(len(chunk)),
                 n_tok=n_tok)
             if req.prefilled + it.n_tokens == req.prompt_len:
                 emitted[it.req_id] = int(jnp.argmax(logits))
-        if decode_items:
-            bsz = _bucket(len(decode_items), 4)
-            ids = [it.req_id for it in decode_items]
-            for rid in ids:
-                self._extend(rid, 1)
+                if self.capture_logits:
+                    self.last_logits[it.req_id] = np.asarray(logits)
+        ids = []
+        for it in decode_items:
+            if self._extend(it.req_id, 1) is None:
+                deferred.add(it.req_id)
+                continue
+            ids.append(it.req_id)
+        if ids:
+            bsz = _bucket(len(ids), 4)
             toks, pos, tables, ctx = [], [], [], []
             for rid in ids:
                 req = requests[rid]
@@ -220,14 +466,25 @@ class PagedTransformerExecutor:
             pos += [0] * pad
             ctx += [1] * pad
             tables += [tables[0] * 0] * pad
+            self.n_dispatches += 1
+            self.compile_keys.add(("decode", bsz))
             self.k_pages, self.v_pages, logits = self._decode_fn(
                 self.k_pages, self.v_pages,
                 jnp.asarray(toks, jnp.int32), jnp.asarray(pos, jnp.int32),
                 jnp.stack(tables), jnp.asarray(ctx, jnp.int32), bsz=bsz)
-            nxt = jnp.argmax(logits, -1)
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            lg = np.asarray(logits) if self.capture_logits else None
             for i, rid in enumerate(ids):
                 emitted[rid] = int(nxt[i])
+                if lg is not None:
+                    self.last_logits[rid] = lg[i].copy()
+        self.last_deferred = frozenset(deferred)
         return time.perf_counter() - t0, emitted
+
+    def stats(self) -> dict:
+        """Dispatch/compile counters for benches and regression guards."""
+        return {"dispatches": self.n_dispatches,
+                "compile_keys": len(self.compile_keys)}
 
     def _table(self, req_id: int) -> jnp.ndarray:
         tbl = self.alloc.tables.get(req_id, [])

@@ -108,6 +108,18 @@ class BlockAllocator:
         ev, self._cow_events = self._cow_events, []
         return ev
 
+    def pop_cow_events_batched(self) -> tuple[list[int], list[int]]:
+        """Drain every pending COW copy as parallel (old_pages, new_pages)
+        id lists, so the data plane mirrors the whole step in ONE vectorized
+        gather/scatter instead of one device op per event (DESIGN.md §11).
+        Within a drain the lists never chain (a COW target has refcount 1 and
+        is never re-copied), so a single gather from ``old_pages`` is safe."""
+        ev, self._cow_events = self._cow_events, []
+        if not ev:
+            return [], []
+        old, new = zip(*ev)
+        return list(old), list(new)
+
     def context_len(self, req_id: int) -> int:
         return self.lens.get(req_id, 0)
 

@@ -1,12 +1,16 @@
 """Pallas TPU kernels for the serving hot spots (DESIGN.md §4).
 
-paged_attention — ragged paged attention (decode + chunked-prefill; the
-                  FairBatching hybrid-step attention core)
-moe_gmm         — batched expert GEMM (capacity-dispatch MoE FFN)
-mamba2_scan     — SSD chunk scan (mamba2 / zamba2)
+paged_attention        — ragged paged attention (decode + chunked-prefill;
+                         one sequence batch per launch)
+paged_attention_ragged — token-packed ragged paged attention (the fused
+                         hybrid step's single launch, DESIGN.md §11)
+moe_gmm                — batched expert GEMM (capacity-dispatch MoE FFN)
+mamba2_scan            — SSD chunk scan (mamba2 / zamba2)
 
 Each has a pure-jnp oracle in ref.py and a dispatch wrapper in ops.py.
 """
-from .ops import paged_attention_op, moe_gmm_op, mamba_chunk_scan_op
+from .ops import (paged_attention_op, paged_attention_ragged_op, moe_gmm_op,
+                  mamba_chunk_scan_op)
 
-__all__ = ["paged_attention_op", "moe_gmm_op", "mamba_chunk_scan_op"]
+__all__ = ["paged_attention_op", "paged_attention_ragged_op", "moe_gmm_op",
+           "mamba_chunk_scan_op"]

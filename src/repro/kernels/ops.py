@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from . import ref
 from .mamba2_scan import mamba_chunk_scan
 from .moe_gmm import moe_gmm
-from .paged_attention import paged_attention
+from .paged_attention import paged_attention, paged_attention_ragged
 
 
 def _on_tpu() -> bool:
@@ -38,6 +38,26 @@ def paged_attention_op(q, k_pages, v_pages, block_table, context_lens,
                                interpret=True)
     return ref.paged_attention_ref(q, k_pages, v_pages, block_table,
                                    context_lens, q_starts, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl"))
+def paged_attention_ragged_op(q, k_pages, v_pages, block_tables, context_lens,
+                              q_starts, q_lens, pos0, *,
+                              window: Optional[int] = None,
+                              impl: str = "auto"):
+    """Token-packed ragged paged attention — the fused hybrid step's single
+    attention launch (DESIGN.md §11). q: (T, H, D) packed stream."""
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return paged_attention_ragged(q, k_pages, v_pages, block_tables,
+                                      context_lens, q_starts, q_lens, pos0,
+                                      window=window)
+    if impl == "interpret":
+        return paged_attention_ragged(q, k_pages, v_pages, block_tables,
+                                      context_lens, q_starts, q_lens, pos0,
+                                      window=window, interpret=True)
+    return ref.paged_attention_ragged_ref(q, k_pages, v_pages, block_tables,
+                                          context_lens, q_starts, q_lens,
+                                          pos0, window=window)
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))

@@ -74,6 +74,112 @@ def _kernel(block_table, context_lens, q_starts,   # scalar-prefetch refs
         o_ref[...] = out.reshape(1, tq, 1, g, -1).astype(o_ref.dtype)
 
 
+def _ragged_kernel(block_tables, context_lens, q_starts, q_lens, pos0,
+                   q_ref, k_ref, v_ref, o_ref,       # VMEM blocks
+                   m_s, l_s, acc_s,                  # scratch
+                   *, page: int, n_pages: int, n_seq: int, t: int, g: int,
+                   window: Optional[int], scale: float):
+    s_idx = pl.program_id(1)
+    p_idx = pl.program_id(2)
+
+    @pl.when((s_idx == 0) & (p_idx == 0))
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    # early-skip: pad sequences (q_lens == 0) and pages past the sequence's
+    # context contribute nothing — their DMA'd tile is never touched
+    @pl.when((q_lens[s_idx] > 0) & (p_idx * page < context_lens[s_idx]))
+    def _compute():
+        q = q_ref[:, 0, :, :].astype(jnp.float32).reshape(t * g, -1)  # (TG, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)                     # (page, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        tok = jax.lax.broadcasted_iota(jnp.int32, (t * g, page), 0) // g
+        kv_pos = (p_idx * page
+                  + jax.lax.broadcasted_iota(jnp.int32, (t * g, page), 1))
+        q_pos = pos0[s_idx] + tok - q_starts[s_idx]
+        mask = ((tok >= q_starts[s_idx])
+                & (tok < q_starts[s_idx] + q_lens[s_idx])
+                & (kv_pos < context_lens[s_idx]) & (kv_pos <= q_pos))
+        if window is not None:
+            mask &= (q_pos - kv_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when((s_idx == n_seq - 1) & (p_idx == n_pages - 1))
+    def _flush():
+        out = acc_s[...] / jnp.maximum(l_s[...], 1e-30)
+        o_ref[...] = out.reshape(t, 1, g, -1).astype(o_ref.dtype)
+
+
+def paged_attention_ragged(q, k_pages, v_pages, block_tables, context_lens,
+                           q_starts, q_lens, pos0,
+                           *, window: Optional[int] = None,
+                           scale: Optional[float] = None,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Token-packed ragged paged attention: one launch for the whole hybrid
+    step (DESIGN.md §11). q: (T, H, D) packed stream; block_tables:
+    (S, n_pages); context_lens/q_starts/q_lens/pos0: (S,). Returns (T, H, D).
+
+    Grid is (kv_head, seq, page): the online-softmax scratch spans the full
+    packed stream and each (seq, page) step masks to the rows the sequence
+    owns; pages beyond a sequence's context (and pad sequences) early-skip.
+    """
+    t, h, d = q.shape
+    n_seq, n_pages = block_tables.shape
+    _, page, hkv, _ = k_pages.shape
+    g = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qr = q.reshape(t, hkv, g, d)
+
+    grid = (hkv, n_seq, n_pages)
+    kernel = functools.partial(_ragged_kernel, page=page, n_pages=n_pages,
+                               n_seq=n_seq, t=t, g=g, window=window,
+                               scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((t, 1, g, d),
+                             lambda hk, s, p, *_: (0, hk, 0, 0)),
+                pl.BlockSpec((1, page, 1, d),
+                             lambda hk, s, p, bt, cl, qs, ql, p0:
+                                 (bt[s, p], 0, hk, 0)),
+                pl.BlockSpec((1, page, 1, d),
+                             lambda hk, s, p, bt, cl, qs, ql, p0:
+                                 (bt[s, p], 0, hk, 0)),
+            ],
+            out_specs=pl.BlockSpec((t, 1, g, d),
+                                   lambda hk, s, p, *_: (0, hk, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((t * g, 1), jnp.float32),
+                pltpu.VMEM((t * g, 1), jnp.float32),
+                pltpu.VMEM((t * g, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((t, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, context_lens, q_starts, q_lens, pos0, qr, k_pages,
+      v_pages)
+    return out.reshape(t, h, d)
+
+
 def paged_attention(q, k_pages, v_pages, block_table, context_lens, q_starts,
                     *, window: Optional[int] = None,
                     scale: Optional[float] = None,

@@ -55,6 +55,54 @@ def paged_attention_ref(q, k_pages, v_pages, block_table, context_lens,
     return o.reshape(b, tq, h, d).astype(q.dtype)
 
 
+def paged_attention_ragged_ref(q, k_pages, v_pages, block_tables,
+                               context_lens, q_starts, q_lens, pos0,
+                               *, window: Optional[int] = None,
+                               scale: Optional[float] = None) -> jnp.ndarray:
+    """Reference token-packed ragged paged attention (fused hybrid step).
+
+    One packed query stream carries every sequence of the step — prefill
+    chunks and decode tokens alike (DESIGN.md §11):
+
+    q: (T, H, D)           — packed stream; seq s owns rows
+                             [q_starts[s], q_starts[s] + q_lens[s])
+    k_pages/v_pages: (P, page, Hkv, D)
+    block_tables: (S, n_pages) int32 — page ids per sequence
+    context_lens: (S,) int32 — tokens in cache incl. this step's (0 = pad seq)
+    q_starts: (S,) int32 — packed-stream offset of each sequence
+    q_lens: (S,) int32   — query tokens per sequence (0 = pad seq)
+    pos0: (S,) int32     — global position of each sequence's first query
+
+    Rows not owned by any sequence (stream padding) return zeros.
+    """
+    t, h, d = q.shape
+    hkv = k_pages.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    tok = jnp.arange(t)
+    owns = ((tok[None, :] >= q_starts[:, None])
+            & (tok[None, :] < (q_starts + q_lens)[:, None]))    # (S, T)
+    token_seq = jnp.argmax(owns, axis=0)                        # (T,)
+    owned = jnp.any(owns, axis=0)                               # (T,)
+    k = paged_gather(k_pages, block_tables)[token_seq]          # (T, L, Hkv, D)
+    v = paged_gather(v_pages, block_tables)[token_seq]
+    s_len = k.shape[1]
+    q_pos = pos0[token_seq] + tok - q_starts[token_seq]         # (T,)
+    kv_pos = jnp.arange(s_len)[None, :]                         # (1, L)
+    mask = (owned[:, None]
+            & (kv_pos < context_lens[token_seq][:, None])
+            & (kv_pos <= q_pos[:, None]))
+    if window is not None:
+        mask &= (q_pos[:, None] - kv_pos) < window
+    qf = q.reshape(t, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("thgd,tlhd->thgl", qf, k.astype(jnp.float32)) * scale
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, None, None], p, 0.0)
+    o = jnp.einsum("thgl,tlhd->thgd", p, v.astype(jnp.float32))
+    return o.reshape(t, h, d).astype(q.dtype)
+
+
 def moe_gmm_ref(x_groups: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """Batched expert GEMM: (E, C, K) × (E, K, N) → (E, C, N)."""
     return jnp.einsum("eck,ekn->ecn", x_groups.astype(jnp.float32),

@@ -1,13 +1,14 @@
 """Pallas kernels vs jnp oracles — interpret=True shape/dtype sweeps."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.kernels.mamba2_scan import mamba_chunk_scan
 from repro.kernels.moe_gmm import moe_gmm
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import paged_attention, paged_attention_ragged
 from repro.kernels.ref import (mamba_chunk_scan_ref, moe_gmm_ref,
-                               paged_attention_ref)
+                               paged_attention_ragged_ref, paged_attention_ref)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -79,6 +80,111 @@ def test_mamba_chunk_scan_sweep(B, NC, L, H, P, N):
     yr, str_ = mamba_chunk_scan_ref(xdt, a, bm, cm)
     assert float(jnp.abs(y - yr).max()) < 1e-4
     assert float(jnp.abs(jnp.moveaxis(st, -2, -1) - str_).max()) < 1e-4
+
+
+def _packed_layout(q_lens, gap=0):
+    """(q_starts, q_lens, T) for a packed stream with `gap` pad tokens at
+    the end of the stream (and between nothing — packing is contiguous)."""
+    q_starts, off = [], 0
+    for n in q_lens:
+        q_starts.append(off)
+        off += n
+    return q_starts, off + gap
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "q_lens,pos0,H,Hkv,D,page,n_pages,window",
+    [
+        ([5, 1, 3], [10, 20, 0], 4, 2, 32, 16, 3, None),   # mixed chunk+decode
+        ([1, 1, 1, 1], [7, 12, 0, 33], 8, 1, 64, 32, 2, None),  # all decode, MQA
+        ([16], [8], 4, 4, 32, 16, 4, None),                # one prefill chunk
+        ([8, 2, 1], [4, 9, 30], 8, 2, 16, 8, 5, 12),       # SWA mix
+    ])
+def test_paged_attention_ragged_sweep(q_lens, pos0, H, Hkv, D, page, n_pages,
+                                      window, dtype):
+    """Interpret-mode kernel vs ragged oracle vs per-sequence oracle."""
+    P = n_pages * 2 + 1
+    S = len(q_lens)
+    q_starts, T = _packed_layout(q_lens, gap=3)
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (T, H, D)).astype(dtype)
+    kp = jax.random.normal(ks[1], (P, page, Hkv, D)).astype(dtype)
+    vp = jax.random.normal(ks[2], (P, page, Hkv, D)).astype(dtype)
+    bt = jax.random.randint(ks[3], (S, n_pages), 0, P)
+    ctx = jnp.asarray([p + n for p, n in zip(pos0, q_lens)], jnp.int32)
+    ctx = jnp.minimum(ctx, page * n_pages)
+    qs = jnp.asarray(q_starts, jnp.int32)
+    ql = jnp.asarray(q_lens, jnp.int32)
+    p0 = jnp.minimum(jnp.asarray(pos0, jnp.int32), ctx - ql)
+    expect = paged_attention_ragged_ref(q, kp, vp, bt, ctx, qs, ql, p0,
+                                        window=window)
+    # the ragged oracle is the per-sequence oracle applied to each segment
+    for s in range(S):
+        lo, n = q_starts[s], q_lens[s]
+        per_seq = paged_attention_ref(q[lo:lo + n][None], kp, vp, bt[s:s + 1],
+                                      ctx[s:s + 1], p0[s:s + 1], window=window)
+        err = float(jnp.abs(expect[lo:lo + n].astype(jnp.float32)
+                            - per_seq[0].astype(jnp.float32)).max())
+        assert err < _tol(dtype), f"seq {s}: err={err}"
+    assert float(jnp.abs(expect[sum(q_lens):].astype(jnp.float32)).max()) == 0.0
+    out = paged_attention_ragged(q, kp, vp, bt, ctx, qs, ql, p0,
+                                 window=window, interpret=True)
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - expect.astype(jnp.float32)).max())
+    assert err < _tol(dtype), f"err={err}"
+
+
+def test_paged_attention_ragged_hypothesis_layouts():
+    """Random ragged layouts (0 prefill / all decode / single-token chunks /
+    empty pad sequences) agree with the per-sequence oracle."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    page, n_pages, Hkv, G, D, T = 8, 4, 2, 2, 16, 32
+    P = 9
+    ks = jax.random.split(KEY, 3)
+    kp = jax.random.normal(ks[0], (P, page, Hkv, D))
+    vp = jax.random.normal(ks[1], (P, page, Hkv, D))
+    q = jax.random.normal(ks[2], (T, Hkv * G, D))
+
+    @st.composite
+    def layouts(draw):
+        n_seq = draw(st.integers(1, 5))
+        q_lens, total = [], 0
+        for _ in range(n_seq):
+            n = draw(st.integers(0, min(9, T - total)))   # 0 = pad sequence
+            q_lens.append(n)
+            total += n
+        pos0 = [draw(st.integers(0, page * n_pages - max(n, 1)))
+                for n in q_lens]
+        seed = draw(st.integers(0, 2 ** 16))
+        return q_lens, pos0, seed
+
+    @given(layouts())
+    @settings(max_examples=25, deadline=None)
+    def check(layout):
+        q_lens, pos0, seed = layout
+        S = len(q_lens)
+        q_starts, _ = _packed_layout(q_lens)
+        bt = jax.random.randint(jax.random.PRNGKey(seed), (S, n_pages), 0, P)
+        ctx = jnp.asarray([p + n for p, n in zip(pos0, q_lens)], jnp.int32)
+        out = paged_attention_ragged_ref(
+            q, kp, vp, bt, ctx, jnp.asarray(q_starts, jnp.int32),
+            jnp.asarray(q_lens, jnp.int32), jnp.asarray(pos0, jnp.int32))
+        for s in range(S):
+            lo, n = q_starts[s], q_lens[s]
+            if n == 0:
+                continue
+            per_seq = paged_attention_ref(
+                q[lo:lo + n][None], kp, vp, bt[s:s + 1], ctx[s:s + 1],
+                jnp.asarray(pos0[s:s + 1], jnp.int32))
+            assert np.allclose(out[lo:lo + n], per_seq[0], atol=1e-6), \
+                f"seq {s} of {q_lens}"
+        used = sum(q_lens)
+        assert float(jnp.abs(out[used:]).max()) == 0.0
+
+    check()
 
 
 def test_paged_attention_ignores_garbage_beyond_context():
