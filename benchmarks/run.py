@@ -3,13 +3,69 @@
 ``python -m benchmarks.run [--full] [--only NAME]``
 
 Prints one CSV line per bench: ``name,us_per_call,derived`` (derived =
-headline metric), followed by detail rows.
+headline metric), followed by detail rows. Full row dumps land in
+``experiments/bench_results.json``; additionally every bench writes a
+compact repo-root ``BENCH_<name>.json`` perf-trajectory summary (median
+TTFT/TPOT percentiles, steps/s, dispatch counts — whatever numeric columns
+its rows carry) so the trajectory of headline numbers is diffable across
+commits without digging into the experiments blob.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import time
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# row columns that make it into the BENCH_<name>.json trajectory summary
+_TRAJECTORY_KEYS = (
+    "ttft_p50", "ttft_p95", "ttft_p99", "tpot_p50", "tpot_p95", "tpot_p99",
+    "ttft_p50_ms", "ttft_p99_ms", "tpot_p50_ms", "tpot_p99_ms",
+    "sched_delay_p99_ms", "steps_per_s", "steps_per_dispatch", "dispatches",
+    "steps", "slo_attainment", "effective_rps", "peak_effective_rps",
+    "speedup", "dispatches_per_step", "dispatch_ratio", "step_ms",
+    "hit_rate", "host_overhead_s",
+)
+
+
+def write_bench_summary(name: str, rows: list[dict],
+                        headline: str = "") -> pathlib.Path:
+    """Write the repo-root ``BENCH_<name>.json`` perf-trajectory summary.
+
+    Per numeric trajectory column present in ``rows``: min/median/max over
+    the rows that carry it, plus a per-mode/system breakdown when rows are
+    labeled — small, stable, and diffable across commits.
+    """
+    import statistics
+
+    def numeric(v):
+        return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+    metrics = {}
+    for key in _TRAJECTORY_KEYS:
+        vals = [r[key] for r in rows if numeric(r.get(key))]
+        if vals:
+            metrics[key] = {"min": min(vals),
+                            "median": statistics.median(vals),
+                            "max": max(vals)}
+    by_label = {}
+    for r in rows:
+        label = r.get("mode") or r.get("system")
+        if not label:
+            continue
+        entry = by_label.setdefault(str(label), {})
+        for key in _TRAJECTORY_KEYS:
+            if numeric(r.get(key)) and key not in entry:
+                entry[key] = r[key]
+    out = {"bench": name, "n_rows": len(rows), "headline": headline,
+           "metrics": metrics}
+    if by_label:
+        out["by_label"] = by_label
+    path = _REPO_ROOT / f"BENCH_{name}.json"
+    path.write_text(json.dumps(out, indent=1, default=str) + "\n")
+    return path
 
 
 def _headline(name: str, rows: list[dict]) -> str:
@@ -83,6 +139,16 @@ def _headline(name: str, rows: list[dict]) -> str:
                     if r["mode"] == "fused"}
             return (f"fused_speedup {sp} dispatches/step "
                     f"{sorted(set(disp.values()))}")
+        if name == "async_pipeline":
+            by = {r["mode"]: r for r in rows}
+            seq, pipe = by["sequential"], by["pipelined"]
+            multi = by["multi-step"]
+            return (f"steps/s seq={seq['steps_per_s']} "
+                    f"pipe={pipe['steps_per_s']} "
+                    f"multi={multi['steps_per_s']} | dispatches "
+                    f"{seq['dispatches']} -> {multi['dispatches']} "
+                    f"(real h8: {by['real-h8']['steps_per_dispatch']} "
+                    f"steps/dispatch)")
     except (StopIteration, KeyError, ZeroDivisionError):
         pass
     return f"rows={len(rows)}"
@@ -96,10 +162,10 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (breakdown_bench, cluster_bench, cost_model_bench,
-                   goodput_bench, hybrid_step_bench, latency_bench,
-                   prefix_cache_bench, roofline_report, slo_grid_bench,
-                   unfairness_bench)
+    from . import (async_pipeline_bench, breakdown_bench, cluster_bench,
+                   cost_model_bench, goodput_bench, hybrid_step_bench,
+                   latency_bench, prefix_cache_bench, roofline_report,
+                   slo_grid_bench, unfairness_bench)
     benches = {
         "cost_model": cost_model_bench.run,      # paper §3.2 accuracy claim
         "unfairness": unfairness_bench.run,      # Fig 1/2
@@ -110,6 +176,7 @@ def main() -> None:
         "cluster": cluster_bench.run,            # Fig 8
         "prefix_cache": prefix_cache_bench.run,  # DESIGN.md §10 reuse
         "hybrid_step": hybrid_step_bench.run,    # DESIGN.md §11 fused step
+        "async_pipeline": async_pipeline_bench.run,  # DESIGN.md §12
         "roofline": roofline_report.run,         # deliverable (g)
     }
     all_rows = {}
@@ -120,9 +187,11 @@ def main() -> None:
         rows = fn(quick=quick)
         dt_us = (time.time() - t0) * 1e6
         all_rows[name] = rows
-        print(f"{name},{dt_us:.0f},{_headline(name, rows)}")
+        headline = _headline(name, rows)
+        print(f"{name},{dt_us:.0f},{headline}")
         for r in rows:
             print("  " + json.dumps(r))
+        write_bench_summary(name, rows, headline)
     if args.json_out:
         import os
         os.makedirs(os.path.dirname(args.json_out), exist_ok=True)

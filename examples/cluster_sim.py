@@ -45,6 +45,29 @@ def main() -> None:
     show("PAB-LB + straggler(3x rank0)", lb="pab", admission=True,
          straggler_ranks={0: 3.0})
 
+    # async pipelined control plane (DESIGN.md §12): with a per-dispatch
+    # host cost, depth-2 forming hides the bubble and slack-bounded
+    # multi-step commitment cuts dispatches — per-request scheduling delay
+    # and the host-overhead breakdown come from the same summary
+    print("-- async control plane (4ms host overhead per dispatch) --")
+
+    def show_async(name: str, **kw):
+        res = replay(trace, scheduler="fairbatching", n_ranks=args.dp,
+                     true_model=hw.model(), est_model=initial_estimate(hw),
+                     seed=args.seed, lb="pab", admission=True,
+                     host_overhead=0.004, **kw)
+        s = res.summary
+        print(f"{name:32s} slo={s['slo_attainment']:.3f} "
+              f"tpot_p99={s['tpot_p99']*1e3:.1f}ms "
+              f"sched_delay_p99={s['sched_delay_p99']*1e3:.0f}ms "
+              f"steps={s['engine_steps']} dispatches={s['dispatches']} "
+              f"host={s['host_overhead_s']:.1f}s")
+
+    show_async("sequential engine")
+    show_async("pipelined (depth 2)", pipeline_depth=2)
+    show_async("pipelined + commit_horizon 16", pipeline_depth=2,
+               commit_horizon=16, predicted_prefill_tokens=512)
+
     print("-- failure + elastic rejoin (PAB-LB) --")
     show("kill rank0 @30%, rejoin @60%", lb="pab", admission=True,
          failures=[(args.duration * 0.3, 0)],

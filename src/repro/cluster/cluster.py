@@ -62,6 +62,13 @@ class ClusterConfig:
     # ``prefix_block`` tokens; 0 disables caching (bit-identical to no cache)
     prefix_cache_pages: int = 0
     prefix_block: int = 128
+    # async pipelined control plane (DESIGN.md §12): in-flight depth,
+    # host-side form/dispatch cost, and the multi-step decode commitment
+    # cap; defaults reproduce the synchronous engine bit for bit
+    pipeline_depth: int = 1
+    host_overhead: float = 0.0
+    commit_horizon: int = 1
+    predicted_prefill_tokens: int = 0
     seed: int = 0
 
 
@@ -101,10 +108,15 @@ class Cluster:
         cache = (PrefixCache(cfg.prefix_cache_pages,
                              block_size=cfg.prefix_block)
                  if cfg.prefix_cache_pages > 0 else None)
+        ecfg = EngineConfig(
+            cfg.ttft_slo, cfg.tpot_slo,
+            pipeline_depth=cfg.pipeline_depth,
+            host_overhead=cfg.host_overhead,
+            commit_horizon=cfg.commit_horizon,
+            predicted_prefill_tokens=cfg.predicted_prefill_tokens)
         self.engines[rank] = Engine(
             sched, SimExecutor(true, seed=cfg.seed * 131 + rank),
-            EngineConfig(cfg.ttft_slo, cfg.tpot_slo), admission=adm,
-            rank=rank, prefix_cache=cache)
+            ecfg, admission=adm, rank=rank, prefix_cache=cache)
 
     def schedule_failure(self, t: float, rank: int) -> None:
         self.failures.append((t, rank))
@@ -124,6 +136,12 @@ class Cluster:
         running = len(eng.active) - waiting
         metrics = {"pab": eng.pab(), "waiting": waiting,
                    "running": running + len(eng.pending)}
+        # control-plane breakdown rides the report tick (DESIGN.md §12):
+        # dispatch count + host-overhead seconds, and the mean scheduling
+        # delay over finished requests — a router can spot a rank whose
+        # control plane (not its FLOPs) is the bottleneck
+        metrics.update(eng.host_stats())
+        metrics["sched_delay_mean"] = eng.sched_delay_mean()
         if eng.prefix_cache is not None:
             # cache summary rides the existing report tick (DESIGN.md §10):
             # token hit counters plus the prefix-hash digest CacheAwareLB
@@ -219,7 +237,12 @@ class Cluster:
 
     def summary(self) -> dict:
         dur = max((e.now for e in self.engines.values()), default=self.now)
-        out = summarize(self.done, duration=max(dur, 1e-9))
+        # control-plane totals across live ranks (DESIGN.md §12)
+        host: dict[str, float] = {}
+        for e in self.engines.values():
+            for k, v in e.host_stats().items():
+                host[k] = host.get(k, 0) + v
+        out = summarize(self.done, duration=max(dur, 1e-9), host=host)
         # engine-side cache counters (lookup-weighted, across live ranks) —
         # unlike the per-request view above these include evictions/inserts
         stats = [e.cache_stats() for e in self.engines.values()

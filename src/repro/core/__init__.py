@@ -6,7 +6,7 @@ from .types import SchedTask, TaskKind, BatchItem, BatchPlan
 from .slo import token_deadline, request_deadline, slack, attainment
 from .cost_model import (LinearCostModel, TokenCostModel, PaddedCostModel,
                          RecursiveLeastSquares, fit_linear, default_buckets)
-from .capacity import init_time_budget, min_tpot_slo
+from .capacity import commit_horizon, init_time_budget, min_tpot_slo
 from .batch_formation import FormationConfig, classify, form_batch
 from .pab import prefill_admission_budget, PABAdmissionController
 from .schedulers import (Scheduler, FairBatchingScheduler, SarathiScheduler,
@@ -17,7 +17,7 @@ __all__ = [
     "token_deadline", "request_deadline", "slack", "attainment",
     "LinearCostModel", "TokenCostModel", "PaddedCostModel",
     "RecursiveLeastSquares", "fit_linear", "default_buckets",
-    "init_time_budget", "min_tpot_slo",
+    "commit_horizon", "init_time_budget", "min_tpot_slo",
     "FormationConfig", "classify", "form_batch",
     "prefill_admission_budget", "PABAdmissionController",
     "Scheduler", "FairBatchingScheduler", "SarathiScheduler",

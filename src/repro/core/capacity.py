@@ -15,6 +15,14 @@ Notes vs the paper:
     divergence is flagged here and covered by a unit test.
   * With no active decode tasks there is no TPOT bound; capacity is limited
     only by the engine's largest compiled step (``max_time_budget``).
+
+``commit_horizon`` extends the same slack arithmetic from one step to a
+*run* of steps: how many consecutive decode steps can be committed as a
+single device dispatch before any active envelope — or the TTFT of a
+queued/predicted prefill — would be violated (DESIGN.md §12). It is the
+paper-native answer to multi-step decode: naive N-step commitment re-creates
+the decode-prioritizing unfairness of Fig 1, while slack-bounding it keeps
+every envelope (and the PAB admission promise) intact.
 """
 from __future__ import annotations
 
@@ -22,6 +30,7 @@ import math
 from typing import Sequence
 
 from . import slo
+from .cost_model import LinearCostModel
 from .types import SchedTask
 
 
@@ -39,3 +48,58 @@ def min_tpot_slo(tasks: Sequence[SchedTask]) -> float:
     if not tasks:
         return math.inf
     return min(t.tpot_slo for t in tasks)
+
+
+def commit_horizon(tasks: Sequence[SchedTask], now: float,
+                   model: LinearCostModel, *, max_horizon: int,
+                   ttft_slo: float, predicted_prefill_tokens: int = 0,
+                   safety: float = 1.0) -> int:
+    """Safe multi-step decode commitment depth (DESIGN.md §12).
+
+    Returns the largest ``H <= max_horizon`` such that committing the
+    current all-decode batch for H consecutive steps in ONE dispatch keeps
+    every constraint that single-step FairBatching enforces per step:
+
+    * **Envelopes** (paper §3.1): decode task *i*'s h-th committed token is
+      emitted at ``now + sum_{k<=h} dt_k`` and must land inside its envelope,
+      i.e. within ``slack_i(now) + (h-1)·tpot_slo_i`` — each task's OWN
+      TPOT SLO, so heterogeneous tiers bound the horizon individually.
+      Per-step times come from the calibrated linear model with contexts
+      grown by one token per task per committed step (a pessimistic
+      overestimate for sliding-window archs, which only shrinks H — never
+      busts an envelope).
+    * **Queued prefill TTFT**: any prefill task present in ``tasks`` means
+      the scheduler owes it chunks *now* — committing past it would starve
+      exactly the task FairBatching protects, so the horizon is 1.
+    * **Predicted prefill TTFT** (PAB-style reserve, §3.4): while H steps
+      run the engine is unresponsive; a prompt of ``predicted_prefill_tokens``
+      arriving right after dispatch must still make its TTFT SLO:
+      ``sum dt_k + prefill_time <= ttft_slo``. Zero disables the reserve.
+
+    ``safety`` mirrors ``FormationConfig.safety``: constraints are checked
+    against ``safety × allowance`` to absorb execution jitter.
+    """
+    if max_horizon <= 1 or not tasks:
+        return 1
+    decodes = [t for t in tasks if t.is_decode]
+    if len(decodes) != len(tasks):
+        return 1                      # a queued prefill is owed service now
+    n = len(decodes)
+    ctx0 = sum(t.cost_context() for t in decodes)
+    slacks = [slo.slack(t, now) for t in decodes]
+    tpots = [t.tpot_slo for t in decodes]
+    reserve = (model.step_time(predicted_prefill_tokens, 0)
+               if predicted_prefill_tokens > 0 else 0.0)
+    cum = 0.0
+    h = 0
+    while h < max_horizon:
+        # contexts grow by one token per decode per committed step
+        dt = model.step_time(n, ctx0 + h * n)
+        cum += dt
+        for s, tp in zip(slacks, tpots):
+            if cum > safety * (s + h * tp):
+                return max(h, 1)      # h-th token would leave its envelope
+        if reserve and cum + reserve > safety * ttft_slo:
+            return max(h, 1)          # would bust a predicted prefill's TTFT
+        h += 1
+    return h

@@ -1,4 +1,4 @@
-"""Continuous-batching inference engine with pluggable step scheduler.
+"""Continuous-batching inference engine with an async pipelined control plane.
 
 The paper's control loop: each step, build SchedTask views of every active
 request, ask the scheduler (FairBatching / Sarathi / vLLM-vanilla) for a
@@ -11,6 +11,19 @@ Steps are split into two phases so the engine can be driven either lock-step
 ``begin_step()`` forms and launches a batch, returning the in-flight step;
 ``complete_step()`` applies its effects at the completion timestamp.
 
+Beyond the lock-step loop the engine runs an *asynchronous pipelined control
+plane* (DESIGN.md §12): with ``pipeline_depth >= 2``, ``begin_step`` may be
+called while earlier steps are still in flight — batch N+1 is formed against
+*projected* post-step state (speculative prefilled/generated advances,
+predicted completions, reserved KV pages) so the host's scheduling work
+overlaps device execution instead of landing on TBT. ``complete_step``
+reconciles projections against actual outcomes and rolls back any queued
+step whose speculation diverged. Orthogonally, ``commit_horizon`` steps of
+pure decode can be committed as ONE dispatch (slack-bounded multi-step
+decode, ``core.capacity.commit_horizon``); every internal step still gets
+its own StepRecord/observation so SLO accounting stays bit-identical to
+lock-step.
+
 Cluster integration (§3.4): ``pab()`` exposes the Prefill Admission Budget;
 ``snapshot()/restore()`` round-trip the host-side engine state for fault
 tolerance (KV is recomputed via prefix re-prefill on restore — DESIGN.md §7).
@@ -19,9 +32,9 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import math
 from typing import Optional
 
+from ..core import capacity
 from ..core.cost_model import LinearCostModel
 from ..core.pab import PABAdmissionController, prefill_admission_budget
 from ..core.schedulers import Scheduler
@@ -36,6 +49,21 @@ class EngineConfig:
     tpot_slo: float = 0.05
     idle_step: float = 0.002        # clock hop when nothing is runnable
     max_steps: int = 2_000_000
+    # -- async control plane (DESIGN.md §12) ---------------------------
+    # max steps in flight at once; 1 = the classic synchronous engine,
+    # >=2 = batch N+1 is formed against projected state while N runs
+    pipeline_depth: int = 1
+    # host-side cost of forming + dispatching one batch (seconds). The
+    # sequential engine pays it as a bubble between steps; the pipelined
+    # engine hides it under the previous step's device time.
+    host_overhead: float = 0.0
+    # max decode steps committed as ONE dispatch; the actual horizon is the
+    # slack-bounded capacity.commit_horizon(), never this cap alone
+    commit_horizon: int = 1
+    # PAB-style reserve for the horizon guard: a prompt of this many tokens
+    # arriving right after a multi-step dispatch must still make its TTFT
+    # SLO. 0 disables the reserve (envelopes alone bound the horizon).
+    predicted_prefill_tokens: int = 0
 
 
 @dataclasses.dataclass
@@ -49,21 +77,53 @@ class StepRecord:
     predicted: float
 
 
+@dataclasses.dataclass(frozen=True)
+class InternalStep:
+    """One scheduler-step worth of work inside a dispatch (DESIGN.md §12).
+
+    A single-step dispatch has exactly one; a committed decode horizon of H
+    has H — each with its own duration, executed-token/context totals (for
+    the §3.2 observation) and the tokens it emits.
+    """
+    dt: float
+    new_tokens: int               # executed tokens (deferred items excluded)
+    context: int                  # cost-context total at this internal step
+    predicted: float
+    emitted: dict                 # req_id -> output token id (real mode)
+
+
 @dataclasses.dataclass
 class InflightStep:
-    """A launched-but-uncompleted batch (between begin_step and complete_step)."""
+    """A launched-but-uncompleted dispatch (between begin and complete)."""
     plan: BatchPlan
-    exec_time: float
-    emitted: dict
     t_start: float
-    total_ctx: int
-    # req_ids the executor could not serve this step (out of KV blocks):
+    t_form: float                 # host time the batch was formed
+    internal: tuple               # tuple[InternalStep, ...]; len == horizon
+    # req_ids the executor could not serve this dispatch (out of KV blocks):
     # their progress is NOT advanced, so the scheduler retries them
     deferred: frozenset = frozenset()
+    # scheduler.observe already applied at begin time (async forming keeps
+    # the calibration in lock-step order even before completion)
+    observed: bool = False
+
+    @property
+    def horizon(self) -> int:
+        return len(self.internal)
+
+    @property
+    def exec_time(self) -> float:
+        return sum(s.dt for s in self.internal)
 
     @property
     def t_end(self) -> float:
-        return self.t_start + self.exec_time
+        # accumulate exactly like the per-internal-step application loops
+        # do (t += dt, left to right): the dispatch boundary must land on
+        # the same float as the last internal step's finish time, or a
+        # 1-ulp drift would break bit-parity with the lock-step engine
+        t = self.t_start
+        for s in self.internal:
+            t += s.dt
+        return t
 
 
 class Engine:
@@ -87,8 +147,30 @@ class Engine:
         self.done: list[RequestMetrics] = []
         self.steps: list[StepRecord] = []
         self.busy_time = 0.0
-        self.inflight: Optional[InflightStep] = None
-        self._stalled_steps = 0     # consecutive fully-deferred steps
+        # launched-but-uncompleted dispatches, oldest first (DESIGN.md §12);
+        # depth 1 makes this the old single InflightStep slot
+        self.inflight_q: list[InflightStep] = []
+        self._stalled_steps = 0     # consecutive fully-deferred dispatches
+        # control-plane accounting (DESIGN.md §12): device dispatches,
+        # host-side form/dispatch time, speculation rollbacks
+        self.n_dispatches = 0
+        self.host_time = 0.0
+        self.rollbacks = 0
+        # earliest arrival the *driver* knows about that has not reached
+        # ``pending`` yet (the event-driven replay routes arrivals at their
+        # event time, so mid-commitment the engine would otherwise be blind
+        # to them — lock-step submits everything upfront). Multi-step
+        # commitment must stop at the next arrival exactly like lock-step
+        # re-forming would, so the replay loop keeps this fresh (§12).
+        self.arrival_hint: float = float("inf")
+        # O(1) running aggregate for the LB report tick (DESIGN.md §12)
+        self._delay_sum = 0.0
+        self._delay_n = 0
+
+    @property
+    def inflight(self) -> Optional[InflightStep]:
+        """Oldest in-flight dispatch (None when the pipeline is empty)."""
+        return self.inflight_q[0] if self.inflight_q else None
 
     # ------------------------------------------------------------------
 
@@ -109,8 +191,9 @@ class Engine:
                     req.cached_context = cached
                     req.prefilled = cached
             if self.admission is not None:
-                tasks = [self.requests[i].to_sched_task()
-                         for i in self.active]
+                # admission sees *projected* load: with steps in flight the
+                # committed Request state understates what the node owes
+                tasks = self._projected_tasks()
                 if not self.admission.admit(req.prompt_len, tasks, self.now,
                                             self.sched.model,
                                             ttft_slo=req.ttft_slo,
@@ -119,7 +202,7 @@ class Engine:
                     req.state = RequestState.REJECTED
                     if self.prefix_cache is not None and req.tokens:
                         self.prefix_cache.abort_request(req.req_id)
-                    self.done.append(measure(req))
+                    self._record_done(req)
                     continue
             self.active.append(req.req_id)
 
@@ -130,67 +213,287 @@ class Engine:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.active or self.pending or self.inflight)
+        return bool(self.active or self.pending or self.inflight_q)
+
+    def host_stats(self) -> dict:
+        """Control-plane counters for metrics / LB reports (DESIGN.md §12)."""
+        return {"dispatches": self.n_dispatches,
+                "host_overhead_s": self.host_time,
+                "engine_steps": len(self.steps),
+                "rollbacks": self.rollbacks}
+
+    def sched_delay_mean(self) -> float:
+        """Mean arrival→first-service delay over finished requests, O(1)."""
+        return self._delay_sum / self._delay_n if self._delay_n else 0.0
+
+    def _record_done(self, req: Request) -> None:
+        m = measure(req)
+        if m.sched_delay is not None:
+            self._delay_sum += m.sched_delay
+            self._delay_n += 1
+        self.done.append(m)
+
+    # ------------------------------------------------------------------
+    # speculative projection (DESIGN.md §12): the state the world will be
+    # in once every in-flight dispatch lands as launched
+    # ------------------------------------------------------------------
+
+    def _projected_requests(self) -> tuple[dict, list[int]]:
+        """(requests-view, active-ids) with every in-flight dispatch applied.
+
+        With an empty pipeline this is the committed state itself (no
+        copies). Otherwise active requests are speculatively advanced by
+        each in-flight plan's non-deferred grants — including predicted
+        completions, which leave the projected active set.
+        """
+        if not self.inflight_q:
+            return self.requests, list(self.active)
+        proj = {rid: self.requests[rid].speculative_copy()
+                for rid in self.active}
+        active = list(self.active)
+        for inf in self.inflight_q:
+            t = inf.t_start
+            for k, ist in enumerate(inf.internal):
+                t += ist.dt
+                for it in inf.plan.items:
+                    if it.req_id in inf.deferred or it.req_id not in proj:
+                        continue
+                    if k > 0 and it.kind is TaskKind.PREFILL:
+                        continue      # horizons >1 are pure decode
+                    req = proj[it.req_id]
+                    if req.state is RequestState.FINISHED:
+                        continue
+                    tok = ist.emitted.get(it.req_id)
+                    if tok is not None:
+                        req.generated_tokens.append(tok)
+                    req.advance(it.n_tokens if k == 0 else 1, t)
+                    if req.state is RequestState.FINISHED:
+                        active.remove(it.req_id)   # predicted completion
+        return proj, active
+
+    def _projected_tasks(self) -> list:
+        proj, active = self._projected_requests()
+        return [proj[i].to_sched_task() for i in active]
 
     # ------------------------------------------------------------------
     # two-phase step: begin (form + launch) / complete (apply at t_end)
     # ------------------------------------------------------------------
 
     def begin_step(self, now: Optional[float] = None) -> Optional[InflightStep]:
-        """Admit arrivals, form a batch, and launch it at ``max(self.now, now)``.
+        """Admit arrivals, form a batch, and launch it.
 
-        Returns the in-flight step (None if nothing is runnable). The caller
-        owns the clock: effects apply when it calls ``complete_step()``, at
-        which point ``self.now`` jumps to the step's completion time. The
-        event-driven simulator (DESIGN.md §8) schedules that call as a
-        STEP_DONE event; ``step()`` below does it immediately (lock-step).
+        Returns the in-flight dispatch (None if nothing is runnable). The
+        caller owns the clock: effects apply when it calls
+        ``complete_step()``. With an empty pipeline the launch happens at
+        ``self.now + host_overhead``; with steps in flight (depth >= 2) the
+        plan is formed against *projected* state and the launch lands
+        back-to-back at the previous dispatch's completion — the host
+        overhead is hidden under device time (DESIGN.md §12). The
+        event-driven simulator schedules completion as a STEP_DONE event
+        and forming as a STEP_FORM event; ``step()`` below stays lock-step.
         """
-        assert self.inflight is None, "previous step not completed"
+        depth = max(self.cfg.pipeline_depth, 1)
+        assert len(self.inflight_q) < depth, "pipeline full"
         if now is not None:
             self.now = max(self.now, now)
         self._admit_arrivals()
-        if not self.active:
+        proj, active_proj = self._projected_requests()
+        if not active_proj:
             return None
-        tasks = [self.requests[i].to_sched_task() for i in self.active]
-        plan = self.sched.schedule(self.now, tasks)
+        t_form = self.now
+        t_launch = t_form + self.cfg.host_overhead
+        if self.inflight_q:
+            t_launch = max(t_launch, self.inflight_q[-1].t_end)
+        tasks = [proj[i].to_sched_task() for i in active_proj]
+        plan = self.sched.schedule(t_launch, tasks)
         if not plan.items:
             return None
-        exec_time, emitted = self.executor.execute(plan, self.requests,
-                                                   self.now)
+
+        horizon = self._plan_horizon(plan, tasks, active_proj, proj, t_launch)
+        if horizon > 1 and hasattr(self.executor, "execute_multi"):
+            internal, deferred = self._execute_multi(plan, proj, t_launch,
+                                                     horizon)
+        elif horizon > 1:
+            internal, deferred = self._run_horizon_sim(plan, proj, t_launch,
+                                                       horizon)
+        else:
+            internal, deferred = self._execute_single(plan, proj, tasks,
+                                                      t_launch)
+
+        observed = horizon > 1 and not hasattr(self.executor, "execute_multi")
+        if depth > 1 and not observed:
+            # async forming: feed the calibration now so the next plan —
+            # formed before this dispatch completes — sees the same model
+            # state the lock-step engine would (DESIGN.md §12)
+            for ist in internal:
+                self.sched.observe(ist.new_tokens, ist.context, ist.dt)
+            observed = True
+
+        for it in plan.items:
+            if it.req_id not in deferred:
+                req = self.requests[it.req_id]
+                if req.first_scheduled is None:
+                    req.first_scheduled = t_launch
+        self.n_dispatches += 1
+        self.host_time += self.cfg.host_overhead
+        inf = InflightStep(plan, t_launch, t_form, tuple(internal), deferred,
+                           observed)
+        self.inflight_q.append(inf)
+        return inf
+
+    def _plan_horizon(self, plan: BatchPlan, tasks, active_proj, proj,
+                      t_launch: float) -> int:
+        """Slack-bounded decode commitment depth for this plan (§12)."""
+        if self.cfg.commit_horizon <= 1:
+            return 1
+        ids = {it.req_id for it in plan.items}
+        if (any(it.kind is not TaskKind.DECODE for it in plan.items)
+                or ids != set(active_proj)):
+            return 1      # only an all-active pure-decode batch repeats
+        h = capacity.commit_horizon(
+            tasks, t_launch, self.sched.model,
+            max_horizon=self.cfg.commit_horizon,
+            ttft_slo=self.cfg.ttft_slo,
+            predicted_prefill_tokens=self.cfg.predicted_prefill_tokens)
+        # nobody may finish mid-horizon: a completion changes the batch
+        h = min(h, min(proj[i].max_new_tokens - proj[i].generated
+                       for i in ids))
+        if h > 1 and hasattr(self.executor, "execute_multi"):
+            # real data plane: the dispatch is indivisible, so pre-trim at
+            # the next known arrival using *predicted* step times (the sim
+            # path trims exactly, step by step, inside _run_horizon_sim)
+            nxt = min(self.pending[0].arrival if self.pending else
+                      float("inf"), self.arrival_hint)
+            if nxt < float("inf"):
+                n = len(ids)
+                ctx0 = sum(t.cost_context() for t in tasks)
+                cum, fit = 0.0, 0
+                while fit < h:
+                    cum += self.sched.model.step_time(n, ctx0 + fit * n)
+                    if t_launch + cum > nxt:
+                        break
+                    fit += 1
+                h = min(h, max(fit, 1))
+        return max(h, 1)
+
+    def _execute_single(self, plan: BatchPlan, proj, tasks,
+                        t_launch: float) -> tuple[list, frozenset]:
+        exec_time, emitted = self.executor.execute(plan, proj, t_launch)
         deferred = frozenset(getattr(self.executor, "last_deferred", ()))
         task_of = {t.req_id: t for t in tasks}
-        total_ctx = sum(task_of[it.req_id].cost_context()
-                        for it in plan.items if it.req_id not in deferred)
-        self.inflight = InflightStep(plan, exec_time, emitted, self.now,
-                                     total_ctx, deferred)
-        return self.inflight
+        nt = sum(it.n_tokens for it in plan.items
+                 if it.req_id not in deferred)
+        ctx = sum(task_of[it.req_id].cost_context()
+                  for it in plan.items if it.req_id not in deferred)
+        return [InternalStep(exec_time, nt, ctx, plan.predicted_time,
+                             dict(emitted))], deferred
+
+    def _run_horizon_sim(self, plan: BatchPlan, proj, t_launch: float,
+                         horizon: int) -> tuple[list, frozenset]:
+        """Commit up to ``horizon`` decode steps against the sim executor.
+
+        The sim is the oracle world model, so divergence is detectable at
+        internal-step granularity: after each committed step the engine
+        re-checks what lock-step would have done next (an arrival landing,
+        or the scheduler re-forming a different batch) and truncates the
+        horizon there. That is what pins the parity suite bit-for-bit: the
+        committed run IS the lock-step run, minus the per-step host
+        dispatches (``n_dispatches`` counts 1 for the whole run).
+        """
+        order = [it.req_id for it in plan.items]
+        local = {rid: proj[rid].speculative_copy() for rid in order}
+        internal: list[InternalStep] = []
+        cur = plan
+        t = t_launch
+        for k in range(horizon):
+            dt, emitted = self.executor.execute(cur, local, t)
+            nt = cur.total_new_tokens
+            ctx = sum(local[it.req_id].to_sched_task().cost_context()
+                      for it in cur.items)
+            internal.append(InternalStep(dt, nt, ctx, cur.predicted_time,
+                                         dict(emitted)))
+            self.sched.observe(nt, ctx, dt)
+            t += dt
+            for it in cur.items:
+                tok = emitted.get(it.req_id)
+                if tok is not None:
+                    local[it.req_id].generated_tokens.append(tok)
+                local[it.req_id].advance(1, t)
+            if k == horizon - 1:
+                break
+            if ((self.pending and self.pending[0].arrival <= t)
+                    or self.arrival_hint <= t):
+                break                 # lock-step would admit it next step
+            nxt = self.sched.schedule(t, [local[r].to_sched_task()
+                                          for r in order])
+            if ({it.req_id for it in nxt.items} != set(order)
+                    or any(it.kind is not TaskKind.DECODE or it.n_tokens != 1
+                           for it in nxt.items)):
+                break                 # scheduler would re-form the batch
+            cur = nxt
+        return internal, frozenset()
+
+    def _execute_multi(self, plan: BatchPlan, proj, t_launch: float,
+                       horizon: int) -> tuple[list, frozenset]:
+        """Real data plane: ONE device dispatch for the whole horizon."""
+        steps, emitted_seq = self.executor.execute_multi(plan, proj,
+                                                         t_launch, horizon)
+        deferred = frozenset(getattr(self.executor, "last_deferred", ()))
+        internal = [InternalStep(dt, nt, ctx, plan.predicted_time,
+                                 {rid: toks[k]
+                                  for rid, toks in emitted_seq.items()
+                                  if k < len(toks)})
+                    for k, (dt, nt, ctx) in enumerate(steps)]
+        return internal, deferred
 
     def complete_step(self) -> StepRecord:
-        """Apply the in-flight step's effects; advance the clock to its end."""
-        inf = self.inflight
-        assert inf is not None, "no step in flight"
-        self.inflight = None
-        plan, finish = inf.plan, inf.t_end
+        """Apply the oldest in-flight dispatch; advance the clock to its end.
+
+        Returns the record of the dispatch's LAST internal step (every
+        internal step still lands in ``self.steps`` individually, so step
+        counts and SLO accounting match the lock-step engine exactly).
+        """
+        assert self.inflight_q, "no step in flight"
+        inf = self.inflight_q.pop(0)
+        plan = inf.plan
         executed = 0
-        for it in plan.items:
-            if it.req_id in inf.deferred:
-                continue              # executor deferred it (out of KV blocks)
-            executed += it.n_tokens
-            req = self.requests[it.req_id]
-            if inf.emitted and it.req_id in inf.emitted:
-                req.generated_tokens.append(inf.emitted[it.req_id])
-            was_prefill = req.state in (RequestState.QUEUED,
-                                        RequestState.PREFILL)
-            req.advance(it.n_tokens, finish)
-            if self.prefix_cache is not None and req.tokens and was_prefill:
-                self.prefix_cache.on_prefill_progress(req.req_id, it.n_tokens)
-                if req.prefilled == req.prompt_len:
-                    # prefill complete: publish the prompt's full-block pages
-                    # so concurrent identical prefixes hit (DESIGN.md §10)
-                    self.prefix_cache.insert_request(req.req_id, req.tokens,
-                                                     finish)
-            if req.state is RequestState.FINISHED:
-                self._finish(req)
+        t = inf.t_start
+        rec = None
+        for k, ist in enumerate(inf.internal):
+            t += ist.dt
+            ran_p = ran_d = 0
+            for it in plan.items:
+                if it.req_id in inf.deferred:
+                    continue          # executor deferred it (out of KV blocks)
+                if k > 0 and it.kind is TaskKind.PREFILL:
+                    continue
+                req = self.requests[it.req_id]
+                tok = ist.emitted.get(it.req_id)
+                if tok is not None:
+                    req.generated_tokens.append(tok)
+                was_prefill = req.state in (RequestState.QUEUED,
+                                            RequestState.PREFILL)
+                n = it.n_tokens if k == 0 else 1
+                req.advance(n, t)
+                if was_prefill:
+                    ran_p += 1
+                else:
+                    ran_d += 1
+                if self.prefix_cache is not None and req.tokens and was_prefill:
+                    self.prefix_cache.on_prefill_progress(req.req_id, n)
+                    if req.prefilled == req.prompt_len:
+                        # prefill complete: publish the prompt's full-block
+                        # pages so concurrent identical prefixes hit (§10)
+                        self.prefix_cache.insert_request(req.req_id,
+                                                         req.tokens, t)
+                if req.state is RequestState.FINISHED:
+                    self._finish(req)
+            executed += ist.new_tokens
+            if not inf.observed:
+                self.sched.observe(ist.new_tokens, ist.context, ist.dt)
+            rec = StepRecord(t - ist.dt, t, ist.new_tokens, ist.context,
+                             ran_p, ran_d, ist.predicted)
+            self.steps.append(rec)
         # fail loudly on a KV-pool deadlock: if every item keeps deferring,
         # no request can ever free pages and retrying forever is a silent
         # livelock (preemption/eviction would be the real fix)
@@ -199,19 +502,81 @@ class Engine:
             raise RuntimeError(
                 "KV pool deadlock: every batch item was deferred for "
                 "1000 consecutive steps (pool too small for the working set)")
-        self.sched.observe(executed, inf.total_ctx, inf.exec_time)
-        ran = [it for it in plan.items if it.req_id not in inf.deferred]
-        rec = StepRecord(inf.t_start, finish, executed, inf.total_ctx,
-                         sum(it.kind is TaskKind.PREFILL for it in ran),
-                         sum(it.kind is TaskKind.DECODE for it in ran),
-                         plan.predicted_time)
-        self.steps.append(rec)
         self.busy_time += inf.exec_time
-        self.now = finish
+        self.now = max(self.now, inf.t_end)
+        self._reconcile()
         return rec
 
+    # ------------------------------------------------------------------
+    # reconciliation: queued speculative dispatches vs committed reality
+    # ------------------------------------------------------------------
+
+    def _reconcile(self) -> None:
+        """Validate every still-queued dispatch against committed state.
+
+        Projections are formed with the launched steps' deferred sets and
+        emissions already known, so in the shipped executors they are exact;
+        this is the safety net the async boundary demands (DESIGN.md §12).
+        The first queued dispatch whose plan no longer matches reality —
+        e.g. a grant exceeding the remaining prompt, or a request that
+        finished — is rolled back together with everything formed after it
+        (younger projections chain off it).
+        """
+        proj: dict[int, Request] = {}
+        bad = None
+        for i, inf in enumerate(self.inflight_q):
+            for it in inf.plan.items:
+                if it.req_id in inf.deferred:
+                    continue
+                req = proj.get(it.req_id)
+                if req is None:
+                    base = self.requests.get(it.req_id)
+                    if base is None or not base.active:
+                        bad = i
+                        break
+                    req = proj[it.req_id] = base.speculative_copy()
+                grant = (it.n_tokens if it.kind is TaskKind.PREFILL
+                         else inf.horizon)
+                if it.kind is TaskKind.PREFILL:
+                    ok = (req.state in (RequestState.QUEUED,
+                                        RequestState.PREFILL)
+                          and req.prefilled + grant <= req.prompt_len)
+                else:
+                    ok = (req.state is RequestState.DECODE
+                          and req.generated + grant <= req.max_new_tokens)
+                if not ok:
+                    bad = i
+                    break
+                for k in range(inf.horizon if it.kind is TaskKind.DECODE
+                               else 1):
+                    req.advance(it.n_tokens if k == 0 else 1, inf.t_end)
+            if bad is not None:
+                break
+        if bad is None:
+            return
+        for inf in self.inflight_q[bad:]:
+            self._rollback(inf)
+        del self.inflight_q[bad:]
+
+    def _rollback(self, inf: InflightStep) -> None:
+        """Discard a mis-speculated queued dispatch (DESIGN.md §12).
+
+        Effects were never applied (that happens at complete), so rollback
+        is: drop the dispatch and return the KV pages its execution reserved
+        — the stale K/V written there is unreachable (context lengths never
+        covered it) and the pages are free to be rewritten.
+        """
+        self.rollbacks += 1
+        if hasattr(self.executor, "rollback_tokens"):
+            for it in inf.plan.items:
+                if it.req_id in inf.deferred:
+                    continue
+                n = (it.n_tokens if it.kind is TaskKind.PREFILL
+                     else inf.horizon)
+                self.executor.rollback_tokens(it.req_id, n)
+
     def step(self) -> Optional[StepRecord]:
-        """Lock-step driver: begin and complete one step atomically."""
+        """Lock-step driver: begin and complete one dispatch atomically."""
         if not self.active:
             if not self.pending:
                 return None
@@ -223,7 +588,7 @@ class Engine:
 
     def _finish(self, req: Request) -> None:
         self.active.remove(req.req_id)
-        self.done.append(measure(req))
+        self._record_done(req)
         if self.prefix_cache is not None and req.tokens:
             # drops the request's page refs; cache-adopted pages stay live
             # until evicted (executor.release below is then a no-op)
@@ -250,7 +615,23 @@ class Engine:
     # fault tolerance: host-state snapshot (KV recomputed on restore)
     # ------------------------------------------------------------------
 
-    def snapshot(self) -> str:
+    def snapshot(self, drain: bool = False) -> str:
+        """Serialize host-side engine state.
+
+        A dispatch in flight holds effects that exist nowhere in the
+        committed Request state — snapshotting past it would silently drop
+        the launched batch on restore. ``drain=True`` completes the pipeline
+        first; otherwise an in-flight step is a hard error (DESIGN.md §12).
+        """
+        if self.inflight_q:
+            if not drain:
+                raise RuntimeError(
+                    f"snapshot with {len(self.inflight_q)} step(s) in "
+                    "flight would drop their effects on restore; call "
+                    "snapshot(drain=True) or complete the pipeline first")
+            while self.inflight_q:
+                self.complete_step()
+
         def ser(req: Request) -> dict:
             d = dataclasses.asdict(req)
             d["state"] = req.state.value

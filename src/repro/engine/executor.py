@@ -131,6 +131,8 @@ class PagedTransformerExecutor:
         self._fused_fn = jax.jit(self._fused_step,
                                  static_argnames=("t_bucket", "s_bucket",
                                                   "tq_bucket"))
+        self._multi_fn = jax.jit(self._multi_decode_step,
+                                 static_argnames=("bsz", "horizon"))
         # items the last execute() could not serve (out of KV blocks); the
         # engine skips their progress so the scheduler retries them
         self.last_deferred: frozenset[int] = frozenset()
@@ -216,6 +218,28 @@ class PagedTransformerExecutor:
                                             ctx_lens)
         return k_pages, v_pages, self._head(x[:, 0])
 
+    def _multi_decode_step(self, k_pages, v_pages, tokens, positions, tables,
+                           ctx_lens, *, bsz, horizon):
+        """``horizon`` greedy decode steps as ONE dispatch (DESIGN.md §12).
+
+        Each unrolled iteration is exactly the ``_decode_step`` body — same
+        shapes, same ops, so emitted tokens are bit-identical to running the
+        steps one dispatch at a time — with the argmax token fed back and
+        K/V writes advancing in-loop (the caller pre-reserved ``horizon``
+        slots per sequence in the block tables). Returns the (horizon, B)
+        token matrix.
+        """
+        emitted = []
+        for h in range(horizon):
+            x = self._embed(tokens)[:, None]              # (B, 1, d)
+            k_pages, v_pages, x = self._forward(
+                k_pages, v_pages, x, (positions + h)[:, None], tables,
+                ctx_lens + h)
+            logits = self._head(x[:, 0])
+            tokens = jnp.argmax(logits, -1).astype(jnp.int32)
+            emitted.append(tokens)
+        return k_pages, v_pages, jnp.stack(emitted)
+
     def _fused_step(self, k_pages, v_pages, tokens, positions, tok_pages,
                     tok_slots, tables, ctx_lens, q_starts, q_lens, pos0,
                     last_idx, seq_gather, pack_gather,
@@ -296,6 +320,83 @@ class PagedTransformerExecutor:
         if self.mode == "sequential":
             return self._execute_sequential(plan, requests, now)
         return self._execute_fused(plan, requests, now)
+
+    # ------------------------------------------------------------------
+    # slack-bounded multi-step decode commitment (DESIGN.md §12)
+    # ------------------------------------------------------------------
+
+    def execute_multi(self, plan: BatchPlan, requests, now: float,
+                      horizon: int) -> tuple[list, dict]:
+        """Run ``horizon`` committed decode steps as ONE device dispatch.
+
+        The engine only commits all-decode plans (``capacity.commit_horizon``
+        gates how deep). KV pages for all ``horizon`` tokens per sequence
+        are reserved up front; the jitted loop feeds each step's argmax
+        token back and advances K/V writes in-loop. Returns
+        ``(steps, emitted_seq)`` where ``steps`` is one
+        ``(dt, new_tokens, context)`` triple per internal step (the §3.2
+        observation stream) and ``emitted_seq`` maps req_id to its
+        ``horizon`` output tokens. Out-of-blocks sequences defer whole
+        (``last_deferred``), exactly like the single-step paths.
+        ``capture_logits`` is not supported here — the per-step logits
+        never leave the device.
+        """
+        assert not plan.prefill_items, "multi-step commitment is decode-only"
+        t0 = time.perf_counter()
+        deferred: set[int] = set()
+        ids = []
+        for it in plan.decode_items:
+            if self._extend(it.req_id, horizon) is None:
+                deferred.add(it.req_id)   # out of KV blocks: defer & retry
+                continue
+            ids.append(it.req_id)
+        self.last_deferred = frozenset(deferred)
+        self.last_logits = {}
+        if not ids:
+            return [(time.perf_counter() - t0, 0, 0)], {}
+        bsz = _bucket(len(ids), 4)
+        toks, pos, tables, ctx = [], [], [], []
+        for rid in ids:
+            req = requests[rid]
+            last = req.generated_tokens[-1] if req.generated_tokens else 0
+            toks.append(last)
+            # the fed-back token's position: context counts it as emitted,
+            # but its K/V enters the cache only now
+            pos.append(req.context - 1)
+            tables.append(self._table(rid))
+            ctx.append(req.context)
+        pad = bsz - len(ids)
+        toks += [0] * pad
+        pos += [0] * pad
+        ctx += [1] * pad
+        tables += [tables[0] * 0] * pad
+        self.n_dispatches += 1
+        self.compile_keys.add(("multi", bsz, horizon))
+        self.k_pages, self.v_pages, out = self._multi_fn(
+            self.k_pages, self.v_pages,
+            jnp.asarray(toks, jnp.int32), jnp.asarray(pos, jnp.int32),
+            jnp.stack(tables), jnp.asarray(ctx, jnp.int32),
+            bsz=bsz, horizon=horizon)
+        toks_np = np.asarray(out)                          # (horizon, bsz)
+        dt = time.perf_counter() - t0
+        emitted_seq = {rid: [int(toks_np[h, i]) for h in range(horizon)]
+                       for i, rid in enumerate(ids)}
+        # per-internal-step accounting: contexts grow one token per step,
+        # capped by the arch's attention window like SchedTask.cost_context
+        base = [(requests[rid].context, requests[rid].window) for rid in ids]
+        steps = [(dt / horizon, len(ids),
+                  sum(min(c + h, w) if w else c + h for c, w in base))
+                 for h in range(horizon)]
+        return steps, emitted_seq
+
+    def rollback_tokens(self, req_id: int, n_tokens: int) -> None:
+        """Return a rolled-back dispatch's reserved KV slots (DESIGN.md §12).
+
+        The stale K/V written beyond the request's committed length is
+        unreachable — context lengths never covered it — so releasing the
+        reservation is the whole rollback.
+        """
+        self.alloc.shrink(req_id, n_tokens)
 
     # ------------------------------------------------------------------
     # fused path: pack the whole plan, launch once

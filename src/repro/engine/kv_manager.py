@@ -98,6 +98,23 @@ class BlockAllocator:
             del self.refcount[page]
             self._free.append(page)
 
+    def shrink(self, req_id: int, n_tokens: int) -> None:
+        """Undo the tail of an ``extend``: drop ``n_tokens`` reserved tokens
+        and free now-unused trailing pages (pipeline rollback, DESIGN.md §12).
+
+        Only the whole-page tail added by the rolled-back extend is released;
+        a page that was COW'd by that extend keeps its (valid) copy — the
+        request simply resumes writing into it at the restored length.
+        """
+        have = self.lens.get(req_id, 0)
+        assert 0 <= n_tokens <= have, (req_id, n_tokens, have)
+        new_len = have - n_tokens
+        self.lens[req_id] = new_len
+        tbl = self.tables.get(req_id, [])
+        keep = -(-new_len // self.block_size)
+        while len(tbl) > keep:
+            self.release_page(tbl.pop())
+
     def release(self, req_id: int) -> None:
         for p in self.tables.pop(req_id, ()):
             self.release_page(p)

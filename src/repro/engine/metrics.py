@@ -20,6 +20,9 @@ class RequestMetrics:
     rejected: bool = False
     prompt_len: int = 0
     cached_tokens: int = 0         # prompt tokens served by the prefix cache
+    # arrival -> first inclusion in a launched batch (DESIGN.md §12): the
+    # control-plane wait a pipelined scheduler is supposed to hide
+    sched_delay: Optional[float] = None
 
     @property
     def slo_ok(self) -> bool:
@@ -39,20 +42,30 @@ def measure(req: Request) -> RequestMetrics:
         tpot_max = max((ot[j] - ot[0]) / j for j in range(1, len(ot)))
     ttft_ok = ttft is not None and ttft <= req.ttft_slo
     tpot_ok = tpot_max is None or tpot_max <= req.tpot_slo
+    delay = (req.first_scheduled - req.arrival
+             if req.first_scheduled is not None else None)
     return RequestMetrics(req.req_id, req.arrival, ttft, tpot_max,
                           ttft_ok, tpot_ok, prompt_len=req.prompt_len,
-                          cached_tokens=req.cached_context)
+                          cached_tokens=req.cached_context,
+                          sched_delay=delay)
 
 
-def summarize(metrics: list[RequestMetrics], duration: float) -> dict:
+def summarize(metrics: list[RequestMetrics], duration: float,
+              host: Optional[dict] = None) -> dict:
+    """Aggregate per-request metrics; ``host`` optionally merges the
+    engine-level control-plane counters (``Engine.host_stats``:
+    dispatches / host-overhead seconds / steps / rollbacks — DESIGN.md §12)
+    into the summary so benchmarks see one dict."""
     n = len(metrics)
     ok = sum(m.slo_ok for m in metrics)
     ttfts = np.array([m.ttft for m in metrics if m.ttft is not None])
     tpots = np.array([m.tpot_max for m in metrics if m.tpot_max is not None])
+    delays = np.array([m.sched_delay for m in metrics
+                       if m.sched_delay is not None])
 
     def pct(a, q):
         return float(np.percentile(a, q)) if len(a) else float("nan")
-    return {
+    out = {
         "n_requests": n,
         "slo_attainment": ok / max(n, 1),
         "violation_rate": 1.0 - ok / max(n, 1),
@@ -67,4 +80,12 @@ def summarize(metrics: list[RequestMetrics], duration: float) -> dict:
         "cache_hit_tokens": int(sum(m.cached_tokens for m in metrics)),
         "cache_hit_rate": (sum(m.cached_tokens for m in metrics)
                            / max(sum(m.prompt_len for m in metrics), 1)),
+        # control-plane wait before first service (DESIGN.md §12)
+        "sched_delay_p50": pct(delays, 50),
+        "sched_delay_p99": pct(delays, 99),
+        "sched_delay_mean": float(np.mean(delays)) if len(delays) else
+                            float("nan"),
     }
+    if host is not None:
+        out.update(host)
+    return out

@@ -36,6 +36,9 @@ class Request:
     generated_tokens: list = dataclasses.field(default_factory=list)
     # effective attention window of the serving arch (cost-model context cap)
     window: Optional[int] = None
+    # first time this request was part of a launched batch (DESIGN.md §12):
+    # first_scheduled - arrival is the scheduling delay the metrics report
+    first_scheduled: Optional[float] = None
     # Envelope anchor (DESIGN.md §9 note): the paper's token_ddl anchors at
     # arrival + ttft_slo, but its §5.1 TPOT metric measures from the ACTUAL
     # first-token time — a request served its first token early could then
@@ -74,6 +77,19 @@ class Request:
                          context=ctx, kind=kind, prompt_len=self.prompt_len,
                          effective_context=eff,
                          cached_context=self.cached_context)
+
+    def speculative_copy(self) -> "Request":
+        """Detached copy for the pipelined control plane (DESIGN.md §12).
+
+        ``begin_step`` projects post-step state by advancing copies while the
+        real objects stay pinned to committed state until ``complete_step``.
+        Mutable progress fields get fresh lists; the (read-only) prompt token
+        ids stay shared.
+        """
+        c = dataclasses.replace(self)
+        c.output_times = list(self.output_times)
+        c.generated_tokens = list(self.generated_tokens)
+        return c
 
     def advance(self, n_tokens: int, finish_time: float) -> None:
         """Apply a step's granted tokens; emit output tokens at step end."""

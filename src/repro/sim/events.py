@@ -6,6 +6,11 @@ order. Priority encodes the causal conventions of the replay loop:
 
   * membership changes (fail/join) apply before anything else at an instant,
     so a coinciding arrival is routed against the updated alive-set;
+  * pipelined batch forming (STEP_FORM, DESIGN.md §12) precedes the step
+    completion it overlaps: with zero host overhead the two coincide at
+    t_end, and forming first is what forces the projection machinery to
+    reproduce the post-completion state bit-for-bit (the parity suite's
+    whole point);
   * a rank's step completion lands before arrivals at the same instant, so
     freed capacity and finished requests are visible to routing;
   * LB report ticks land after step completions (a report observes the state
@@ -26,10 +31,11 @@ class EventKind(enum.IntEnum):
     """Replay event kinds; the integer value is the same-timestamp priority."""
     RANK_FAIL = 0
     RANK_JOIN = 1
-    STEP_DONE = 2
-    LB_REPORT = 3
-    ARRIVAL = 4
-    RANK_WAKE = 5
+    STEP_FORM = 2     # pipelined control plane forms the next batch (§12)
+    STEP_DONE = 3
+    LB_REPORT = 4
+    ARRIVAL = 5
+    RANK_WAKE = 6
 
 
 @dataclasses.dataclass(frozen=True)

@@ -16,6 +16,11 @@ snapshots, exactly like a production router polling engine metrics.
 Event causality per instant is fixed by ``EventKind`` priority (events.py);
 all randomness flows from the config seed, so two runs with the same seed
 produce identical event sequences and identical summary metrics.
+
+Engines with ``pipeline_depth >= 2`` additionally get STEP_FORM events
+(DESIGN.md §12): the async control plane forms batch N+1 against projected
+state ``host_overhead`` seconds before step N completes, so the host work
+overlaps device time instead of opening a bubble between steps.
 """
 from __future__ import annotations
 
@@ -39,6 +44,7 @@ def drive(cluster, trace, *, report_interval: float = 0.05,
     benchmarks use it to probe slack/fairness without re-running anything.
     """
     q = EventQueue()
+    arrivals = sorted(tr.arrival for tr in trace)
     for tr in sorted(trace, key=lambda t: t.arrival):
         q.push(tr.arrival, EventKind.ARRIVAL, req=tr)
     for t, rank in cluster.failures:
@@ -61,19 +67,46 @@ def drive(cluster, trace, *, report_interval: float = 0.05,
             cluster.done.extend(eng.done[n:])
         eng._done_collected = len(eng.done)
 
-    def kick(rank: int, now: float) -> None:
-        """If `rank` is idle but has runnable work, launch its next step."""
+    def kick(rank: int, now: float, form: bool = False) -> None:
+        """If `rank` has pipeline capacity and runnable work, form+launch.
+
+        With ``pipeline_depth >= 2`` a step may be formed while earlier ones
+        are still in flight (projected-state forming, DESIGN.md §12) — but
+        ONLY from its STEP_FORM event (``form=True``), which fires
+        ``host_overhead`` before the completion it overlaps: the latest
+        instant the host can start forming without opening a device bubble,
+        and therefore the freshest arrival-queue snapshot it can legally
+        use. Eager forming on arrival events would freeze the queue earlier
+        than a late-binding host has to, diverging from lock-step for no
+        latency win.
+        """
         eng = cluster.engines.get(rank)
-        if eng is None or eng.inflight is not None:
+        if eng is None:
+            return
+        depth = max(eng.cfg.pipeline_depth, 1)
+        if eng.inflight_q and (not form or len(eng.inflight_q) >= depth):
             return
         if not (eng.active or eng.pending):
             return
+        pipelined = bool(eng.inflight_q)
+        # next trace arrival not yet routed: multi-step commitment must
+        # stop there exactly like lock-step re-forming would (DESIGN.md
+        # §12). The hint is the GLOBAL next arrival — which rank it will
+        # route to is unknowable before the LB sees it — so at n_ranks > 1
+        # commitment is conservatively shorter than a per-rank oracle
+        # would allow (never longer: parity and envelopes stay safe).
+        eng.arrival_hint = (arrivals[next_id] if next_id < len(arrivals)
+                            else float("inf"))
         inf = eng.begin_step(now)
         collect(eng)                          # admission may have rejected
         if inf is not None:
             q.push(inf.t_end, EventKind.STEP_DONE, rank=rank, step=inf)
-        elif eng.active:
+            if depth > 1:
+                q.push(max(inf.t_start, inf.t_end - eng.cfg.host_overhead),
+                       EventKind.STEP_FORM, rank=rank, step=inf)
+        elif eng.active and not pipelined:
             # admitted work but an empty plan: retry after an idle hop
+            # (with steps in flight, their completions re-kick instead)
             q.push(eng.now + eng.cfg.idle_step, EventKind.RANK_WAKE, rank=rank)
 
     def kick_all(now: float) -> None:
@@ -99,11 +132,23 @@ def drive(cluster, trace, *, report_interval: float = 0.05,
             eng = cluster.engines.get(ev.rank)
             if eng is None or eng.inflight is not ev.step:
                 continue                      # rank died/rejoined mid-step
-            rec = eng.complete_step()
+            n_steps = len(eng.steps)
+            eng.complete_step()
             collect(eng)
             if step_hook is not None:
-                step_hook(ev.rank, eng, rec)
+                # a committed multi-step dispatch lands H StepRecords at
+                # once — the hook still fires once per scheduler step
+                for rec in eng.steps[n_steps:]:
+                    step_hook(ev.rank, eng, rec)
             kick(ev.rank, eng.now)
+
+        elif ev.kind is EventKind.STEP_FORM:
+            # the running step's host-overlap window opened: form the next
+            # batch against projected state (DESIGN.md §12)
+            eng = cluster.engines.get(ev.rank)
+            if eng is None or all(s is not ev.step for s in eng.inflight_q):
+                continue                      # rank died/rejoined mid-step
+            kick(ev.rank, ev.time, form=True)
 
         elif ev.kind is EventKind.LB_REPORT:
             eng = cluster.engines.get(ev.rank)
@@ -156,7 +201,9 @@ def replay(trace, scheduler: str = "fairbatching", n_ranks: int = 1,
            straggler_ranks: Optional[dict] = None, sched_kwargs:
            Optional[dict] = None, failures=(), joins=(),
            report_interval: float = 0.05, prefix_cache_pages: int = 0,
-           prefix_block: int = 128, seed: int = 0,
+           prefix_block: int = 128, pipeline_depth: int = 1,
+           host_overhead: float = 0.0, commit_horizon: int = 1,
+           predicted_prefill_tokens: int = 0, seed: int = 0,
            step_hook: Optional[Callable] = None) -> ReplayResult:
     """One-call event-driven cluster replay — the repo's canonical harness.
 
@@ -165,7 +212,12 @@ def replay(trace, scheduler: str = "fairbatching", n_ranks: int = 1,
     (time, rank) pairs. ``prefix_cache_pages`` > 0 gives every rank a radix
     prefix cache of that many KV pages (DESIGN.md §10); traces must carry
     token ids (e.g. the multi-turn / shared-sysprompt scenarios) for it to
-    hit. All stochasticity (executor jitter, GC pauses) derives from
+    hit. ``pipeline_depth >= 2`` arms the per-rank async pipelined control
+    plane (batch N+1 formed against projected state while N runs) with a
+    ``host_overhead``-second per-dispatch host cost; ``commit_horizon > 1``
+    allows slack-bounded multi-step decode commitment (DESIGN.md §12) —
+    with the defaults every engine is the classic synchronous one, bit for
+    bit. All stochasticity (executor jitter, GC pauses) derives from
     ``seed``: same arguments → identical summary metrics, bit for bit.
     """
     from ..cluster.cluster import Cluster, ClusterConfig
@@ -183,7 +235,12 @@ def replay(trace, scheduler: str = "fairbatching", n_ranks: int = 1,
                         sched_kwargs=dict(sched_kwargs or {}),
                         report_interval=report_interval,
                         prefix_cache_pages=prefix_cache_pages,
-                        prefix_block=prefix_block, seed=seed, **kw)
+                        prefix_block=prefix_block,
+                        pipeline_depth=pipeline_depth,
+                        host_overhead=host_overhead,
+                        commit_horizon=commit_horizon,
+                        predicted_prefill_tokens=predicted_prefill_tokens,
+                        seed=seed, **kw)
     # the cache-affinity LB must hash prompts at the engines' page size or
     # its prefix estimates never match the reported summaries
     lb_kw = {"block_size": prefix_block} if lb in ("cache", "cache-lb") \

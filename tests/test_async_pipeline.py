@@ -1,0 +1,447 @@
+"""Async pipelined control plane + slack-bounded multi-step decode (§12).
+
+Pins the three contracts of DESIGN.md §12:
+
+* ``capacity.commit_horizon`` never busts an active envelope, never commits
+  past a queued prefill, and honors the PAB-style predicted-prefill reserve;
+* the pipelined engine (depth >= 2, projected-state forming) and multi-step
+  decode commitment are *bit-identical* to the lock-step engine — same
+  per-request SLO accounting, same step records — while dispatching less;
+* snapshot() refuses (or drains) a pipeline in flight, and speculative
+  dispatches that diverge from committed reality are rolled back.
+"""
+import math
+
+import pytest
+
+from repro.core import (LinearCostModel, SchedTask, TaskKind, commit_horizon,
+                        make_scheduler, slack)
+from repro.data.traces import make_gamma_trace, make_scenario
+from repro.engine import (BlockAllocator, Engine, EngineConfig, Request,
+                          SimExecutor)
+from repro.engine.metrics import summarize
+from repro.sim import replay
+
+TRUE = LinearCostModel(a=0.003, b=190e-6, c=20e-9)
+EST = LinearCostModel(a=0.003, b=150e-6, c=10e-9)
+
+
+def _decode_task(i, *, slack_s, tpot, ctx=1000, now=0.0):
+    """Decode task whose next-token slack at ``now`` is exactly slack_s."""
+    # slack = arrival + ttft + tpot*j - now with j = next_output_idx
+    j = 5
+    arrival = now + slack_s - 0.5 - tpot * j
+    return SchedTask(req_id=i, arrival=arrival, ttft_slo=0.5, tpot_slo=tpot,
+                     next_output_idx=j, new_tokens=1, context=ctx,
+                     kind=TaskKind.DECODE)
+
+
+# ----------------------------------------------------------------------
+# commit_horizon math
+# ----------------------------------------------------------------------
+
+def test_commit_horizon_never_busts_an_envelope():
+    """Unit pin of the acceptance invariant: simulate the committed run
+    with the same model and check every emission lands inside its envelope,
+    across a seeded sweep of decode mixes."""
+    import random
+    rng = random.Random(7)
+    for _ in range(200):
+        n = rng.randint(1, 12)
+        tasks = [_decode_task(i, slack_s=rng.uniform(0.005, 0.4),
+                              tpot=rng.choice([0.02, 0.05, 0.15]),
+                              ctx=rng.randint(50, 8000))
+                 for i in range(n)]
+        h = commit_horizon(tasks, 0.0, TRUE, max_horizon=32,
+                           ttft_slo=0.5)
+        assert 1 <= h <= 32
+        ctx0 = sum(t.cost_context() for t in tasks)
+
+        def cum(steps):
+            return sum(TRUE.step_time(n, ctx0 + k * n)
+                       for k in range(steps))
+        # any commitment BEYOND the mandatory single step keeps every
+        # emission inside its envelope (h == 1 adds nothing to lock-step:
+        # one step runs regardless, late envelope or not)
+        for k in range(1, h):
+            for t in tasks:
+                assert cum(k + 1) <= slack(t, 0.0) + k * t.tpot_slo + 1e-12, \
+                    f"h={h}: token {k + 1} of task {t.req_id} busts envelope"
+        # maximality: one more step would push some token past its envelope
+        # (h == 1 may also mean "an envelope is already busting at step 1"
+        # — the conservative don't-commit-when-late early-out)
+        step1_feasible = all(cum(1) <= slack(t, 0.0) for t in tasks)
+        if h < 32 and (h > 1 or step1_feasible):
+            assert any(cum(h + 1) > slack(t, 0.0) + h * t.tpot_slo
+                       for t in tasks), f"h={h} under-commits"
+
+
+def test_commit_horizon_monotone_in_slack():
+    # tpot below per-step time: each committed step *consumes* slack, so the
+    # initial slack is what bounds the horizon
+    tight = [_decode_task(0, slack_s=0.02, tpot=0.002)]
+    loose = [_decode_task(0, slack_s=0.4, tpot=0.002)]
+    h_tight = commit_horizon(tight, 0.0, TRUE, max_horizon=4096,
+                             ttft_slo=0.5)
+    h_loose = commit_horizon(loose, 0.0, TRUE, max_horizon=4096,
+                             ttft_slo=0.5)
+    assert 4096 > h_loose > h_tight >= 1
+
+
+def test_commit_horizon_is_one_with_queued_prefill():
+    """A queued prefill is owed chunks now — committing past it would
+    recreate exactly the decode-prioritizing unfairness of paper Fig 1."""
+    tasks = [_decode_task(0, slack_s=2.0, tpot=0.05),
+             SchedTask(req_id=1, arrival=0.0, ttft_slo=0.5, tpot_slo=0.05,
+                       next_output_idx=0, new_tokens=512, context=0,
+                       kind=TaskKind.PREFILL)]
+    assert commit_horizon(tasks, 0.0, TRUE, max_horizon=64,
+                          ttft_slo=0.5) == 1
+
+
+def test_commit_horizon_predicted_prefill_reserve():
+    """PAB-style reserve: the horizon must leave room for a predicted
+    prompt to land inside its TTFT SLO (never busts a queued prefill's
+    TTFT: the commitment time plus its prefill time fits the SLO)."""
+    tasks = [_decode_task(i, slack_s=5.0, tpot=0.5) for i in range(4)]
+    free = commit_horizon(tasks, 0.0, TRUE, max_horizon=256,
+                          ttft_slo=0.5)
+    reserved = commit_horizon(tasks, 0.0, TRUE, max_horizon=256,
+                              ttft_slo=0.5,
+                              predicted_prefill_tokens=1024)
+    assert reserved < free
+    # invariant: commitment + predicted prefill compute <= TTFT SLO
+    ctx0 = sum(t.cost_context() for t in tasks)
+    cum = sum(TRUE.step_time(4, ctx0 + k * 4) for k in range(reserved))
+    assert cum + TRUE.step_time(1024, 0) <= 0.5 + 1e-12
+
+
+def test_commit_horizon_capped_and_degenerate():
+    tasks = [_decode_task(0, slack_s=100.0, tpot=1.0)]
+    assert commit_horizon(tasks, 0.0, TRUE, max_horizon=8,
+                          ttft_slo=0.5) == 8
+    assert commit_horizon(tasks, 0.0, TRUE, max_horizon=1,
+                          ttft_slo=0.5) == 1
+    assert commit_horizon([], 0.0, TRUE, max_horizon=8,
+                          ttft_slo=0.5) == 1
+
+
+# ----------------------------------------------------------------------
+# lock-step parity: multi-step commitment and the pipelined engine
+# ----------------------------------------------------------------------
+
+def _lockstep_engine(trace, *, seed, horizon=1, depth=1, gc=0.0):
+    cfg = EngineConfig(0.5, 0.05, commit_horizon=horizon,
+                       pipeline_depth=depth)
+    eng = Engine(make_scheduler("fairbatching",
+                                LinearCostModel(EST.a, EST.b, EST.c)),
+                 SimExecutor(TRUE, seed=seed, gc_pause_every=gc),
+                 cfg)
+    for i, tr in enumerate(sorted(trace, key=lambda t: t.arrival)):
+        eng.submit(Request(i, tr.arrival, tr.prompt_len, tr.output_len,
+                           0.5, 0.05))
+    eng.run()
+    return eng
+
+
+def _per_request(done):
+    return sorted((m.req_id, m.ttft, m.tpot_max, m.sched_delay, m.slo_ok)
+                  for m in done)
+
+
+def test_multistep_commitment_is_bit_identical_to_lockstep():
+    """H-committed runs replay the exact lock-step trajectory — same step
+    records, same SLO accounting — in ~H× fewer dispatches during decode
+    phases (with GC pauses on, to stress the jitter/GC RNG stream too)."""
+    trace = make_gamma_trace("qwentrace", rps=1.2, duration=40, seed=3)
+    base = _lockstep_engine(trace, seed=7, horizon=1, gc=5.0)
+    multi = _lockstep_engine(trace, seed=7, horizon=8, gc=5.0)
+    assert _per_request(multi.done) == _per_request(base.done)
+    assert ([(s.t_start, s.t_end, s.new_tokens, s.context)
+             for s in multi.steps]
+            == [(s.t_start, s.t_end, s.new_tokens, s.context)
+                for s in base.steps])
+    assert multi.n_dispatches < base.n_dispatches, \
+        "horizon never committed: test is inert"
+    # calibration saw the same per-step stream
+    assert multi.sched.model == base.sched.model
+
+
+def test_pipelined_replay_matches_sequential_replay():
+    """Depth-2 projected-state forming with zero host overhead must be
+    bit-identical to the sequential engine: the projection at t_end equals
+    the committed post-step state."""
+    trace = make_gamma_trace("qwentrace", rps=4.0, duration=30, seed=5)
+    seq = replay(trace, scheduler="fairbatching", n_ranks=2, lb="pab",
+                 admission=True, true_model=TRUE, est_model=EST, seed=9)
+    pipe = replay(trace, scheduler="fairbatching", n_ranks=2, lb="pab",
+                  admission=True, true_model=TRUE, est_model=EST, seed=9,
+                  pipeline_depth=2)
+    assert pipe.summary == seq.summary
+    assert _per_request(pipe.metrics) == _per_request(seq.metrics)
+    assert pipe.rank_dispatch == seq.rank_dispatch
+
+
+@pytest.mark.parametrize("scenario,rps,seed,horizon", [
+    ("bursty-gamma", 3.0, 17, 16),
+    ("bursty-gamma", 6.0, 4, 1),
+    ("multi-turn", 3.0, 8, 4),
+    ("multi-turn", 1.0, 2, 16),
+])
+def test_async_parity_fixed_grid(scenario, rps, seed, horizon):
+    """Deterministic subset of the hypothesis sweep below, so the parity
+    contract is exercised even where hypothesis is unavailable."""
+    trace = make_scenario(scenario, rps=rps, duration=12, seed=seed)
+    kw = dict(scheduler="fairbatching", n_ranks=1, lb="roundrobin",
+              true_model=TRUE, est_model=EST, seed=seed)
+    seq = replay(trace, **kw)
+    pipe = replay(trace, pipeline_depth=2, commit_horizon=horizon, **kw)
+    assert _per_request(pipe.metrics) == _per_request(seq.metrics)
+    ss, sp = dict(seq.summary), dict(pipe.summary)
+    assert sp.pop("dispatches") <= ss.pop("dispatches")
+    assert _eq_nan(sp, ss)
+
+
+def test_async_parity_hypothesis_sweep():
+    """Satellite: pipelined mode (depth 2, + multi-step commitment) emits
+    identical SLO accounting to lock-step across bursty-gamma and
+    multi-turn scenarios."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.sampled_from(["bursty-gamma", "multi-turn"]),
+           st.sampled_from([1.0, 3.0, 6.0]),
+           st.integers(0, 10_000),
+           st.sampled_from([1, 4, 16]))
+    @settings(max_examples=10, deadline=None)
+    def check(scenario, rps, seed, horizon):
+        trace = make_scenario(scenario, rps=rps, duration=12, seed=seed % 97)
+        kw = dict(scheduler="fairbatching", n_ranks=1, lb="roundrobin",
+                  true_model=TRUE, est_model=EST, seed=seed)
+        seq = replay(trace, **kw)
+        pipe = replay(trace, pipeline_depth=2, commit_horizon=horizon, **kw)
+        assert _per_request(pipe.metrics) == _per_request(seq.metrics)
+        ss, sp = dict(seq.summary), dict(pipe.summary)
+        assert sp.pop("dispatches") <= ss.pop("dispatches")
+        assert _eq_nan(sp, ss)
+
+    check()
+
+
+def _eq_nan(a: dict, b: dict) -> bool:
+    if a.keys() != b.keys():
+        return False
+    for k in a:
+        x, y = a[k], b[k]
+        if isinstance(x, float) and isinstance(y, float) \
+                and math.isnan(x) and math.isnan(y):
+            continue
+        if x != y:
+            return False
+    return True
+
+
+def test_pipelining_hides_host_overhead():
+    """With a real per-dispatch host cost, the sequential engine pays a
+    bubble between steps; depth-2 forming under the running step removes it
+    (shorter makespan, better tails). Multi-step commitment then removes
+    dispatches themselves."""
+    trace = make_gamma_trace("qwentrace", rps=3.0, duration=30, seed=11)
+    kw = dict(scheduler="fairbatching", n_ranks=1, lb="roundrobin",
+              true_model=TRUE, est_model=EST, seed=2, host_overhead=0.004)
+    seq = replay(trace, **kw)
+    pipe = replay(trace, pipeline_depth=2, **kw)
+    multi = replay(trace, pipeline_depth=2, commit_horizon=16, **kw)
+    assert pipe.duration < seq.duration
+    assert pipe.summary["tpot_p99"] <= seq.summary["tpot_p99"]
+    assert multi.summary["dispatches"] < pipe.summary["dispatches"]
+    # commitment must not cost SLO attainment: that's the slack bound's job
+    assert multi.summary["slo_attainment"] >= seq.summary["slo_attainment"]
+
+
+# ----------------------------------------------------------------------
+# real data plane: H committed decode steps == ONE device dispatch
+# ----------------------------------------------------------------------
+
+def test_real_executor_multistep_decode_parity():
+    """PagedTransformerExecutor: an H-step committed decode horizon emits
+    bit-identical tokens to H single-step dispatches, runs as exactly one
+    jit dispatch, and rides its own compile key."""
+    import dataclasses as dc
+
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.engine import PagedTransformerExecutor
+    from repro.models import ModelOpts, build_model
+
+    cfg = dc.replace(get_reduced("stablelm-3b"), window=None)
+    model = build_model(cfg, ModelOpts(attn_impl="dense"))
+    params = model.init(jax.random.PRNGKey(0))
+
+    def run(horizon):
+        execu = PagedTransformerExecutor(cfg, params, num_pages=128,
+                                         page_size=16, max_pages_per_seq=8)
+        eng = Engine(make_scheduler("fairbatching",
+                                    LinearCostModel(1e-4, 1e-6, 1e-10)),
+                     execu, EngineConfig(5.0, 5.0, commit_horizon=horizon))
+        rng = jax.random.PRNGKey(3)
+        for i in range(4):
+            plen = 5 + 9 * i
+            toks = [int(x) for x in jax.random.randint(
+                jax.random.fold_in(rng, i), (plen,), 0, cfg.vocab)]
+            eng.submit(Request(i, 0.0, plen, 13, 5.0, 5.0, tokens=toks))
+        n = 0
+        while eng.has_work and n < 300:
+            eng.step()
+            n += 1
+        assert not eng.has_work
+        return eng, execu
+
+    base, ex1 = run(1)
+    multi, ex4 = run(4)
+    assert ({r: list(multi.requests[r].generated_tokens)
+             for r in multi.requests}
+            == {r: list(base.requests[r].generated_tokens)
+                for r in base.requests})
+    # same scheduler-step trajectory, fewer device dispatches
+    assert len(multi.steps) == len(base.steps)
+    assert multi.n_dispatches < base.n_dispatches
+    # H steps => 1 dispatch: engine dispatches == executor jit launches
+    assert ex4.n_dispatches == multi.n_dispatches
+    assert ex1.n_dispatches == base.n_dispatches == len(base.steps)
+    assert any(k[0] == "multi" and k[2] == 4 for k in ex4.compile_keys), \
+        sorted(ex4.compile_keys)
+    # deferral-free run must not leak pages
+    assert ex4.alloc.free_blocks == ex1.alloc.free_blocks
+
+
+# ----------------------------------------------------------------------
+# snapshot/restore and speculative rollback
+# ----------------------------------------------------------------------
+
+def _engine_with_work(depth=2, n_req=6):
+    eng = Engine(make_scheduler("fairbatching",
+                                LinearCostModel(EST.a, EST.b, EST.c)),
+                 SimExecutor(TRUE, seed=4),
+                 EngineConfig(0.5, 0.05, pipeline_depth=depth))
+    for i in range(n_req):
+        eng.submit(Request(i, 0.0, 64 + 16 * i, 24, 0.5, 0.05))
+    return eng
+
+
+def test_snapshot_refuses_inflight_step():
+    """Regression: snapshotting between begin and complete used to silently
+    drop the launched batch's effects on restore."""
+    eng = _engine_with_work()
+    assert eng.begin_step(0.0) is not None
+    with pytest.raises(RuntimeError, match="in.?flight"):
+        eng.snapshot()
+    eng.complete_step()
+    eng.snapshot()                          # idle pipeline: fine again
+
+
+def test_snapshot_drain_roundtrip_mid_pipeline():
+    """snapshot(drain=True) completes the pipeline first; the restored
+    engine finishes every request with consistent accounting."""
+    eng = _engine_with_work(depth=2)
+    for _ in range(10):
+        eng.step()
+    assert eng.begin_step() is not None
+    assert eng.begin_step() is not None     # two dispatches in flight
+    assert len(eng.inflight_q) == 2
+    blob = eng.snapshot(drain=True)
+    assert not eng.inflight_q               # drained, effects applied
+    eng2 = _engine_with_work(depth=2)
+    eng2.restore(blob)
+    assert eng2.now == eng.now
+    assert set(eng2.active) == set(eng.active)
+    eng2.run()
+    assert not eng2.has_work
+    for rid in eng2.requests:
+        req = eng2.requests[rid]
+        if not req.active:
+            assert req.prefilled == req.prompt_len
+
+def test_projection_matches_completion():
+    """The speculative view formed mid-flight must equal the committed
+    state once the step lands (the depth-2 parity invariant, unit-sized)."""
+    eng = _engine_with_work(depth=2)
+    for _ in range(10):
+        eng.step()
+    inf = eng.begin_step()
+    assert inf is not None
+    proj, active_proj = eng._projected_requests()
+    snap = {rid: (proj[rid].prefilled, proj[rid].generated)
+            for rid in active_proj}
+    eng.complete_step()
+    real = {rid: (eng.requests[rid].prefilled, eng.requests[rid].generated)
+            for rid in eng.active}
+    assert snap == real
+    assert sorted(active_proj) == sorted(eng.active)
+
+
+def test_diverged_speculation_rolls_back():
+    """A queued dispatch whose plan no longer matches committed reality is
+    dropped at reconciliation, and the engine still finishes everything."""
+    eng = _engine_with_work(depth=2, n_req=3)
+    for _ in range(10):
+        eng.step()
+    assert eng.begin_step() is not None
+    second = eng.begin_step()
+    assert second is not None and len(eng.inflight_q) == 2
+    # sabotage: force a request referenced by the queued dispatch to look
+    # finished, as an executor-side surprise completion would
+    rid = second.plan.items[0].req_id
+    req = eng.requests[rid]
+    req.max_new_tokens = max(req.generated, 1)
+    eng.complete_step()                     # applies 1st, reconciles 2nd
+    assert eng.rollbacks >= 1
+    assert all(all(it.req_id != rid for it in inf.plan.items)
+               or inf.deferred for inf in eng.inflight_q)
+    while eng.inflight_q:
+        eng.complete_step()
+    eng.run()
+    assert not eng.has_work
+
+
+def test_allocator_shrink_rollback_invariants():
+    """KV-side rollback: shrink() returns exactly the reserved tail pages
+    and preserves the allocator conservation law."""
+    alloc = BlockAllocator(16, block_size=4)
+    tbl = alloc.extend(1, 10)               # 3 pages
+    assert len(tbl) == 3
+    free0 = alloc.free_blocks
+    alloc.extend(1, 6)                      # reserve a horizon of 6 -> 4 pages
+    assert alloc.free_blocks == free0 - 1
+    alloc.shrink(1, 6)                      # roll the horizon back
+    assert alloc.free_blocks == free0
+    assert alloc.context_len(1) == 10
+    assert len(alloc.tables[1]) == 3
+    alloc.check_invariants()
+    with pytest.raises(AssertionError):
+        alloc.shrink(1, 11)                 # can't shrink past zero
+
+
+# ----------------------------------------------------------------------
+# metrics plumbing
+# ----------------------------------------------------------------------
+
+def test_sched_delay_and_host_breakdown_in_summary():
+    trace = make_gamma_trace("qwentrace", rps=2.0, duration=20, seed=1)
+    res = replay(trace, n_ranks=1, lb="roundrobin", true_model=TRUE,
+                 est_model=EST, seed=0, host_overhead=0.002)
+    s = res.summary
+    for key in ("sched_delay_p50", "sched_delay_p99", "sched_delay_mean",
+                "dispatches", "host_overhead_s", "engine_steps",
+                "rollbacks"):
+        assert key in s, key
+    assert s["sched_delay_p50"] >= 0.0
+    assert s["dispatches"] > 0
+    assert abs(s["host_overhead_s"] - 0.002 * s["dispatches"]) < 1e-9
+    # per-request delays survive into the metrics objects
+    delays = [m.sched_delay for m in res.metrics if m.sched_delay is not None]
+    assert delays and all(d >= 0 for d in delays)
+    # and summarize() merges engine counters only when given
+    bare = summarize(res.metrics, 1.0)
+    assert "dispatches" not in bare and "sched_delay_p50" in bare

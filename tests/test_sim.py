@@ -68,7 +68,10 @@ def test_event_driven_matches_lockstep_single_rank():
         eng.submit(Request(i, tr.arrival, tr.prompt_len, tr.output_len,
                            0.5, 0.05))
     done = eng.run()
-    lockstep = summarize(done, duration=max(eng.now, 1e-9))
+    # the cluster summary also carries the engine's control-plane counters
+    # (DESIGN.md §12) — dispatch counts must agree between the drivers too
+    lockstep = summarize(done, duration=max(eng.now, 1e-9),
+                         host=eng.host_stats())
     assert res.summary == lockstep
     sim_eng = res.cluster.engines[0]
     assert len(sim_eng.steps) == len(eng.steps)
