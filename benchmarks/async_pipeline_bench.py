@@ -165,8 +165,9 @@ def main() -> None:
         print(json.dumps(r))
     # standalone runs write the repo-root perf-trajectory summary too; the
     # benchmarks.run driver writes it (with a headline) for driver runs
-    from .run import write_bench_summary
-    print(f"trajectory -> {write_bench_summary('async_pipeline', rows)}")
+    from .run import _headline, write_bench_summary
+    print("trajectory -> "
+          f"{write_bench_summary('async_pipeline', rows, _headline('async_pipeline', rows))}")
     if not args.smoke:
         return
     by = {r["mode"]: r for r in rows}

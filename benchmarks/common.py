@@ -83,12 +83,17 @@ def run_system(system: str, trace, hw: HardwareProfile, ttft_slo: float,
                tpot_slo: float, seed: int = 0, sarathi_budget: int = 0,
                n_ranks: int = 1, lb: str = "roundrobin",
                prefix_cache_pages: int = 0,
-               step_hook: Optional[Callable] = None) -> dict:
+               step_hook: Optional[Callable] = None,
+               sched_extra: Optional[dict] = None) -> dict:
     """Replay `trace` on one of the paper's systems via ``repro.sim.replay``.
 
     ``prefix_cache_pages`` > 0 arms the per-rank radix prefix cache
-    (DESIGN.md §10); only traces carrying token ids can hit."""
+    (DESIGN.md §10); only traces carrying token ids can hit.
+    ``sched_extra`` merges extra kwargs into the scheduler stack factory —
+    e.g. ``{"vtc": True}`` swaps the admission stage to per-tenant VTC fair
+    queuing (DESIGN.md §13)."""
     sched, admission, kw = system_spec(system, hw, tpot_slo, sarathi_budget)
+    kw = {**kw, **(sched_extra or {})}
     res = replay(trace, scheduler=sched, n_ranks=n_ranks, lb=lb,
                  ttft_slo=ttft_slo, tpot_slo=tpot_slo, admission=admission,
                  true_model=hw.model(), est_model=initial_estimate(hw),

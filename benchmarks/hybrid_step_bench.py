@@ -185,6 +185,12 @@ def main() -> None:
     rows = run(quick=not args.full, smoke=args.smoke)
     for r in rows:
         print(json.dumps(r))
+    # repo-root perf-trajectory summary, same artifact (and same headline
+    # derivation) as the run.py driver — so standalone/CI smoke runs leave
+    # a record that diffs cleanly against driver-produced ones
+    from .run import _headline, write_bench_summary
+    print("trajectory -> "
+          f"{write_bench_summary('hybrid_step', rows, _headline('hybrid_step', rows))}")
     if args.json_out:
         # merge under our own key so driver-produced results survive
         merged = {}

@@ -84,6 +84,12 @@ def main() -> None:
     rows = run(quick=not args.full, smoke=args.smoke)
     for r in rows:
         print(json.dumps(r))
+    # repo-root perf-trajectory summary, same artifact (and same headline
+    # derivation) as the run.py driver — so standalone/CI smoke runs leave
+    # a record that diffs cleanly against driver-produced ones
+    from .run import _headline, write_bench_summary
+    print("trajectory -> "
+          f"{write_bench_summary('prefix_cache', rows, _headline('prefix_cache', rows))}")
     # smoke sanity: caching on must actually hit on the locality scenarios
     warm = [r for r in rows if r.get("cache_pages", 0) > 0
             and r["scenario"] != "affinity-dp4"]

@@ -27,6 +27,8 @@ _TRAJECTORY_KEYS = (
     "steps", "slo_attainment", "effective_rps", "peak_effective_rps",
     "speedup", "dispatches_per_step", "dispatch_ratio", "step_ms",
     "hit_rate", "host_overhead_s",
+    "interactive_ttft_p99", "interactive_tpot_p99",
+    "interactive_p99_vs_isolated", "preemptions",
 )
 
 
@@ -126,6 +128,11 @@ def _headline(name: str, rows: list[dict]) -> str:
                     f"{warm['ttft_p99_ms']}ms @hit={warm['hit_rate']} | "
                     f"dp4 hit cache-lb={aff.get('cache')} "
                     f"rr={aff.get('roundrobin')}")
+        if name == "fairness":
+            by = {r["system"]: r for r in rows}
+            return ("interactive p99 vs isolated: "
+                    f"fcfs={by['fcfs-admission']['interactive_p99_vs_isolated']}x "
+                    f"vtc={by['vtc-admission']['interactive_p99_vs_isolated']}x")
         if name == "roofline":
             n = len(rows)
             dom = {}
@@ -163,9 +170,9 @@ def main() -> None:
     quick = not args.full
 
     from . import (async_pipeline_bench, breakdown_bench, cluster_bench,
-                   cost_model_bench, goodput_bench, hybrid_step_bench,
-                   latency_bench, prefix_cache_bench, roofline_report,
-                   slo_grid_bench, unfairness_bench)
+                   cost_model_bench, fairness_bench, goodput_bench,
+                   hybrid_step_bench, latency_bench, prefix_cache_bench,
+                   roofline_report, slo_grid_bench, unfairness_bench)
     benches = {
         "cost_model": cost_model_bench.run,      # paper §3.2 accuracy claim
         "unfairness": unfairness_bench.run,      # Fig 1/2
@@ -177,6 +184,7 @@ def main() -> None:
         "prefix_cache": prefix_cache_bench.run,  # DESIGN.md §10 reuse
         "hybrid_step": hybrid_step_bench.run,    # DESIGN.md §11 fused step
         "async_pipeline": async_pipeline_bench.run,  # DESIGN.md §12
+        "fairness": fairness_bench.run,          # DESIGN.md §13 VTC stack
         "roofline": roofline_report.run,         # deliverable (g)
     }
     all_rows = {}

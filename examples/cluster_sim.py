@@ -96,6 +96,33 @@ def main() -> None:
     show_cached("cache 1024pg (cache-affinity LB)", lb="cache",
                 prefix_cache_pages=1024)
 
+    # per-tenant fairness (DESIGN.md §13): one flooding batch tenant vs.
+    # interactive tenants; the VTC admission stage holds the flood's
+    # prefills once its virtual-token counter overdrafts, and every rank
+    # reports per-tenant TTFT/TPOT plus its fairness debt on the LB ticks
+    print("-- multi-tenant adversarial: FCFS vs VTC admission --")
+    mt_trace = make_scenario("multi-tenant-adversarial", rps=0.3 * rps,
+                             duration=args.duration, seed=args.seed)
+
+    def show_tenants(name, **kw):
+        from repro.core import FormationConfig
+        res = replay(mt_trace, scheduler="fairbatching", n_ranks=args.dp,
+                     true_model=hw.model(), est_model=initial_estimate(hw),
+                     seed=args.seed, lb="pab",
+                     sched_kwargs={"formation":
+                                   FormationConfig(max_time_budget=0.1),
+                                   **kw})
+        per = res.summary.get("per_tenant", {})
+        inter = [v for t, v in per.items() if t != "flood"]
+        worst = max((v["ttft_p99"] for v in inter), default=float("nan"))
+        flood = per.get("flood", {})
+        print(f"{name:32s} interactive_worst_p99={worst*1e3:.0f}ms "
+              f"flood_p99={flood.get('ttft_p99', float('nan'))*1e3:.0f}ms "
+              f"debt={ {t: round(d) for t, d in sorted(res.cluster.engines[0].tenant_debt().items()) } }")
+
+    show_tenants("FCFS admission")
+    show_tenants("VTC admission", vtc=True)
+
     # bit-reproducibility: the whole event-driven run is a function of the seed
     again = replay(trace, scheduler="fairbatching", n_ranks=args.dp,
                    lb="pab", admission=True, true_model=hw.model(),

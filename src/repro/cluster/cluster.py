@@ -142,6 +142,12 @@ class Cluster:
         # control plane (not its FLOPs) is the bottleneck
         metrics.update(eng.host_stats())
         metrics["sched_delay_mean"] = eng.sched_delay_mean()
+        debt = eng.tenant_debt()
+        if debt:
+            # per-tenant fairness debt from the VTC admission stage
+            # (DESIGN.md §13): lets CacheAwareLB route a tenant's next
+            # request away from ranks where it is already in overdraft
+            metrics["tenant_debt"] = dict(debt)
         if eng.prefix_cache is not None:
             # cache summary rides the existing report tick (DESIGN.md §10):
             # token hit counters plus the prefix-hash digest CacheAwareLB
@@ -161,10 +167,12 @@ class Cluster:
         # per-request SLO classes (heterogeneous traces) override defaults
         ttft = tr.ttft_slo if tr.ttft_slo is not None else self.cfg.ttft_slo
         tpot = tr.tpot_slo if tr.tpot_slo is not None else self.cfg.tpot_slo
-        rank = self.lb.route(tr.prompt_len, tokens=tr.tokens)
+        rank = self.lb.route(tr.prompt_len, tokens=tr.tokens,
+                             tenant=tr.tenant)
         req = Request(req_id, arrival, tr.prompt_len, tr.output_len,
                       ttft, tpot,
-                      tokens=list(tr.tokens) if tr.tokens else None)
+                      tokens=list(tr.tokens) if tr.tokens else None,
+                      tenant=tr.tenant)
         if rank is None:
             req.state = RequestState.REJECTED
             self.done.append(measure(req))
@@ -188,14 +196,16 @@ class Cluster:
             # original prompt token ids are kept (generated ids are not
             # re-derivable here), so the destination's prefix cache can
             # still serve the prompt part of the re-prefill; prompt_len may
-            # therefore exceed len(tokens) for migrated requests.
-            new_prompt = req.prompt_len + max(0, req.generated)
+            # therefore exceed len(tokens) for migrated requests. Only
+            # tokens not already folded by an earlier preemption/migration
+            # requeue are added (``refolded`` guards double-counting).
+            new_prompt = req.prompt_len + max(0, req.generated - req.refolded)
             src = self._req_src.get(req.req_id)
             toks = src.tokens if src is not None else None
             tr = TraceRequest(req.arrival, new_prompt,
                               max(1, req.max_new_tokens - req.generated),
                               tokens=toks)
-            nr = self.lb.route(tr.prompt_len, tokens=toks)
+            nr = self.lb.route(tr.prompt_len, tokens=toks, tenant=req.tenant)
             if nr is None:
                 req.state = RequestState.REJECTED
                 self.done.append(measure(req))
@@ -204,10 +214,12 @@ class Cluster:
                                 tokens=toks)
             moved = Request(req.req_id, req.arrival, tr.prompt_len,
                             req.max_new_tokens, req.ttft_slo, req.tpot_slo,
-                            tokens=list(toks) if toks else None)
+                            tokens=list(toks) if toks else None,
+                            tenant=req.tenant)
             # keep already-emitted token times: SLO accounting is end-to-end
             moved.output_times = list(req.output_times)
             moved.generated = req.generated
+            moved.refolded = req.generated   # prompt_len already holds them
             if req.output_times:
                 moved.state = RequestState.PREFILL
             self.engines[nr].submit(moved)
@@ -225,6 +237,8 @@ class Cluster:
                 self.lb.counts.append(0.0)
             if hasattr(self.lb, "prefixes"):
                 self.lb.prefixes.append(set())
+            if hasattr(self.lb, "tenant_debt"):
+                self.lb.tenant_debt.append({})
         else:
             self.lb.set_alive(rank, True)
 

@@ -36,7 +36,8 @@ from ..cache.radix import block_hashes
 class LoadBalancer(Protocol):
     name: str
 
-    def route(self, prompt_len: int, tokens=None) -> Optional[int]: ...
+    def route(self, prompt_len: int, tokens=None,
+              tenant: str = "default") -> Optional[int]: ...
     def report(self, rank: int, metrics: dict) -> None: ...
     def on_dispatch(self, rank: int, prompt_len: int, output_len_hint: int,
                     tokens=None) -> None: ...
@@ -69,7 +70,8 @@ class RoundRobinLB(_Base):
         super().__init__(n_ranks)
         self._i = 0
 
-    def route(self, prompt_len: int, tokens=None) -> Optional[int]:
+    def route(self, prompt_len: int, tokens=None,
+              tenant: str = "default") -> Optional[int]:
         ranks = self._ranks()
         if not ranks:
             return None
@@ -92,7 +94,8 @@ class RequestCountLB(_Base):
         self.counts = [0.0] * n_ranks
         self.ww = waiting_weight
 
-    def route(self, prompt_len: int, tokens=None) -> Optional[int]:
+    def route(self, prompt_len: int, tokens=None,
+              tenant: str = "default") -> Optional[int]:
         ranks = self._ranks()
         if not ranks:
             return None
@@ -114,7 +117,8 @@ class PABLB(_Base):
         super().__init__(n_ranks)
         self.pab = [math.inf] * n_ranks
 
-    def route(self, prompt_len: int, tokens=None) -> Optional[int]:
+    def route(self, prompt_len: int, tokens=None,
+              tenant: str = "default") -> Optional[int]:
         ranks = self._ranks()
         if not ranks:
             return None
@@ -152,17 +156,28 @@ class CacheAwareLB(_Base):
     under overload). ``on_dispatch`` adds the dispatched prompt's hashes to
     the local view so a burst of identical prefixes sticks to one rank even
     before its next report tick.
+
+    Per-tenant fairness debt (DESIGN.md §13): ranks running a VTC admission
+    stage report ``tenant_debt`` — each tenant's virtual-token overdraft —
+    on the same ticks. Routing subtracts ``fairness_weight ×`` the incoming
+    tenant's debt at each rank from its affinity score, steering a tenant
+    whose counters are deep in overdraft somewhere its work won't be held
+    at admission (the locality-vs-fairness trade of *Locality-aware Fair
+    Scheduling in LLM Serving*, now with both currencies explicit).
     """
     name = "cache-lb"
 
     def __init__(self, n_ranks: int, affinity_weight: float = 1.0,
-                 block_size: int = 128, max_local_hashes: int = 8192):
+                 block_size: int = 128, max_local_hashes: int = 8192,
+                 fairness_weight: float = 0.5):
         super().__init__(n_ranks)
         self.pab = [math.inf] * n_ranks
         self.prefixes: list[set[int]] = [set() for _ in range(n_ranks)]
         self.affinity_weight = affinity_weight
         self.block_size = block_size
         self.max_local_hashes = max_local_hashes
+        self.fairness_weight = fairness_weight
+        self.tenant_debt: list[dict] = [{} for _ in range(n_ranks)]
 
     def _est_hit(self, rank: int, hashes: list[int]) -> int:
         n = 0
@@ -173,16 +188,19 @@ class CacheAwareLB(_Base):
             n += 1
         return n * self.block_size
 
-    def route(self, prompt_len: int, tokens=None) -> Optional[int]:
+    def route(self, prompt_len: int, tokens=None,
+              tenant: str = "default") -> Optional[int]:
         ranks = self._ranks()
         if not ranks:
             return None
         hashes = block_hashes(tokens, self.block_size) if tokens else []
         hit = {r: self._est_hit(r, hashes) for r in ranks}
+        debt = {r: self.tenant_debt[r].get(tenant, 0.0) for r in ranks}
         fitting = [r for r in ranks if self.pab[r] >= prompt_len - hit[r]]
         if fitting:
             return max(fitting,
-                       key=lambda r: (self.affinity_weight * hit[r],
+                       key=lambda r: (self.affinity_weight * hit[r]
+                                      - self.fairness_weight * debt[r],
                                       self.pab[r]))
         return max(ranks, key=lambda r: self.pab[r])
 
@@ -190,6 +208,8 @@ class CacheAwareLB(_Base):
         self.pab[rank] = metrics.get("pab", 0.0)
         if "cache_prefixes" in metrics:
             self.prefixes[rank] = set(metrics["cache_prefixes"])
+        if "tenant_debt" in metrics:
+            self.tenant_debt[rank] = dict(metrics["tenant_debt"])
 
     def on_dispatch(self, rank: int, prompt_len: int, output_len_hint: int,
                     tokens=None) -> None:

@@ -7,9 +7,15 @@ from .slo import token_deadline, request_deadline, slack, attainment
 from .cost_model import (LinearCostModel, TokenCostModel, PaddedCostModel,
                          RecursiveLeastSquares, fit_linear, default_buckets)
 from .capacity import commit_horizon, init_time_budget, min_tpot_slo
-from .batch_formation import FormationConfig, classify, form_batch
+from .batch_formation import (FormationConfig, classify, form_batch,
+                              form_prefill_first, form_stall_free)
 from .pab import prefill_admission_budget, PABAdmissionController
-from .schedulers import (Scheduler, FairBatchingScheduler, SarathiScheduler,
+from .policy import (AdaptiveTimeCapacity, AdmissionPolicy, CapacityPolicy,
+                     FCFSAdmission, FairFormation, FixedBatchCapacity,
+                     FormationPolicy, PrefillFirstFormation, Scheduler,
+                     SchedulerStack, StallFreeFormation, TokenBudgetCapacity,
+                     UncappedCapacity, VTCAdmission)
+from .schedulers import (FairBatchingScheduler, SarathiScheduler,
                          VLLMVanillaScheduler, make_scheduler)
 
 __all__ = [
@@ -19,7 +25,13 @@ __all__ = [
     "RecursiveLeastSquares", "fit_linear", "default_buckets",
     "commit_horizon", "init_time_budget", "min_tpot_slo",
     "FormationConfig", "classify", "form_batch",
+    "form_stall_free", "form_prefill_first",
     "prefill_admission_budget", "PABAdmissionController",
+    "SchedulerStack", "AdmissionPolicy", "CapacityPolicy", "FormationPolicy",
+    "FCFSAdmission", "VTCAdmission",
+    "AdaptiveTimeCapacity", "TokenBudgetCapacity", "FixedBatchCapacity",
+    "UncappedCapacity",
+    "FairFormation", "StallFreeFormation", "PrefillFirstFormation",
     "Scheduler", "FairBatchingScheduler", "SarathiScheduler",
     "VLLMVanillaScheduler", "make_scheduler",
 ]

@@ -1,4 +1,13 @@
-"""Fair and dynamic batch formation — the paper's Algorithm 1 (§3.3).
+"""Batch formation — the formation stage of the scheduler stack
+(DESIGN.md §13).
+
+``form_batch`` is the paper's Algorithm 1 (§3.3); ``form_stall_free``
+(Sarathi) and ``form_prefill_first`` (vLLM-vanilla) are the baseline
+packers. All three are pure functions over ``SchedTask`` views —
+``core.policy`` wraps them as composable ``FormationPolicy`` stages and
+``core.schedulers`` preconfigures the named stacks.
+
+Fair and dynamic batch formation — the paper's Algorithm 1 (§3.3).
 
 Three groups, packed in reversed-priority order:
 
@@ -114,3 +123,65 @@ def form_batch(tasks: Sequence[SchedTask], now: float, model: LinearCostModel,
     return BatchPlan(items=items, predicted_time=predicted, time_budget=budget0,
                      token_budget_used=cfg.max_token_budget - token_budget,
                      token_budget_total=cfg.max_token_budget)
+
+
+def form_stall_free(tasks: Sequence[SchedTask], now: float,
+                    model: LinearCostModel, token_budget: int) -> BatchPlan:
+    """Sarathi stall-free packing (paper §2.3 baseline). Decode-prioritizing:
+
+    1. every active decode task joins the batch (1 token each);
+    2. leftover token budget is given to prefills, FCFS, chunked.
+    """
+    items: list[BatchItem] = []
+    budget = token_budget
+    total_ctx = 0
+    for t in tasks:
+        if t.is_decode:
+            items.append(BatchItem(t.req_id, 1, t.kind))
+            budget -= 1
+            total_ctx += t.cost_context()
+    for t in sorted((t for t in tasks if t.is_prefill), key=lambda t: t.arrival):
+        if budget <= 0:
+            break
+        grant = min(budget, t.new_tokens)
+        items.append(BatchItem(t.req_id, grant, t.kind))
+        budget -= grant
+        total_ctx += t.cost_context()
+    nt = sum(it.n_tokens for it in items)
+    return BatchPlan(items=items,
+                     predicted_time=model.step_time(nt, total_ctx),
+                     time_budget=math.inf,
+                     token_budget_used=token_budget - budget,
+                     token_budget_total=token_budget)
+
+
+def form_prefill_first(tasks: Sequence[SchedTask], now: float,
+                       model: LinearCostModel,
+                       max_num_batched_tokens: int) -> BatchPlan:
+    """vLLM-vanilla packing (§2.3 baseline): waiting prefills are scheduled
+    first (whole prompts, FCFS) up to ``max_num_batched_tokens``; decodes run
+    only when no prefill waits — a prompt burst delays decodes, reproducing
+    vanilla's TBT/TPOT tail (Fig 6)."""
+    items: list[BatchItem] = []
+    budget = max_num_batched_tokens
+    total_ctx = 0
+    prefills = sorted((t for t in tasks if t.is_prefill), key=lambda t: t.arrival)
+    for t in prefills:
+        if budget <= 0:
+            break
+        grant = min(budget, t.new_tokens)
+        items.append(BatchItem(t.req_id, grant, t.kind))
+        budget -= grant
+        total_ctx += t.cost_context()
+    if not items:  # no waiting prefill: pure decode batch
+        for t in tasks:
+            if t.is_decode and budget > 0:
+                items.append(BatchItem(t.req_id, 1, t.kind))
+                budget -= 1
+                total_ctx += t.cost_context()
+    nt = sum(it.n_tokens for it in items)
+    return BatchPlan(items=items,
+                     predicted_time=model.step_time(nt, total_ctx),
+                     time_budget=math.inf,
+                     token_budget_used=max_num_batched_tokens - budget,
+                     token_budget_total=max_num_batched_tokens)

@@ -1,7 +1,12 @@
-"""Step-level schedulers: FairBatching and the paper's baselines (§2.3, §5.1).
+"""Step-level schedulers as preconfigured policy stacks (DESIGN.md §13).
 
-All schedulers implement ``schedule(now, tasks) -> BatchPlan`` over the same
-``SchedTask`` views, so engines/simulators/benchmarks can swap them freely.
+Every named scheduler is a ``core.policy.SchedulerStack`` — an
+admission → capacity → formation pipeline — preconfigured to reproduce its
+paper's behaviour. All stacks implement ``schedule(now, tasks) -> BatchPlan``
+over the same ``SchedTask`` views, so engines/simulators/benchmarks swap
+them freely, and any stack can additionally take a per-tenant VTC admission
+stage (``vtc=True`` in ``make_scheduler``) without touching its capacity or
+formation behaviour.
 
 Systems reproduced:
   * ``VLLMVanillaScheduler``   — prefill-prioritizing FCFS with a large
@@ -11,48 +16,25 @@ Systems reproduced:
   * ``FairBatchingScheduler``  — the paper. Variants for the Fig-7 ablation
     ladder are flags: FB-FixBatch (``budget_mode="fixed"``), FB-TokenBudget
     (``budget_mode="token"``), FB-vanilla (``budget_mode="time"``).
+
+With FCFS admission (the default) each stack is bit-identical to the
+pre-stack monolithic scheduler it replaced — pinned by
+tests/test_policy.py.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Optional, Protocol, Sequence
+from typing import Optional
 
-from . import capacity, slo
-from .batch_formation import FormationConfig, form_batch
-from .cost_model import LinearCostModel, RecursiveLeastSquares
-from .types import BatchItem, BatchPlan, SchedTask, TaskKind
-
-
-class Scheduler(Protocol):
-    name: str
-
-    def schedule(self, now: float, tasks: Sequence[SchedTask]) -> BatchPlan: ...
-
-    def observe(self, total_new_tokens: int, total_context: int,
-                measured_time: float) -> None: ...
+from .batch_formation import FormationConfig
+from .cost_model import LinearCostModel
+from .policy import (AdaptiveTimeCapacity, AdmissionPolicy, FairFormation,
+                     FixedBatchCapacity, PrefillFirstFormation, Scheduler,
+                     SchedulerStack, StallFreeFormation, TokenBudgetCapacity,
+                     UncappedCapacity, VTCAdmission)
 
 
-class _CalibratingScheduler:
-    """Shared online-calibration plumbing (paper §3.2, 'continuously calibrated')."""
-
-    def __init__(self, model: LinearCostModel, calibrate: bool = True):
-        self.model = model
-        self._rls: Optional[RecursiveLeastSquares] = None
-        if calibrate:
-            self._rls = RecursiveLeastSquares(theta0=(model.a, model.b, model.c))
-
-    def observe(self, total_new_tokens: int, total_context: int,
-                measured_time: float) -> None:
-        if self._rls is None or total_new_tokens <= 0:
-            return
-        self._rls.update(total_new_tokens, total_context, measured_time)
-        if self._rls.n_obs >= 32:          # warmup before trusting online fit
-            self.model = self._rls.model()
-
-
-class FairBatchingScheduler(_CalibratingScheduler):
-    """The paper's scheduler. ``budget_mode``:
+class FairBatchingScheduler(SchedulerStack):
+    """The paper's scheduler as a stack. ``budget_mode``:
 
     - "time"  (FB-vanilla): adaptive time budget from decode slack (§3.2).
     - "token" (FB-TB ablation): slack converted to a token budget through the
@@ -65,128 +47,76 @@ class FairBatchingScheduler(_CalibratingScheduler):
                  formation: Optional[FormationConfig] = None,
                  budget_mode: str = "time", calibrate: bool = True,
                  fixed_token_budget: int = 512,
-                 cold_start_safety: float = 0.7, warmup_obs: int = 32):
-        super().__init__(model, calibrate)
+                 cold_start_safety: float = 0.7, warmup_obs: int = 32,
+                 admission: Optional[AdmissionPolicy] = None):
         assert budget_mode in ("time", "token", "fixed")
         self.budget_mode = budget_mode
         self.formation = formation or FormationConfig()
         self.fixed_token_budget = fixed_token_budget
-        self.cold_start_safety = cold_start_safety
-        self.warmup_obs = warmup_obs
-        self.name = {"time": "fairbatching", "token": "fb-token-budget",
-                     "fixed": "fb-fix-batch"}[budget_mode]
-
-    def schedule(self, now: float, tasks: Sequence[SchedTask]) -> BatchPlan:
-        cfg = self.formation
-        # Cold start: until the online calibration has seen enough steps the
-        # offline model can't be trusted near deadlines — pack extra
-        # conservatively (paper assumes an offline-profiled model; this
-        # covers deploys onto unprofiled hardware).
-        if self._rls is not None and self._rls.n_obs < self.warmup_obs:
-            cfg = dataclasses.replace(
-                cfg, safety=cfg.safety * self.cold_start_safety)
-        model = self.model
-        if self.budget_mode == "fixed":
-            cfg = dataclasses.replace(cfg, max_token_budget=self.fixed_token_budget)
-            # Fixed-size steps: the time budget never binds, only tokens do.
-            budget = self.fixed_token_budget
-            model = LinearCostModel(a=model.a, b=model.b, c=model.c)
-            cfg = dataclasses.replace(cfg, max_time_budget=model.step_time(budget, 0))
-        elif self.budget_mode == "token":
-            # Convert the slack-derived time budget to tokens via the
-            # token-only model: ignores context, reproducing FB-TB's
-            # mis-estimation under long contexts (paper Fig 7 step 4).
-            t_budget = capacity.init_time_budget(tasks, now, cfg.max_time_budget)
-            tok = model.tokens_within(t_budget) if math.isfinite(t_budget) else cfg.max_token_budget
-            cfg = dataclasses.replace(
-                cfg, max_token_budget=max(1, min(tok, cfg.max_token_budget)))
-            model = LinearCostModel(a=model.a, b=model.b, c=0.0)
-        return form_batch(tasks, now, model, cfg)
+        cap = {
+            "time": lambda: AdaptiveTimeCapacity(
+                self.formation, cold_start_safety, warmup_obs),
+            "token": lambda: TokenBudgetCapacity(
+                self.formation, cold_start_safety, warmup_obs),
+            "fixed": lambda: FixedBatchCapacity(
+                fixed_token_budget, self.formation, cold_start_safety,
+                warmup_obs),
+        }[budget_mode]()
+        name = {"time": "fairbatching", "token": "fb-token-budget",
+                "fixed": "fb-fix-batch"}[budget_mode]
+        super().__init__(name, model, admission=admission,
+                         capacity_policy=cap, formation=FairFormation(),
+                         calibrate=calibrate)
 
 
-class SarathiScheduler(_CalibratingScheduler):
-    """Stall-free batching (Sarathi). Decode-prioritizing:
-
-    1. every active decode task joins the batch (1 token each);
-    2. leftover token budget is given to prefills, FCFS, chunked.
+class SarathiScheduler(SchedulerStack):
+    """Stall-free batching (Sarathi) as a stack.
 
     ``token_budget`` is the tuned hyperparameter (paper: "best tuned for each
     testcase"); benchmarks sweep it.
     """
 
     def __init__(self, model: LinearCostModel, token_budget: int = 512,
-                 calibrate: bool = True):
-        super().__init__(model, calibrate)
+                 calibrate: bool = True,
+                 admission: Optional[AdmissionPolicy] = None):
         self.token_budget = token_budget
-        self.name = "sarathi"
-
-    def schedule(self, now: float, tasks: Sequence[SchedTask]) -> BatchPlan:
-        items: list[BatchItem] = []
-        budget = self.token_budget
-        total_ctx = 0
-        for t in tasks:
-            if t.is_decode:
-                items.append(BatchItem(t.req_id, 1, t.kind))
-                budget -= 1
-                total_ctx += t.cost_context()
-        for t in sorted((t for t in tasks if t.is_prefill), key=lambda t: t.arrival):
-            if budget <= 0:
-                break
-            grant = min(budget, t.new_tokens)
-            items.append(BatchItem(t.req_id, grant, t.kind))
-            budget -= grant
-            total_ctx += t.cost_context()
-        nt = sum(it.n_tokens for it in items)
-        return BatchPlan(items=items,
-                         predicted_time=self.model.step_time(nt, total_ctx),
-                         time_budget=math.inf,
-                         token_budget_used=self.token_budget - budget,
-                         token_budget_total=self.token_budget)
+        super().__init__("sarathi", model, admission=admission,
+                         capacity_policy=UncappedCapacity(),
+                         formation=StallFreeFormation(token_budget),
+                         calibrate=calibrate)
 
 
-class VLLMVanillaScheduler(_CalibratingScheduler):
-    """Prefill-prioritizing FCFS with a large max-BS (vLLM default).
-
-    When prefills are waiting they are scheduled first (whole prompts, FCFS)
-    up to ``max_num_batched_tokens``; decodes fill what remains — so a prompt
-    burst delays decodes, reproducing vLLM-vanilla's TBT/TPOT tail (Fig 6).
-    """
+class VLLMVanillaScheduler(SchedulerStack):
+    """Prefill-prioritizing FCFS with a large max-BS (vLLM default) as a
+    stack."""
 
     def __init__(self, model: LinearCostModel,
-                 max_num_batched_tokens: int = 8192, calibrate: bool = True):
-        super().__init__(model, calibrate)
+                 max_num_batched_tokens: int = 8192, calibrate: bool = True,
+                 admission: Optional[AdmissionPolicy] = None):
         self.max_tokens = max_num_batched_tokens
-        self.name = "vllm-vanilla"
-
-    def schedule(self, now: float, tasks: Sequence[SchedTask]) -> BatchPlan:
-        items: list[BatchItem] = []
-        budget = self.max_tokens
-        total_ctx = 0
-        prefills = sorted((t for t in tasks if t.is_prefill), key=lambda t: t.arrival)
-        for t in prefills:
-            if budget <= 0:
-                break
-            grant = min(budget, t.new_tokens)
-            items.append(BatchItem(t.req_id, grant, t.kind))
-            budget -= grant
-            total_ctx += t.cost_context()
-        if not items:  # no waiting prefill: pure decode batch
-            for t in tasks:
-                if t.is_decode and budget > 0:
-                    items.append(BatchItem(t.req_id, 1, t.kind))
-                    budget -= 1
-                    total_ctx += t.cost_context()
-        nt = sum(it.n_tokens for it in items)
-        return BatchPlan(items=items,
-                         predicted_time=self.model.step_time(nt, total_ctx),
-                         time_budget=math.inf,
-                         token_budget_used=self.max_tokens - budget,
-                         token_budget_total=self.max_tokens)
+        super().__init__("vllm-vanilla", model, admission=admission,
+                         capacity_policy=UncappedCapacity(),
+                         formation=PrefillFirstFormation(
+                             max_num_batched_tokens),
+                         calibrate=calibrate)
 
 
-def make_scheduler(name: str, model: LinearCostModel, **kw) -> Scheduler:
+def make_scheduler(name: str, model: LinearCostModel, *,
+                   vtc: bool = False, vtc_weights: Optional[dict] = None,
+                   vtc_burst_tokens: int = 1024, **kw) -> Scheduler:
     """Factory used by configs/CLI: name in
-    {vllm-vanilla, sarathi, fairbatching, fb-token-budget, fb-fix-batch}."""
+    {vllm-vanilla, sarathi, fairbatching, fb-token-budget, fb-fix-batch}.
+
+    ``vtc=True`` swaps the stack's admission stage from FCFS to per-tenant
+    VTC fair queuing (DESIGN.md §13): ``vtc_weights`` maps tenant → service
+    weight (default 1.0) and ``vtc_burst_tokens`` bounds how far a tenant's
+    virtual counter may run ahead of the floor before its prefills are held.
+    Orthogonal to the capacity/formation stages — every named stack accepts
+    it.
+    """
+    if vtc:
+        kw["admission"] = VTCAdmission(weights=vtc_weights,
+                                       burst_tokens=vtc_burst_tokens)
     if name == "vllm-vanilla":
         return VLLMVanillaScheduler(model, **kw)
     if name == "sarathi":

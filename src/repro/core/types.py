@@ -44,6 +44,16 @@ class SchedTask:
     # batch formation / capacity / PAB charge prefill cost only for uncached
     # tokens — the *effective-token* accounting the cache subsystem adds.
     cached_context: int = 0
+    # Owning tenant/client for per-tenant fair queuing (DESIGN.md §13). The
+    # admission stage of the scheduler stack keys its virtual-token counters
+    # on it; single-tenant traces all carry the default and every stack
+    # behaves exactly as before.
+    tenant: str = "default"
+    # Seconds this task has been starved by the data plane (out-of-pool
+    # deferrals, DESIGN.md §13); 0 for tasks that have never been deferred.
+    # The engine fills it from its deferral registry so admission/formation
+    # can age starving work ahead of fresh arrivals.
+    deferred_age: float = 0.0
 
     @property
     def is_decode(self) -> bool:

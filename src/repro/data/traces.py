@@ -35,6 +35,11 @@ class TraceRequest:
     # match on them. None = lengths-only trace (cache never hits).
     # Invariant when present: len(tokens) == prompt_len.
     tokens: tuple[int, ...] | None = None
+    # Owning tenant/client (DESIGN.md §13): keys the scheduler stack's
+    # per-tenant VTC counters and the per-tenant metrics rollup. The
+    # default collapses every request into one tenant — fairness between
+    # tenants then never binds, preserving pre-tenant behaviour.
+    tenant: str = "default"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -293,6 +298,55 @@ def make_shared_sysprompt_trace(profile: str | TraceProfile = "qwentrace", *,
     return reqs
 
 
+def make_multitenant_adversarial_trace(
+        profile: str | TraceProfile = "qwentrace", *, rps: float,
+        duration: float, seed: int = 0, n_interactive: int = 3,
+        flood_factor: float = 6.0, flood_prompt_scale: float = 4.0,
+        interactive_ttft: float = 0.5,
+        interactive_tpot: float = 0.05) -> list[TraceRequest]:
+    """One flooding batch tenant vs. several interactive tenants
+    (DESIGN.md §13) — the workload per-tenant VTC admission exists for.
+
+    ``n_interactive`` tenants ("user0".."userN") submit short interactive
+    prompts as independent Poisson streams that together carry ``rps``.
+    Tenant "flood" additionally fires ``flood_factor`` × one interactive
+    tenant's rate with prompts ``flood_prompt_scale`` × longer — the
+    prompt-burst pattern that crowds interactive prefills out of an FCFS
+    batch queue. Per-tenant fairness should keep the interactive tenants'
+    TTFT near their isolated-run baseline; FCFS lets the flood win (the
+    acceptance bound asserted in tests/test_policy.py).
+    """
+    p = TRACE_PROFILES[profile] if isinstance(profile, str) else profile
+    rng = np.random.default_rng(seed)
+    reqs: list[TraceRequest] = []
+    per_tenant_rps = rps / max(n_interactive, 1)
+    for i in range(n_interactive):
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / max(per_tenant_rps, 1e-9))
+            if t >= duration:
+                break
+            (plen, olen), = _sample_lengths(rng, p, 1)
+            reqs.append(TraceRequest(t, plen, olen,
+                                     ttft_slo=interactive_ttft,
+                                     tpot_slo=interactive_tpot,
+                                     tenant=f"user{i}"))
+    t = 0.0
+    flood_rps = flood_factor * per_tenant_rps
+    while True:
+        t += rng.exponential(1.0 / max(flood_rps, 1e-9))
+        if t >= duration:
+            break
+        # batch-job shape: long prompts, terse outputs — the prefill-bound
+        # pattern that crowds an FCFS batch queue (decode residency is
+        # deliberately small; running decodes are never gated by admission)
+        (plen, olen), = _sample_lengths(rng, p, 1)
+        reqs.append(TraceRequest(t, int(plen * flood_prompt_scale),
+                                 max(2, olen // 8), tenant="flood"))
+    reqs.sort(key=lambda r: r.arrival)
+    return reqs
+
+
 # scenario registry: name -> generator(rps=..., duration=..., seed=...).
 # `make_trace` partials cover the paper's Table-2 MMPP workloads; the rest
 # are the beyond-paper stress scenarios above.
@@ -304,6 +358,7 @@ SCENARIOS = {
     "long-context": make_longcontext_trace,
     "multi-turn": make_multiturn_trace,
     "shared-sysprompt": make_shared_sysprompt_trace,
+    "multi-tenant-adversarial": make_multitenant_adversarial_trace,
 }
 
 

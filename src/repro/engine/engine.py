@@ -34,7 +34,7 @@ import dataclasses
 import json
 from typing import Optional
 
-from ..core import capacity
+from ..core import capacity, slo
 from ..core.cost_model import LinearCostModel
 from ..core.pab import PABAdmissionController, prefill_admission_budget
 from ..core.schedulers import Scheduler
@@ -64,6 +64,15 @@ class EngineConfig:
     # arriving right after a multi-step dispatch must still make its TTFT
     # SLO. 0 disables the reserve (envelopes alone bound the horizon).
     predicted_prefill_tokens: int = 0
+    # -- preemption & aged requeue (DESIGN.md §13) ---------------------
+    # evict a running request's KV pages (refcount/COW-aware) to unblock
+    # starving deferred work; the victim re-prefills its known prefix on
+    # resume. False reproduces the defer-and-retry engine bit for bit.
+    preemption: bool = False
+    # deferral age (seconds) after which a deferred item counts as starving:
+    # fresh prefills are held back so freed pages reach it, and (with
+    # preemption on) a victim is evicted on the next completed step
+    defer_age: float = 0.05
 
 
 @dataclasses.dataclass
@@ -166,6 +175,13 @@ class Engine:
         # O(1) running aggregate for the LB report tick (DESIGN.md §12)
         self._delay_sum = 0.0
         self._delay_n = 0
+        # deferral registry (DESIGN.md §13): req_id -> sim time of its first
+        # un-served deferral. Entries age into starvation (>= cfg.defer_age)
+        # which holds back fresh prefills and, with preemption on, evicts a
+        # victim; cleared the moment the request executes or finishes.
+        self.deferred_since: dict[int, float] = {}
+        self.preemptions = 0
+        self.defer_events = 0       # total item-deferrals observed (§13)
 
     @property
     def inflight(self) -> Optional[InflightStep]:
@@ -220,7 +236,14 @@ class Engine:
         return {"dispatches": self.n_dispatches,
                 "host_overhead_s": self.host_time,
                 "engine_steps": len(self.steps),
-                "rollbacks": self.rollbacks}
+                "rollbacks": self.rollbacks,
+                "preemptions": self.preemptions}
+
+    def tenant_debt(self) -> dict:
+        """Per-tenant fairness debt from the scheduler stack's admission
+        stage ({} for FCFS stacks); rides LB report ticks (DESIGN.md §13)."""
+        fn = getattr(self.sched, "tenant_debt", None)
+        return fn() if fn is not None else {}
 
     def sched_delay_mean(self) -> float:
         """Mean arrival→first-service delay over finished requests, O(1)."""
@@ -304,7 +327,8 @@ class Engine:
         t_launch = t_form + self.cfg.host_overhead
         if self.inflight_q:
             t_launch = max(t_launch, self.inflight_q[-1].t_end)
-        tasks = [proj[i].to_sched_task() for i in active_proj]
+        tasks = self._stamp_deferred(
+            [proj[i].to_sched_task() for i in active_proj], t_launch)
         plan = self.sched.schedule(t_launch, tasks)
         if not plan.items:
             return None
@@ -319,6 +343,22 @@ class Engine:
         else:
             internal, deferred = self._execute_single(plan, proj, tasks,
                                                       t_launch)
+
+        if deferred:
+            # admission-stage credit for grants the data plane could not
+            # place (DESIGN.md §13): the retry will re-charge them
+            refund = getattr(self.sched, "refund", None)
+            if refund is not None:
+                refund(plan, deferred)
+        if len(internal) > 1:
+            # a committed horizon serves len(internal) tokens per decode
+            # item but on_schedule billed only the plan's 1-token grants —
+            # top up the admission counters (DESIGN.md §13)
+            top_up = getattr(self.sched, "charge_extra_decode", None)
+            if top_up is not None:
+                top_up(plan, {it.req_id for it in plan.items
+                              if it.req_id not in deferred},
+                       len(internal) - 1)
 
         observed = horizon > 1 and not hasattr(self.executor, "execute_multi")
         if depth > 1 and not observed:
@@ -340,6 +380,39 @@ class Engine:
                            observed)
         self.inflight_q.append(inf)
         return inf
+
+    def _stamp_deferred(self, tasks: list, now: float) -> list:
+        """Age deferred tasks; hold back fresh prefills once one starves.
+
+        The silent-starvation fix (DESIGN.md §13): a request the data plane
+        deferred (out of KV pool) used to retry forever while every page
+        another request freed was snapped up by fresh prefill arrivals. Each
+        task now carries its ``deferred_age``, and once any deferral is older
+        than ``cfg.defer_age`` the never-served prefills are withheld from
+        the scheduler — freed pages reach the starving request first.
+        Partially-served prefills stay eligible: they already pin pages, and
+        pausing them would only delay the release the starver is waiting on.
+        A preemption victim's re-prefill is also withheld while anyone
+        starves: its slack-anchored arrival would otherwise outrank the very
+        request it yielded its pages to, re-stealing them in a thrash loop.
+        """
+        if not self.deferred_since:
+            return tasks
+        starving = False
+        for t in tasks:
+            since = self.deferred_since.get(t.req_id)
+            if since is not None:
+                t.deferred_age = max(0.0, now - since)
+                starving = starving or t.deferred_age >= self.cfg.defer_age
+        if not starving:
+            return tasks
+
+        def held(t) -> bool:
+            if not t.is_prefill or t.req_id in self.deferred_since:
+                return False
+            req = self.requests[t.req_id]
+            return req.first_scheduled is None or req.preemptions > 0
+        return [t for t in tasks if not held(t)]
 
     def _plan_horizon(self, plan: BatchPlan, tasks, active_proj, proj,
                       t_launch: float) -> int:
@@ -424,8 +497,10 @@ class Engine:
             if ((self.pending and self.pending[0].arrival <= t)
                     or self.arrival_hint <= t):
                 break                 # lock-step would admit it next step
-            nxt = self.sched.schedule(t, [local[r].to_sched_task()
-                                          for r in order])
+            # side-effect-free preview: billing a probe would double-charge
+            # the admission stage on top of charge_extra_decode (§13)
+            probe = getattr(self.sched, "probe", self.sched.schedule)
+            nxt = probe(t, [local[r].to_sched_task() for r in order])
             if ({it.req_id for it in nxt.items} != set(order)
                     or any(it.kind is not TaskKind.DECODE or it.n_tokens != 1
                            for it in nxt.items)):
@@ -494,18 +569,136 @@ class Engine:
             rec = StepRecord(t - ist.dt, t, ist.new_tokens, ist.context,
                              ran_p, ran_d, ist.predicted)
             self.steps.append(rec)
+        # deferral registry (DESIGN.md §13): a served item is no longer
+        # starving; an unserved one starts (or keeps) aging from the first
+        # dispatch that could not place it
+        self.defer_events += len(inf.deferred)
+        for it in plan.items:
+            if it.req_id not in inf.deferred:
+                self.deferred_since.pop(it.req_id, None)
+            elif it.req_id in self.requests and self.requests[it.req_id].active:
+                self.deferred_since.setdefault(it.req_id, inf.t_start)
         # fail loudly on a KV-pool deadlock: if every item keeps deferring,
         # no request can ever free pages and retrying forever is a silent
-        # livelock (preemption/eviction would be the real fix)
+        # livelock (enable cfg.preemption to evict victims instead)
         self._stalled_steps = self._stalled_steps + 1 if executed == 0 else 0
         if self._stalled_steps >= 1000:
             raise RuntimeError(
                 "KV pool deadlock: every batch item was deferred for "
-                "1000 consecutive steps (pool too small for the working set)")
+                "1000 consecutive steps (pool too small for the working "
+                "set; EngineConfig.preemption=True evicts victims instead)")
         self.busy_time += inf.exec_time
         self.now = max(self.now, inf.t_end)
         self._reconcile()
+        if self.cfg.preemption and self.deferred_since:
+            self._preempt_for_starving()
         return rec
+
+    # ------------------------------------------------------------------
+    # preemption (DESIGN.md §13): evict a victim's KV, recompute on resume
+    # ------------------------------------------------------------------
+
+    def _preempt_for_starving(self) -> None:
+        """Evict victims until starving deferred work can be placed.
+
+        Runs only against executors that expose their ``BlockAllocator``
+        (``.alloc``); the sim executor never defers, so preemption never
+        fires there. A request referenced by a still-queued speculative
+        dispatch is never evicted (its rollback machinery assumes the table
+        exists). Victim order is SLO-aware: the decode with the *most*
+        envelope slack goes first — it has the most headroom to absorb a
+        recompute — with reclaimable (exclusively-held, refcount-1) pages
+        as tie-break so shared prefix-cache/COW pages are never counted as
+        benefit. When every decode is itself starving (pool deadlock), the
+        max-slack starver is evicted so the others can run — the loud
+        1000-stall RuntimeError becomes a recompute instead.
+        """
+        alloc = getattr(self.executor, "alloc", None)
+        if alloc is None:
+            return
+        starving = [rid for rid, since in self.deferred_since.items()
+                    if self.now - since >= self.cfg.defer_age
+                    and rid in self.requests and self.requests[rid].active]
+        if not starving:
+            return
+        # pages the starvers need for their next grant: one token for a
+        # decode, the remaining prompt for a prefill (pessimistic — the
+        # scheduler may chunk it smaller, but undersizing would evict one
+        # victim per step in a slow churn); +1 covers a pending COW copy
+        # of a shared tail page
+        need = 0
+        for rid in starving:
+            req = self.requests[rid]
+            want = (1 if req.state is RequestState.DECODE
+                    else max(1, req.prompt_len - req.prefilled))
+            need += max(alloc.blocks_needed(rid, want), 1) + 1
+        inflight_ids = {it.req_id for inf in self.inflight_q
+                        for it in inf.plan.items}
+        protect = set(starving) | inflight_ids
+
+        def candidates(pool, decode_only):
+            out = []
+            for rid in pool:
+                req = self.requests[rid]
+                if decode_only and req.state is not RequestState.DECODE:
+                    continue
+                reclaimable = alloc.reclaimable_pages(rid)
+                if reclaimable > 0:
+                    out.append((slo.slack(req.to_sched_task(), self.now),
+                                reclaimable, rid))
+            out.sort(key=lambda c: (-c[0], -c[1]))
+            return out
+
+        # victim pools in preference order:
+        #  1. non-starving decodes (classic preemption);
+        #  2. non-starving holders in any state (a mid-prefill request's
+        #     pages are as reclaimable as a decode's);
+        #  3. when several starvers contend for a pool none of them fits,
+        #     the max-slack starver itself yields to the others. A SOLE
+        #     starver is never self-evicted — freeing its own pages cannot
+        #     cover a larger re-grant, it would only churn until the
+        #     1000-stall guard fires loudly.
+        pools = [([r for r in self.active if r not in protect], True, None),
+                 ([r for r in self.active
+                   if r not in inflight_ids and r not in protect],
+                  False, None)]
+        if len(starving) > 1:
+            pools.append(([r for r in starving if r not in inflight_ids],
+                          False, 1))
+        freed = 0
+        for pool, decode_only, cap in pools:
+            for _, _, rid in candidates(pool, decode_only)[:cap]:
+                if freed >= need:
+                    return
+                freed += self._preempt(self.requests[rid])
+            if freed >= need:
+                return
+
+    def _preempt(self, req: Request) -> int:
+        """Evict one victim's pages and requeue it as a re-prefill of its
+        full known prefix (DESIGN.md §13). Returns pages actually freed.
+
+        Eviction is refcount/COW-aware — pages shared with the prefix cache
+        or forked siblings survive for their other holders. After requeue
+        the prefix cache is re-matched, so a victim whose prompt pages were
+        adopted by the radix tree resumes by recomputing only the un-cached
+        tail (the effective-token ``cached_context`` path, DESIGN.md §10).
+        """
+        rid = req.req_id
+        self.preemptions += 1
+        self.deferred_since.pop(rid, None)
+        alloc = getattr(self.executor, "alloc", None)
+        freed = alloc.evict_request(rid) if alloc is not None else 0
+        if self.prefix_cache is not None:
+            self.prefix_cache.end_request(rid)
+        req.preempt_requeue()
+        if self.prefix_cache is not None and req.tokens:
+            cached = self.prefix_cache.begin_request(rid, req.tokens,
+                                                     self.now)
+            if cached:
+                req.cached_context = cached
+                req.prefilled = cached
+        return freed
 
     # ------------------------------------------------------------------
     # reconciliation: queued speculative dispatches vs committed reality
@@ -567,6 +760,15 @@ class Engine:
         covered it) and the pages are free to be rewritten.
         """
         self.rollbacks += 1
+        refund = getattr(self.sched, "refund", None)
+        if refund is not None:
+            # the rolled-back plan's admission charges never ran
+            ran = {it.req_id for it in inf.plan.items
+                   if it.req_id not in inf.deferred}
+            refund(inf.plan, ran)
+            top_up = getattr(self.sched, "charge_extra_decode", None)
+            if top_up is not None and inf.horizon > 1:
+                top_up(inf.plan, ran, -(inf.horizon - 1))
         if hasattr(self.executor, "rollback_tokens"):
             for it in inf.plan.items:
                 if it.req_id in inf.deferred:
@@ -588,6 +790,7 @@ class Engine:
 
     def _finish(self, req: Request) -> None:
         self.active.remove(req.req_id)
+        self.deferred_since.pop(req.req_id, None)
         self._record_done(req)
         if self.prefix_cache is not None and req.tokens:
             # drops the request's page refs; cache-adopted pages stay live
@@ -676,5 +879,8 @@ class Engine:
                 req.cached_context = 0
                 if req.state is RequestState.DECODE:
                     # re-prefill prompt+generated, then continue decoding
-                    req.prompt_len = req.prompt_len + req.generated
+                    # (fold only tokens an earlier preemption requeue has
+                    # not already folded into the prompt)
+                    req.prompt_len += req.generated - req.refolded
+                    req.refolded = req.generated
                     req.state = RequestState.PREFILL

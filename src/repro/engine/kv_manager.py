@@ -120,6 +120,28 @@ class BlockAllocator:
             self.release_page(p)
         self.lens.pop(req_id, None)
 
+    # ------------------------------------------------------------------
+    # preemption support (DESIGN.md §13): victim cost/benefit accounting
+    # ------------------------------------------------------------------
+
+    def reclaimable_pages(self, req_id: int) -> int:
+        """Pages that would actually return to the free list if ``req_id``
+        were evicted now: only its exclusively-held pages (refcount 1).
+        Pages shared with the prefix cache or COW-forked siblings stay
+        live — the victim selector uses this to rank candidates by real
+        benefit, not table length."""
+        return sum(1 for p in self.tables.get(req_id, ())
+                   if self.refcount.get(p, 0) == 1)
+
+    def evict_request(self, req_id: int) -> int:
+        """Preempt a victim: drop its table, refcount/COW-aware (shared
+        pages survive for their other holders). Returns pages actually
+        freed. The stale K/V left in freed pages is unreachable — no
+        surviving table maps them — so they are immediately rewritable."""
+        before = len(self._free)
+        self.release(req_id)
+        return len(self._free) - before
+
     def pop_cow_events(self) -> list[tuple[int, int]]:
         """Drain (old_page, new_page) copies the data plane must mirror."""
         ev, self._cow_events = self._cow_events, []

@@ -23,6 +23,10 @@ class RequestMetrics:
     # arrival -> first inclusion in a launched batch (DESIGN.md §12): the
     # control-plane wait a pipelined scheduler is supposed to hide
     sched_delay: Optional[float] = None
+    # owning tenant (DESIGN.md §13) for the per-tenant fairness rollup
+    tenant: str = "default"
+    # KV evictions this request absorbed (preemption subsystem, §13)
+    preemptions: int = 0
 
     @property
     def slo_ok(self) -> bool:
@@ -34,7 +38,8 @@ def measure(req: Request) -> RequestMetrics:
         return RequestMetrics(req.req_id, req.arrival, None, None, False,
                               False, rejected=True,
                               prompt_len=req.prompt_len,
-                              cached_tokens=req.cached_context)
+                              cached_tokens=req.cached_context,
+                              tenant=req.tenant)
     ot = req.output_times
     ttft = (ot[0] - req.arrival) if ot else None
     tpot_max = None
@@ -47,7 +52,8 @@ def measure(req: Request) -> RequestMetrics:
     return RequestMetrics(req.req_id, req.arrival, ttft, tpot_max,
                           ttft_ok, tpot_ok, prompt_len=req.prompt_len,
                           cached_tokens=req.cached_context,
-                          sched_delay=delay)
+                          sched_delay=delay, tenant=req.tenant,
+                          preemptions=req.preemptions)
 
 
 def summarize(metrics: list[RequestMetrics], duration: float,
@@ -86,6 +92,29 @@ def summarize(metrics: list[RequestMetrics], duration: float,
         "sched_delay_mean": float(np.mean(delays)) if len(delays) else
                             float("nan"),
     }
+    tenants = sorted({m.tenant for m in metrics})
+    if len(tenants) > 1:
+        # per-tenant fairness rollup (DESIGN.md §13): only materialized for
+        # multi-tenant traces so single-tenant summaries stay unchanged
+        out["per_tenant"] = {t: _tenant_summary(
+            [m for m in metrics if m.tenant == t]) for t in tenants}
     if host is not None:
         out.update(host)
     return out
+
+
+def _tenant_summary(ms: list[RequestMetrics]) -> dict:
+    """TTFT/TPOT percentiles + attainment for one tenant's requests."""
+    ttfts = np.array([m.ttft for m in ms if m.ttft is not None])
+    tpots = np.array([m.tpot_max for m in ms if m.tpot_max is not None])
+
+    def pct(a, q):
+        return float(np.percentile(a, q)) if len(a) else float("nan")
+    return {
+        "n_requests": len(ms),
+        "slo_attainment": sum(m.slo_ok for m in ms) / max(len(ms), 1),
+        "ttft_p50": pct(ttfts, 50), "ttft_p99": pct(ttfts, 99),
+        "tpot_p50": pct(tpots, 50), "tpot_p99": pct(tpots, 99),
+        "rejected": sum(m.rejected for m in ms),
+        "preemptions": sum(m.preemptions for m in ms),
+    }

@@ -46,6 +46,17 @@ class Request:
     # "first_token" re-anchors decode deadlines at min(arrival+ttft, t0):
     # strictly tighter, guarantees the paper's own evaluation metric.
     anchor: str = "first_token"    # "first_token" | "slo" (paper formula)
+    # Owning tenant/client (DESIGN.md §13): keys the admission stage's
+    # per-tenant virtual-token counters and the per-tenant metrics rollup.
+    tenant: str = "default"
+    # Times this request's KV was evicted by the preemption subsystem
+    # (DESIGN.md §13); each eviction converts it back to a re-prefill of
+    # its full known prefix.
+    preemptions: int = 0
+    # Output tokens already folded into ``prompt_len`` by an earlier requeue
+    # (preemption / failure migration / snapshot restore) — a later requeue
+    # must only fold the tokens generated since, never double-count.
+    refolded: int = 0
 
     @property
     def active(self) -> bool:
@@ -54,13 +65,20 @@ class Request:
 
     @property
     def context(self) -> int:
-        return self.prefilled + self.generated
+        # ``refolded`` output tokens live inside ``prefilled`` after a
+        # requeue (preemption/migration/restore) — don't count them twice
+        return self.prefilled + self.generated - self.refolded
 
     def to_sched_task(self) -> SchedTask:
         if self.state in (RequestState.QUEUED, RequestState.PREFILL):
             kind = TaskKind.PREFILL
             new_tokens = self.prompt_len - self.prefilled
-            next_idx = 0
+            # a resumed request (preempted / migrated / restored) is
+            # re-prefilling mid-stream: its next output token is the
+            # (generated)-th, so its envelope deadline — and therefore its
+            # slack — keeps aging like the decode it interrupted
+            # (DESIGN.md §13)
+            next_idx = self.generated
         else:
             kind = TaskKind.DECODE
             new_tokens = 1
@@ -68,15 +86,15 @@ class Request:
         ctx = self.context
         eff = min(ctx, self.window) if self.window else None
         arrival = self.arrival
-        if (kind is TaskKind.DECODE and self.anchor == "first_token"
-                and self.output_times):
+        if self.anchor == "first_token" and self.output_times:
             arrival = min(arrival, self.output_times[0] - self.ttft_slo)
         return SchedTask(req_id=self.req_id, arrival=arrival,
                          ttft_slo=self.ttft_slo, tpot_slo=self.tpot_slo,
                          next_output_idx=next_idx, new_tokens=new_tokens,
                          context=ctx, kind=kind, prompt_len=self.prompt_len,
                          effective_context=eff,
-                         cached_context=self.cached_context)
+                         cached_context=self.cached_context,
+                         tenant=self.tenant)
 
     def speculative_copy(self) -> "Request":
         """Detached copy for the pipelined control plane (DESIGN.md §12).
@@ -91,17 +109,48 @@ class Request:
         c.generated_tokens = list(self.generated_tokens)
         return c
 
+    def preempt_requeue(self) -> None:
+        """Convert a preemption victim back to a prefill of its full known
+        prefix (DESIGN.md §13).
+
+        The evicted KV is recomputed on resume: prompt + already-generated
+        tokens become the new prompt (real mode appends the generated ids so
+        the re-prefill reproduces the exact context), ``generated`` and
+        ``output_times`` are kept so SLO accounting stays end-to-end, and the
+        cached split is reset — the engine re-matches the prefix cache after
+        requeue, which is what lets a victim whose prompt pages were adopted
+        by the radix tree resume by recomputing only the un-cached tail
+        (the effective-token ``cached_context`` path, DESIGN.md §10).
+        Idempotent across repeated evictions: only tokens generated since
+        the last requeue are folded into the prompt.
+        """
+        fold = self.generated - self.refolded
+        if fold > 0:
+            if self.tokens is not None:
+                self.tokens = list(self.tokens) \
+                    + list(self.generated_tokens[-fold:])
+            self.prompt_len += fold
+            self.refolded = self.generated
+        self.prefilled = 0
+        self.cached_context = 0
+        self.state = RequestState.PREFILL
+        self.preemptions += 1
+
     def advance(self, n_tokens: int, finish_time: float) -> None:
         """Apply a step's granted tokens; emit output tokens at step end."""
         if self.state in (RequestState.QUEUED, RequestState.PREFILL):
             self.prefilled += n_tokens
             assert self.prefilled <= self.prompt_len
             if self.prefilled == self.prompt_len:
-                # prefill completion emits the first output token
+                # prefill completion emits the next output token: the first
+                # for a fresh request, the (generated+1)-th for a resumed
+                # one (preemption/migration/restore re-prefill their known
+                # prefix and pick the stream back up — DESIGN.md §13)
                 self.output_times.append(finish_time)
-                self.generated = 1
+                self.generated += 1
                 self.state = (RequestState.FINISHED
-                              if self.max_new_tokens <= 1 else RequestState.DECODE)
+                              if self.generated >= self.max_new_tokens
+                              else RequestState.DECODE)
             else:
                 self.state = RequestState.PREFILL
         else:
