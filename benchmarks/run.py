@@ -29,6 +29,8 @@ _TRAJECTORY_KEYS = (
     "hit_rate", "host_overhead_s",
     "interactive_ttft_p99", "interactive_tpot_p99",
     "interactive_p99_vs_isolated", "preemptions",
+    "fused_dispatches_per_step", "tuning_gain", "tuned_cost_us",
+    "default_cost_us",
 )
 
 
@@ -65,6 +67,15 @@ def write_bench_summary(name: str, rows: list[dict],
            "metrics": metrics}
     if by_label:
         out["by_label"] = by_label
+    # autotuned kernel tilings (DESIGN.md §14): rows may carry the chosen
+    # (kb, tb) per bucket — surfaced in the summary so tiling choices are
+    # diffable across commits alongside the numbers they produced
+    tilings = {}
+    for r in rows:
+        if isinstance(r.get("tilings"), dict):
+            tilings.update(r["tilings"])
+    if tilings:
+        out["tilings"] = tilings
     path = _REPO_ROOT / f"BENCH_{name}.json"
     path.write_text(json.dumps(out, indent=1, default=str) + "\n")
     return path
@@ -146,6 +157,11 @@ def _headline(name: str, rows: list[dict]) -> str:
                     if r["mode"] == "fused"}
             return (f"fused_speedup {sp} dispatches/step "
                     f"{sorted(set(disp.values()))}")
+        if name == "autotune_attention":
+            gains = [r["tuning_gain"] for r in rows if r["mode"] == "winner"]
+            import statistics
+            return (f"cells={len(gains)} tuning_gain median="
+                    f"{statistics.median(gains):.2f} max={max(gains):.2f}")
         if name == "async_pipeline":
             by = {r["mode"]: r for r in rows}
             seq, pipe = by["sequential"], by["pipelined"]
@@ -169,10 +185,11 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (async_pipeline_bench, breakdown_bench, cluster_bench,
-                   cost_model_bench, fairness_bench, goodput_bench,
-                   hybrid_step_bench, latency_bench, prefix_cache_bench,
-                   roofline_report, slo_grid_bench, unfairness_bench)
+    from . import (async_pipeline_bench, autotune_attention, breakdown_bench,
+                   cluster_bench, cost_model_bench, fairness_bench,
+                   goodput_bench, hybrid_step_bench, latency_bench,
+                   prefix_cache_bench, roofline_report, slo_grid_bench,
+                   unfairness_bench)
     benches = {
         "cost_model": cost_model_bench.run,      # paper §3.2 accuracy claim
         "unfairness": unfairness_bench.run,      # Fig 1/2
@@ -182,6 +199,7 @@ def main() -> None:
         "breakdown": breakdown_bench.run,        # Fig 7
         "cluster": cluster_bench.run,            # Fig 8
         "prefix_cache": prefix_cache_bench.run,  # DESIGN.md §10 reuse
+        "autotune_attention": autotune_attention.run,  # DESIGN.md §14 tiling
         "hybrid_step": hybrid_step_bench.run,    # DESIGN.md §11 fused step
         "async_pipeline": async_pipeline_bench.run,  # DESIGN.md §12
         "fairness": fairness_bench.run,          # DESIGN.md §13 VTC stack

@@ -5,7 +5,8 @@ Public API re-exports. See DESIGN.md §1 for the contribution → module map.
 from .types import SchedTask, TaskKind, BatchItem, BatchPlan
 from .slo import token_deadline, request_deadline, slack, attainment
 from .cost_model import (LinearCostModel, TokenCostModel, PaddedCostModel,
-                         RecursiveLeastSquares, fit_linear, default_buckets)
+                         RecursiveLeastSquares, fit_linear, default_buckets,
+                         kv_bytes_per_token, kv_page_budget)
 from .capacity import commit_horizon, init_time_budget, min_tpot_slo
 from .batch_formation import (FormationConfig, classify, form_batch,
                               form_prefill_first, form_stall_free)
@@ -23,6 +24,7 @@ __all__ = [
     "token_deadline", "request_deadline", "slack", "attainment",
     "LinearCostModel", "TokenCostModel", "PaddedCostModel",
     "RecursiveLeastSquares", "fit_linear", "default_buckets",
+    "kv_bytes_per_token", "kv_page_budget",
     "commit_horizon", "init_time_budget", "min_tpot_slo",
     "FormationConfig", "classify", "form_batch",
     "form_stall_free", "form_prefill_first",

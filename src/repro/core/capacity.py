@@ -27,7 +27,7 @@ every envelope (and the PAB admission promise) intact.
 from __future__ import annotations
 
 import math
-from typing import Sequence
+from typing import Optional, Sequence
 
 from . import slo
 from .cost_model import LinearCostModel
@@ -50,10 +50,25 @@ def min_tpot_slo(tasks: Sequence[SchedTask]) -> float:
     return min(t.tpot_slo for t in tasks)
 
 
+def _pages_needed(contexts: Sequence[int], h: int, page_size: int) -> int:
+    """New KV pages h committed decode tokens per task will allocate.
+
+    Each task's last page has ``(-ctx) % page_size`` free slots; tokens past
+    that tail open fresh pages.
+    """
+    need = 0
+    for c in contexts:
+        tail = (-c) % page_size
+        if h > tail:
+            need += -(-(h - tail) // page_size)
+    return need
+
+
 def commit_horizon(tasks: Sequence[SchedTask], now: float,
                    model: LinearCostModel, *, max_horizon: int,
                    ttft_slo: float, predicted_prefill_tokens: int = 0,
-                   safety: float = 1.0) -> int:
+                   safety: float = 1.0, free_pages: Optional[int] = None,
+                   page_size: int = 0) -> int:
     """Safe multi-step decode commitment depth (DESIGN.md §12).
 
     Returns the largest ``H <= max_horizon`` such that committing the
@@ -75,6 +90,13 @@ def commit_horizon(tasks: Sequence[SchedTask], now: float,
       run the engine is unresponsive; a prompt of ``predicted_prefill_tokens``
       arriving right after dispatch must still make its TTFT SLO:
       ``sum dt_k + prefill_time <= ttft_slo``. Zero disables the reserve.
+    * **KV page budget** (DESIGN.md §14): with ``free_pages``/``page_size``
+      given, the horizon stops before the committed tokens would allocate
+      more pages than the pool has free — a multi-step dispatch cannot
+      defer mid-run the way the single-step executor can, so committing
+      past the pool would force mid-horizon preemption. Quantized KV
+      (``kv_bytes_per_token``) funds more pages at equal HBM, so the same
+      trace sustains deeper commitments. ``None`` disables the bound.
 
     ``safety`` mirrors ``FormationConfig.safety``: constraints are checked
     against ``safety × allowance`` to absorb execution jitter.
@@ -85,7 +107,8 @@ def commit_horizon(tasks: Sequence[SchedTask], now: float,
     if len(decodes) != len(tasks):
         return 1                      # a queued prefill is owed service now
     n = len(decodes)
-    ctx0 = sum(t.cost_context() for t in decodes)
+    contexts = [t.cost_context() for t in decodes]
+    ctx0 = sum(contexts)
     slacks = [slo.slack(t, now) for t in decodes]
     tpots = [t.tpot_slo for t in decodes]
     reserve = (model.step_time(predicted_prefill_tokens, 0)
@@ -93,6 +116,9 @@ def commit_horizon(tasks: Sequence[SchedTask], now: float,
     cum = 0.0
     h = 0
     while h < max_horizon:
+        if (free_pages is not None and page_size > 0
+                and _pages_needed(contexts, h + 1, page_size) > free_pages):
+            return max(h, 1)          # step h+1 would outrun the page pool
         # contexts grow by one token per decode per committed step
         dt = model.step_time(n, ctx0 + h * n)
         cum += dt

@@ -73,6 +73,45 @@ class TokenCostModel(LinearCostModel):
         super().__init__(a=a, b=b, c=0.0)
 
 
+# HBM bytes per stored KV element by storage format (DESIGN.md §14). Kept
+# string-keyed so the scheduler core stays free of array-library imports.
+_KV_ELT_BYTES = {"fp32": 4, "float32": 4, "fp16": 2, "bf16": 2,
+                 "int8": 1, "fp8_e4m3": 1}
+_KV_QUANTIZED = frozenset({"int8", "fp8_e4m3"})
+
+
+def kv_bytes_per_token(n_layers: int, n_kv_heads: int, head_dim: int,
+                       kv_dtype: str = "fp32", scale_bytes: int = 4) -> int:
+    """HBM bytes one cached token occupies across K and V (DESIGN.md §14).
+
+    Quantized formats (int8 / fp8-e4m3) store 1 byte per element plus one
+    f32 dequantization scale per (token, kv-head) row for EACH of K and V —
+    the scale pages carried by ``BlockAllocator`` — so int8 is a ~3.9x (not
+    4x) byte reduction vs fp32 at head_dim 128. This is the number PAB and
+    commit-horizon capacity math must use for the page budget to stay
+    correct at ~2-4x quantized capacity.
+    """
+    elt = _KV_ELT_BYTES[kv_dtype]
+    per = 2 * n_layers * n_kv_heads * head_dim * elt          # K and V
+    if kv_dtype in _KV_QUANTIZED:
+        per += 2 * n_layers * n_kv_heads * scale_bytes        # scale rows
+    return per
+
+
+def kv_page_budget(hbm_bytes: int, page_size: int,
+                   bytes_per_token: int) -> int:
+    """KV pages of ``page_size`` tokens that fit in ``hbm_bytes``.
+
+    Feed ``kv_bytes_per_token`` in: at equal HBM, int8 KV funds roughly
+    double the fp16 page count — the capacity gain the quantized-capacity
+    end-to-end test (tests/test_preemption.py) measures as fewer
+    preemptions and a higher prefix-cache hit rate.
+    """
+    if page_size <= 0 or bytes_per_token <= 0:
+        return 0
+    return int(hbm_bytes // (page_size * bytes_per_token))
+
+
 def default_buckets(max_tokens: int = 8192) -> list[int]:
     """Power-of-two token buckets, 128-aligned — XLA compiled-shape set."""
     buckets = []

@@ -27,8 +27,17 @@ from .types import SchedTask
 
 def prefill_admission_budget(tasks: Sequence[SchedTask], now: float,
                              model: LinearCostModel, ttft_slo: float,
-                             tpot_slo: float) -> float:
-    """Tokens of new prefill admissible within `ttft_slo` from `now`."""
+                             tpot_slo: float,
+                             free_kv_tokens: Optional[int] = None) -> float:
+    """Tokens of new prefill admissible within `ttft_slo` from `now`.
+
+    ``free_kv_tokens`` (DESIGN.md §14) caps the time-derived budget by KV
+    *capacity*: a prompt the node has no pages for would be admitted only
+    to preempt or stall, so the budget is ``min(time budget, free KV
+    tokens)``. Pass ``kv_page_budget(...) * page_size`` — quantized KV
+    roughly doubles this cap at equal HBM. ``None`` keeps the paper's
+    pure-time budget.
+    """
     if model.b + model.c <= 0:
         return 0.0
     if tasks:
@@ -48,7 +57,10 @@ def prefill_admission_budget(tasks: Sequence[SchedTask], now: float,
     t_prefill = r_prefill / (model.b + model.c)
 
     pending_prefill = sum(t.new_tokens for t in tasks if t.is_prefill)
-    return t_prefill - pending_prefill
+    budget = t_prefill - pending_prefill
+    if free_kv_tokens is not None:
+        budget = min(budget, float(free_kv_tokens - pending_prefill))
+    return budget
 
 
 class PABAdmissionController:
@@ -70,7 +82,8 @@ class PABAdmissionController:
     def admit(self, prompt_len: int, tasks: Sequence[SchedTask], now: float,
               model: LinearCostModel, ttft_slo: Optional[float] = None,
               tpot_slo: Optional[float] = None,
-              cached_tokens: int = 0) -> bool:
+              cached_tokens: int = 0,
+              free_kv_tokens: Optional[int] = None) -> bool:
         """Admit iff the budget covers the prompt. Heterogeneous SLO tiers
         pass the incoming request's own (ttft_slo, tpot_slo): the budget is
         computed against *its* deadline, not the node default.
@@ -82,7 +95,8 @@ class PABAdmissionController:
         pab = prefill_admission_budget(
             tasks, now, model,
             self.ttft_slo if ttft_slo is None else ttft_slo,
-            self.tpot_slo if tpot_slo is None else tpot_slo)
+            self.tpot_slo if tpot_slo is None else tpot_slo,
+            free_kv_tokens=free_kv_tokens)
         ok = pab >= (prompt_len - cached_tokens) * self.headroom
         if not ok:
             self.rejected += 1

@@ -423,11 +423,18 @@ class Engine:
         if (any(it.kind is not TaskKind.DECODE for it in plan.items)
                 or ids != set(active_proj)):
             return 1      # only an all-active pure-decode batch repeats
+        # real data plane: bound the commitment by the KV page pool too —
+        # a multi-step dispatch cannot defer mid-run, so the horizon must
+        # not outrun free pages (capacity at the quantized-KV page budget,
+        # DESIGN.md §14)
+        alloc = getattr(self.executor, "alloc", None)
         h = capacity.commit_horizon(
             tasks, t_launch, self.sched.model,
             max_horizon=self.cfg.commit_horizon,
             ttft_slo=self.cfg.ttft_slo,
-            predicted_prefill_tokens=self.cfg.predicted_prefill_tokens)
+            predicted_prefill_tokens=self.cfg.predicted_prefill_tokens,
+            free_pages=None if alloc is None else alloc.free_blocks,
+            page_size=0 if alloc is None else alloc.block_size)
         # nobody may finish mid-horizon: a completion changes the batch
         h = min(h, min(proj[i].max_new_tokens - proj[i].generated
                        for i in ids))

@@ -29,7 +29,11 @@ import numpy as np
 from ..configs.base import ArchConfig
 from ..core.cost_model import LinearCostModel
 from ..core.types import BatchPlan, TaskKind
-from ..kernels.ops import paged_attention_op, paged_attention_ragged_op
+from ..kernels import quant as kvq
+from ..kernels.ops import (paged_attention_op, paged_attention_quant_op,
+                           paged_attention_ragged_op,
+                           paged_attention_ragged_quant_op)
+from ..kernels.paged_attention import get_ragged_tiling
 from ..models.layers import attn_qkv, mlp_apply
 from ..models.module import rmsnorm
 from .kv_manager import BlockAllocator
@@ -96,13 +100,26 @@ class PagedTransformerExecutor:
                  page_size: int = 128, max_pages_per_seq: int = 16,
                  mode: str = "fused",
                  ragged_attention: Optional[bool] = None,
-                 capture_logits: bool = False):
+                 capture_logits: bool = False,
+                 kv_dtype: str = "fp32",
+                 trim_page_tables: bool = True):
         assert cfg.family in ("dense",) and cfg.moe is None and cfg.ssm is None
         assert mode in ("fused", "sequential")
         self.cfg = cfg
         self.params = params
         self.page_size = page_size
         self.mode = mode
+        # quantized paged KV (DESIGN.md §14): values stored int8/fp8 in the
+        # data pages, per-(token, kv-head) f32 scales in the allocator's
+        # scale pages; None = unquantized fp32 storage
+        self.kv_dtype = kv_dtype
+        self.qspec = kvq.kv_quant_spec(kv_dtype)
+        # pages-bucket trim (DESIGN.md §14): stage fused block tables at the
+        # ladder over the step's widest table instead of max_pages_per_seq.
+        # Shrinking the gathered context reorders the fp reduction, so the
+        # §11 bitwise fused==sequential invariant is verified with the trim
+        # pinned off (values agree to fp reassociation either way).
+        self.trim_page_tables = trim_page_tables
         # fused-step attention backend (DESIGN.md §11): on TPU the packed
         # stream feeds the ragged Pallas kernel directly; elsewhere the
         # jnp oracle would re-gather each token's whole context, so the step
@@ -122,15 +139,25 @@ class PagedTransformerExecutor:
         self.max_pages = max_pages_per_seq
         shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads,
                  cfg.head_dim)
-        self.k_pages = jnp.zeros(shape, jnp.float32)
-        self.v_pages = jnp.zeros(shape, jnp.float32)
+        kv_store = jnp.float32 if self.qspec is None else self.qspec.dtype
+        self.k_pages = jnp.zeros(shape, kv_store)
+        self.v_pages = jnp.zeros(shape, kv_store)
+        if self.qspec is None:
+            self.k_scales = self.v_scales = None
+        else:
+            sshape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads)
+            self.k_scales = jnp.zeros(sshape, jnp.float32)
+            self.v_scales = jnp.zeros(sshape, jnp.float32)
+            # pad tokens redirect scales to the trash page's scale page,
+            # which the construction order above pins to id 0
+            assert self.alloc.scale_of[0] == 0
         self._chunk_fn = jax.jit(self._chunk_step,
                                  static_argnames=("n_tok",))
         self._decode_fn = jax.jit(self._decode_step,
                                   static_argnames=("bsz",))
         self._fused_fn = jax.jit(self._fused_step,
                                  static_argnames=("t_bucket", "s_bucket",
-                                                  "tq_bucket"))
+                                                  "tq_bucket", "pg_bucket"))
         self._multi_fn = jax.jit(self._multi_decode_step,
                                  static_argnames=("bsz", "horizon"))
         # items the last execute() could not serve (out of KV blocks); the
@@ -146,7 +173,8 @@ class PagedTransformerExecutor:
         # guard in tests/test_fused_executor.py read these
         self.n_dispatches = 0
         self.compile_keys: set = set()
-        self._staging: dict[tuple[int, int, int], dict[str, np.ndarray]] = {}
+        self._staging: dict[tuple, dict[str, np.ndarray]] = {}
+        self._zero_table = jnp.zeros(self.max_pages, jnp.int32)
 
     # ------------------------------------------------------------------
     # jitted step bodies
@@ -160,9 +188,12 @@ class PagedTransformerExecutor:
         h = rmsnorm(h_last, p["ln_f"], self.cfg.norm_eps)
         return h @ p["head"]
 
-    def _write_pages(self, k_pages, v_pages, layer, k, v, table, positions,
-                     valid=None):
-        """k, v: (B, T, Hkv, D); positions: (B, T) global; table: (B, n_pages)."""
+    def _write_pages(self, k_pages, v_pages, scales, layer, k, v, table,
+                     stable, positions, valid=None):
+        """k, v: (B, T, Hkv, D); positions: (B, T) global; table/stable:
+        (B, n_pages) data/scale page ids. When quantized, values quantize
+        on scatter and their per-(token, kv-head) scales land in the scale
+        pages (DESIGN.md §14); ``scales`` is () in fp32 mode."""
         b, t = positions.shape
         page_ids = jnp.take_along_axis(
             table, positions // self.page_size, axis=1)       # (B, T)
@@ -171,29 +202,57 @@ class PagedTransformerExecutor:
             page_ids = jnp.where(valid, page_ids, 0)          # → trash page
         flat_pg = page_ids.reshape(-1)
         flat_sl = slots.reshape(-1)
+        if self.qspec is not None:
+            k, ks = kvq.quantize_kv(k, self.qspec)
+            v, vs = kvq.quantize_kv(v, self.qspec)
+            spage_ids = jnp.take_along_axis(
+                stable, positions // self.page_size, axis=1)
+            if valid is not None:
+                spage_ids = jnp.where(valid, spage_ids, 0)    # → trash scales
+            flat_sp = spage_ids.reshape(-1)
+            k_scales, v_scales = scales
+            k_scales = k_scales.at[layer, flat_sp, flat_sl].set(
+                ks.reshape(b * t, -1))
+            v_scales = v_scales.at[layer, flat_sp, flat_sl].set(
+                vs.reshape(b * t, -1))
+            scales = (k_scales, v_scales)
         kf = k.reshape(b * t, *k.shape[2:])
         vf = v.reshape(b * t, *v.shape[2:])
         k_pages = k_pages.at[layer, flat_pg, flat_sl].set(kf)
         v_pages = v_pages.at[layer, flat_pg, flat_sl].set(vf)
-        return k_pages, v_pages
+        return k_pages, v_pages, scales
 
-    def _forward(self, k_pages, v_pages, x, positions, table, ctx_lens,
-                 valid=None):
+    def _attend(self, q, k_pages, v_pages, scales, layer, table, stable,
+                ctx_lens, q_starts):
+        """Batched paged attention over layer ``layer``'s pages, routed to
+        the fp32 or the dequantizing quantized backend."""
+        if self.qspec is None:
+            return paged_attention_op(q, k_pages[layer], v_pages[layer],
+                                      table, ctx_lens, q_starts,
+                                      window=self.cfg.window)
+        return paged_attention_quant_op(
+            q, k_pages[layer], v_pages[layer], scales[0][layer],
+            scales[1][layer], table, stable, ctx_lens, q_starts,
+            window=self.cfg.window)
+
+    def _forward(self, k_pages, v_pages, scales, x, positions, table, stable,
+                 ctx_lens, valid=None):
         cfg = self.cfg
         for l in range(cfg.n_layers):
             lp = jax.tree.map(lambda a: a[l], self.params["layers"])
             h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
             q, k, v = attn_qkv(lp["attn"], h, positions, cfg)
-            k_pages, v_pages = self._write_pages(k_pages, v_pages, l, k, v,
-                                                 table, positions, valid)
-            o = paged_attention_op(q, k_pages[l], v_pages[l], table, ctx_lens,
-                                   positions[:, 0], window=cfg.window)
+            k_pages, v_pages, scales = self._write_pages(
+                k_pages, v_pages, scales, l, k, v, table, stable, positions,
+                valid)
+            o = self._attend(q, k_pages, v_pages, scales, l, table, stable,
+                             ctx_lens, positions[:, 0])
             x = x + o.reshape(*x.shape[:2], cfg.q_dim) @ lp["attn"]["wo"]
             x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
-        return k_pages, v_pages, x
+        return k_pages, v_pages, scales, x
 
-    def _chunk_step(self, k_pages, v_pages, tokens, pos0, table, n_valid,
-                    *, n_tok):
+    def _chunk_step(self, k_pages, v_pages, scales, tokens, pos0, table,
+                    stable, n_valid, *, n_tok):
         """One prefill chunk, B=1. tokens: (n_tok,) padded; n_valid real.
 
         Sequential-mode (and parity-test) body; the serving path is
@@ -205,21 +264,22 @@ class PagedTransformerExecutor:
         # pad tokens keep monotone positions (causal mask stays exact) but
         # their K/V lands on the trash page and context_lens excludes them
         ctx = (pos0 + n_valid)[None]
-        k_pages, v_pages, x = self._forward(k_pages, v_pages, x, positions,
-                                            table[None], ctx, valid)
+        k_pages, v_pages, scales, x = self._forward(
+            k_pages, v_pages, scales, x, positions, table[None],
+            stable[None], ctx, valid)
         h_last = x[0, jnp.maximum(n_valid - 1, 0)]
-        return k_pages, v_pages, self._head(h_last)
+        return k_pages, v_pages, scales, self._head(h_last)
 
-    def _decode_step(self, k_pages, v_pages, tokens, positions, tables,
-                     ctx_lens, *, bsz):
+    def _decode_step(self, k_pages, v_pages, scales, tokens, positions,
+                     tables, stables, ctx_lens, *, bsz):
         x = self._embed(tokens)[:, None]                  # (B, 1, d)
-        k_pages, v_pages, x = self._forward(k_pages, v_pages, x,
-                                            positions[:, None], tables,
-                                            ctx_lens)
-        return k_pages, v_pages, self._head(x[:, 0])
+        k_pages, v_pages, scales, x = self._forward(
+            k_pages, v_pages, scales, x, positions[:, None], tables,
+            stables, ctx_lens)
+        return k_pages, v_pages, scales, self._head(x[:, 0])
 
-    def _multi_decode_step(self, k_pages, v_pages, tokens, positions, tables,
-                           ctx_lens, *, bsz, horizon):
+    def _multi_decode_step(self, k_pages, v_pages, scales, tokens, positions,
+                           tables, stables, ctx_lens, *, bsz, horizon):
         """``horizon`` greedy decode steps as ONE dispatch (DESIGN.md §12).
 
         Each unrolled iteration is exactly the ``_decode_step`` body — same
@@ -232,53 +292,85 @@ class PagedTransformerExecutor:
         emitted = []
         for h in range(horizon):
             x = self._embed(tokens)[:, None]              # (B, 1, d)
-            k_pages, v_pages, x = self._forward(
-                k_pages, v_pages, x, (positions + h)[:, None], tables,
-                ctx_lens + h)
+            k_pages, v_pages, scales, x = self._forward(
+                k_pages, v_pages, scales, x, (positions + h)[:, None],
+                tables, stables, ctx_lens + h)
             logits = self._head(x[:, 0])
             tokens = jnp.argmax(logits, -1).astype(jnp.int32)
             emitted.append(tokens)
-        return k_pages, v_pages, jnp.stack(emitted)
+        return k_pages, v_pages, scales, jnp.stack(emitted)
 
-    def _fused_step(self, k_pages, v_pages, tokens, positions, tok_pages,
-                    tok_slots, tables, ctx_lens, q_starts, q_lens, pos0,
-                    last_idx, seq_gather, pack_gather,
-                    *, t_bucket, s_bucket, tq_bucket):
+    def _scatter_packed(self, k_pages, v_pages, scales, layer, k, v,
+                        tok_pages, tok_slots, tok_spages):
+        """Packed-stream K/V scatter: k, v (T, Hkv, D) new rows. Quantizes
+        on scatter when a kv quant spec is active (DESIGN.md §14)."""
+        if self.qspec is not None:
+            k, ks = kvq.quantize_kv(k, self.qspec)
+            v, vs = kvq.quantize_kv(v, self.qspec)
+            k_scales, v_scales = scales
+            k_scales = k_scales.at[layer, tok_spages, tok_slots].set(ks)
+            v_scales = v_scales.at[layer, tok_spages, tok_slots].set(vs)
+            scales = (k_scales, v_scales)
+        k_pages = k_pages.at[layer, tok_pages, tok_slots].set(k)
+        v_pages = v_pages.at[layer, tok_pages, tok_slots].set(v)
+        return k_pages, v_pages, scales
+
+    def _fused_step(self, k_pages, v_pages, scales, tokens, positions,
+                    tok_pages, tok_slots, tok_spages, tables, stables,
+                    ctx_lens, q_starts, q_lens, pos0, last_idx, seq_gather,
+                    pack_gather,
+                    *, t_bucket, s_bucket, tq_bucket, pg_bucket):
         """The whole BatchPlan as ONE forward (DESIGN.md §11).
 
         tokens/positions/tok_pages/tok_slots: (T,) packed stream — every
         prefill-chunk token and decode token of the step, padding → trash
-        page. tables: (S, max_pages); ctx_lens/q_starts/q_lens/pos0/last_idx:
-        (S,). seq_gather (S, Tq)/pack_gather (T,) are the host-staged
-        packed↔per-seq row index maps for the batched attention backend.
+        page. tables: (S, pg_bucket) — block tables trimmed to the step's
+        pages bucket (padding columns would only add masked-out attention
+        work); ctx_lens/q_starts/q_lens/pos0/last_idx: (S,). seq_gather
+        (S, Tq)/pack_gather (T,) are the host-staged packed↔per-seq row
+        index maps for the batched attention backend. When quantized,
+        tok_spages (T,)/stables (S, pg_bucket) carry the scale-page routing
+        and ``scales`` is the (k_scales, v_scales) pair — () in fp32 mode.
         Per layer: one K/V scatter for every sequence's writes, one
         attention launch; at the top: one head projection over each
         sequence's last-token hidden state. Returns (k_pages, v_pages,
-        logits (S, vocab)).
+        scales, logits (S, vocab)).
         """
         cfg = self.cfg
         x = self._embed(tokens)[None]                     # (1, T, d)
         pos2d = positions[None]
+        # autotuned kernel tiling for this bucket (DESIGN.md §14); install
+        # tilings before serving — the jit cache keys on bucket, not tiling
+        kb, tb = get_ragged_tiling(t_bucket, pg_bucket)
         for l in range(cfg.n_layers):
             lp = jax.tree.map(lambda a: a[l], self.params["layers"])
             h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
             q, k, v = attn_qkv(lp["attn"], h, pos2d, cfg)
-            k_pages = k_pages.at[l, tok_pages, tok_slots].set(k[0])
-            v_pages = v_pages.at[l, tok_pages, tok_slots].set(v[0])
+            k_pages, v_pages, scales = self._scatter_packed(
+                k_pages, v_pages, scales, l, k[0], v[0], tok_pages,
+                tok_slots, tok_spages)
             if self._ragged_attn:
-                o = paged_attention_ragged_op(
-                    q[0], k_pages[l], v_pages[l], tables, ctx_lens,
-                    q_starts, q_lens, pos0, window=cfg.window)
+                if self.qspec is None:
+                    o = paged_attention_ragged_op(
+                        q[0], k_pages[l], v_pages[l], tables, ctx_lens,
+                        q_starts, q_lens, pos0, window=cfg.window,
+                        pages_per_block=kb, q_block=tb)
+                else:
+                    o = paged_attention_ragged_quant_op(
+                        q[0], k_pages[l], v_pages[l], scales[0][l],
+                        scales[1][l], tables, stables, ctx_lens, q_starts,
+                        q_lens, pos0, window=cfg.window,
+                        pages_per_block=kb, q_block=tb)
             else:
                 qv = q[0][seq_gather]                     # (S, Tq, H, D)
-                ov = paged_attention_op(qv, k_pages[l], v_pages[l], tables,
-                                        ctx_lens, pos0, window=cfg.window)
+                ov = self._attend(qv, k_pages, v_pages, scales, l, tables,
+                                  stables, ctx_lens, pos0)
                 o = ov.reshape(s_bucket * tq_bucket,
                                *ov.shape[2:])[pack_gather]
             x = x + o.reshape(1, t_bucket, cfg.q_dim) @ lp["attn"]["wo"]
             x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
         h_last = x[0][last_idx]                           # (S, d)
-        return k_pages, v_pages, self._head(h_last)
+        return k_pages, v_pages, scales, self._head(h_last)
 
     # ------------------------------------------------------------------
 
@@ -292,9 +384,10 @@ class PagedTransformerExecutor:
                 mirror_cow: bool = True) -> Optional[list]:
         """Allocator extend with prefix-cache eviction under pressure.
 
-        COW page copies are mirrored into the device K/V arrays per call
-        unless ``mirror_cow=False`` (the fused path drains the whole step's
-        events in one batched gather/scatter — ``_mirror_cow_batched``).
+        COW page copies are mirrored into the device K/V (and scale) arrays
+        per call unless ``mirror_cow=False`` (the fused path drains the
+        whole step's events in one batched gather/scatter —
+        ``_mirror_cow_batched``).
         """
         tbl = self.alloc.extend(req_id, n_tokens)
         if tbl is None and self.prefix_cache is not None:
@@ -302,19 +395,26 @@ class PagedTransformerExecutor:
                 self.alloc.blocks_needed(req_id, n_tokens) + 1)
             tbl = self.alloc.extend(req_id, n_tokens)
         if mirror_cow:
-            for old, new in self.alloc.pop_cow_events():
-                self.k_pages = self.k_pages.at[:, new].set(self.k_pages[:, old])
-                self.v_pages = self.v_pages.at[:, new].set(self.v_pages[:, old])
+            self._mirror_cow_batched()
         return tbl
 
     def _mirror_cow_batched(self) -> None:
-        """Drain every pending COW event as one vectorized gather/scatter."""
-        old, new = self.alloc.pop_cow_events_batched()
+        """Drain every pending COW event as one vectorized gather/scatter.
+
+        Scale pages copy in the same drain (DESIGN.md §14): the allocator
+        paired each COW'd data page with a fresh scale page, so values and
+        their dequant scales stay in lock-step."""
+        old, new, s_old, s_new = self.alloc.pop_cow_events_batched()
         if old:
             src_k = self.k_pages[:, old]
             src_v = self.v_pages[:, old]
             self.k_pages = self.k_pages.at[:, new].set(src_k)
             self.v_pages = self.v_pages.at[:, new].set(src_v)
+            if self.qspec is not None:
+                self.k_scales = self.k_scales.at[:, s_new].set(
+                    self.k_scales[:, s_old])
+                self.v_scales = self.v_scales.at[:, s_new].set(
+                    self.v_scales[:, s_old])
 
     def execute(self, plan: BatchPlan, requests, now: float) -> tuple[float, dict]:
         if self.mode == "sequential":
@@ -370,13 +470,16 @@ class PagedTransformerExecutor:
         pos += [0] * pad
         ctx += [1] * pad
         tables += [tables[0] * 0] * pad
+        stables = [self._stable(rid) for rid in ids]
+        stables += [stables[0] * 0] * pad
         self.n_dispatches += 1
         self.compile_keys.add(("multi", bsz, horizon))
-        self.k_pages, self.v_pages, out = self._multi_fn(
-            self.k_pages, self.v_pages,
+        self.k_pages, self.v_pages, scales, out = self._multi_fn(
+            self.k_pages, self.v_pages, self._scales_in(),
             jnp.asarray(toks, jnp.int32), jnp.asarray(pos, jnp.int32),
-            jnp.stack(tables), jnp.asarray(ctx, jnp.int32),
-            bsz=bsz, horizon=horizon)
+            jnp.stack(tables), jnp.stack(stables),
+            jnp.asarray(ctx, jnp.int32), bsz=bsz, horizon=horizon)
+        self._set_scales(scales)
         toks_np = np.asarray(out)                          # (horizon, bsz)
         dt = time.perf_counter() - t0
         emitted_seq = {rid: [int(toks_np[h, i]) for h in range(horizon)]
@@ -402,10 +505,14 @@ class PagedTransformerExecutor:
     # fused path: pack the whole plan, launch once
     # ------------------------------------------------------------------
 
-    def _get_staging(self, t_bucket: int, s_bucket: int,
-                     tq_bucket: int) -> dict:
-        """Preallocated numpy staging buffers, one set per bucket triple."""
-        key = (t_bucket, s_bucket, tq_bucket)
+    def _get_staging(self, t_bucket: int, s_bucket: int, tq_bucket: int,
+                     pg_bucket: int) -> dict:
+        """Preallocated numpy staging buffers, one set per bucket key.
+
+        Block tables stage at ``pg_bucket`` columns — the step's pages
+        bucket, not ``max_pages`` — so the attention backend never gathers
+        or scores table padding the mask would discard anyway."""
+        key = (t_bucket, s_bucket, tq_bucket, pg_bucket)
         st = self._staging.get(key)
         if st is None:
             st = {
@@ -413,7 +520,12 @@ class PagedTransformerExecutor:
                 "positions": np.zeros(t_bucket, np.int32),
                 "tok_pages": np.zeros(t_bucket, np.int32),
                 "tok_slots": np.zeros(t_bucket, np.int32),
-                "tables": np.zeros((s_bucket, self.max_pages), np.int32),
+                "tok_spages": np.zeros(
+                    t_bucket if self.qspec is not None else 0, np.int32),
+                "tables": np.zeros((s_bucket, pg_bucket), np.int32),
+                "stables": np.zeros(
+                    (s_bucket if self.qspec is not None else 0, pg_bucket),
+                    np.int32),
                 "ctx": np.zeros(s_bucket, np.int32),
                 "q_starts": np.zeros(s_bucket, np.int32),
                 "q_lens": np.zeros(s_bucket, np.int32),
@@ -469,18 +581,31 @@ class PagedTransformerExecutor:
         t_bucket = _ladder(n_tok, 4)
         s_bucket = _ladder(len(seqs), 4)
         tq_bucket = _bucket(max(len(s.tokens) for s in seqs), 1)
-        st = self._get_staging(t_bucket, s_bucket, tq_bucket)
+        # pages bucket (DESIGN.md §14): trim staged block tables to the
+        # ladder over the step's widest table — early steps attend over a
+        # fraction of max_pages_per_seq instead of always paying for it
+        if self.trim_page_tables:
+            max_pg = max(len(self.alloc.tables[s.req_id]) for s in seqs)
+            pg_bucket = min(self.max_pages, _ladder(max_pg, 2))
+        else:
+            pg_bucket = self.max_pages
+        st = self._get_staging(t_bucket, s_bucket, tq_bucket, pg_bucket)
+        quantized = self.qspec is not None
         off = 0
         for i, s in enumerate(seqs):
             n = len(s.tokens)
             pos = np.arange(s.pos0, s.pos0 + n, dtype=np.int32)
             tbl = np.asarray(self.alloc.tables[s.req_id], np.int32)
-            assert len(tbl) <= self.max_pages, "max_pages_per_seq exceeded"
+            assert len(tbl) <= pg_bucket, "pages bucket exceeded"
             st["tokens"][off:off + n] = s.tokens
             st["positions"][off:off + n] = pos
             st["tok_pages"][off:off + n] = tbl[pos // self.page_size]
             st["tok_slots"][off:off + n] = pos % self.page_size
             st["tables"][i, :len(tbl)] = tbl
+            if quantized:
+                stbl = np.asarray(self.alloc.scale_table(s.req_id), np.int32)
+                st["tok_spages"][off:off + n] = stbl[pos // self.page_size]
+                st["stables"][i, :len(stbl)] = stbl
             st["ctx"][i] = s.ctx
             st["q_starts"][i] = off
             st["q_lens"][i] = n
@@ -491,16 +616,21 @@ class PagedTransformerExecutor:
             off += n
 
         self.n_dispatches += 1
-        self.compile_keys.add(("fused", t_bucket, s_bucket, tq_bucket))
-        self.k_pages, self.v_pages, logits = self._fused_fn(
-            self.k_pages, self.v_pages,
+        self.compile_keys.add(("fused", t_bucket, s_bucket, tq_bucket,
+                               pg_bucket))
+        self.k_pages, self.v_pages, scales, logits = self._fused_fn(
+            self.k_pages, self.v_pages, self._scales_in(),
             jnp.asarray(st["tokens"]), jnp.asarray(st["positions"]),
             jnp.asarray(st["tok_pages"]), jnp.asarray(st["tok_slots"]),
-            jnp.asarray(st["tables"]), jnp.asarray(st["ctx"]),
+            jnp.asarray(st["tok_spages"]),
+            jnp.asarray(st["tables"]), jnp.asarray(st["stables"]),
+            jnp.asarray(st["ctx"]),
             jnp.asarray(st["q_starts"]), jnp.asarray(st["q_lens"]),
             jnp.asarray(st["pos0"]), jnp.asarray(st["last_idx"]),
             jnp.asarray(st["seq_gather"]), jnp.asarray(st["pack_gather"]),
-            t_bucket=t_bucket, s_bucket=s_bucket, tq_bucket=tq_bucket)
+            t_bucket=t_bucket, s_bucket=s_bucket, tq_bucket=tq_bucket,
+            pg_bucket=pg_bucket)
+        self._set_scales(scales)
         emitted: dict[int, int] = {}
         if any(s.emits for s in seqs):
             # one device→host sync for the whole step
@@ -535,10 +665,11 @@ class PagedTransformerExecutor:
             table = self._table(it.req_id)
             self.n_dispatches += 1
             self.compile_keys.add(("chunk", n_tok))
-            self.k_pages, self.v_pages, logits = self._chunk_fn(
-                self.k_pages, self.v_pages, toks,
-                jnp.int32(req.prefilled), table, jnp.int32(len(chunk)),
-                n_tok=n_tok)
+            self.k_pages, self.v_pages, scales, logits = self._chunk_fn(
+                self.k_pages, self.v_pages, self._scales_in(), toks,
+                jnp.int32(req.prefilled), table, self._stable(it.req_id),
+                jnp.int32(len(chunk)), n_tok=n_tok)
+            self._set_scales(scales)
             if req.prefilled + it.n_tokens == req.prompt_len:
                 emitted[it.req_id] = int(jnp.argmax(logits))
                 if self.capture_logits:
@@ -567,12 +698,16 @@ class PagedTransformerExecutor:
             pos += [0] * pad
             ctx += [1] * pad
             tables += [tables[0] * 0] * pad
+            stables = [self._stable(rid) for rid in ids]
+            stables += [stables[0] * 0] * pad
             self.n_dispatches += 1
             self.compile_keys.add(("decode", bsz))
-            self.k_pages, self.v_pages, logits = self._decode_fn(
-                self.k_pages, self.v_pages,
+            self.k_pages, self.v_pages, scales, logits = self._decode_fn(
+                self.k_pages, self.v_pages, self._scales_in(),
                 jnp.asarray(toks, jnp.int32), jnp.asarray(pos, jnp.int32),
-                jnp.stack(tables), jnp.asarray(ctx, jnp.int32), bsz=bsz)
+                jnp.stack(tables), jnp.stack(stables),
+                jnp.asarray(ctx, jnp.int32), bsz=bsz)
+            self._set_scales(scales)
             nxt = np.asarray(jnp.argmax(logits, -1))
             lg = np.asarray(logits) if self.capture_logits else None
             for i, rid in enumerate(ids):
@@ -592,6 +727,23 @@ class PagedTransformerExecutor:
         pad = self.max_pages - len(tbl)
         assert pad >= 0, "max_pages_per_seq exceeded"
         return jnp.asarray(tbl + [0] * pad, jnp.int32)
+
+    def _stable(self, req_id: int) -> jnp.ndarray:
+        """Scale-page table parallel to ``_table`` (DESIGN.md §14); a cached
+        zero table in fp32 mode, where the step bodies never read it."""
+        if self.qspec is None:
+            return self._zero_table
+        stbl = self.alloc.scale_table(req_id)
+        pad = self.max_pages - len(stbl)
+        return jnp.asarray(stbl + [0] * pad, jnp.int32)
+
+    def _scales_in(self):
+        """The (k_scales, v_scales) jit operand — () when unquantized."""
+        return () if self.qspec is None else (self.k_scales, self.v_scales)
+
+    def _set_scales(self, scales) -> None:
+        if self.qspec is not None:
+            self.k_scales, self.v_scales = scales
 
     def release(self, req_id: int) -> None:
         self.alloc.release(req_id)

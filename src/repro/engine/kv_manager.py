@@ -13,6 +13,19 @@ Copy-on-write: block-granular prefix matching means shared pages are always
 tail page with refcount > 1 is copied before new tokens land in it). Real
 executors drain ``pop_cow_events()`` after every ``extend`` and mirror the
 page copy into the device K/V arrays.
+
+Scale pages (DESIGN.md §14): quantized KV stores int8/fp8 values in the
+data pages and per-(token, kv-head) dequantization scales in a parallel
+*scale page* pool of the same cardinality. Every live data page owns exactly
+one scale page (``scale_of`` is a bijection onto the allocated scales) and
+the pairing follows the data page through its whole lifecycle: allocated
+together in ``extend``, shared by reference in ``fork``/``acquire_page``
+(scales ride the data page — no separate refcount), given a *fresh* scale
+page when the data page is COW'd (the copy event carries both ids so the
+executor mirrors values and scales in the same drain), and freed together
+when the last reference drops (``release``/``shrink``/``evict_request``).
+The allocator tracks scales unconditionally — fp32 executors simply never
+read them — so ``check_invariants`` can assert the bijection everywhere.
 """
 from __future__ import annotations
 
@@ -27,7 +40,12 @@ class BlockAllocator:
         self.tables: dict[int, list[int]] = {}    # req_id -> page ids
         self.lens: dict[int, int] = {}            # req_id -> tokens stored
         self.refcount: dict[int, int] = {}        # page id -> live references
-        self._cow_events: list[tuple[int, int]] = []   # (old_page, new_page)
+        # scale-page pool (DESIGN.md §14): same cardinality as the data pool,
+        # so a scale allocation can never fail when the data one succeeded
+        self._free_scales = list(range(num_blocks - 1, -1, -1))
+        self.scale_of: dict[int, int] = {}        # data page -> scale page
+        # (old_page, new_page, old_scale, new_scale) per COW copy
+        self._cow_events: list[tuple[int, int, int, int]] = []
 
     @property
     def free_blocks(self) -> int:
@@ -61,19 +79,26 @@ class BlockAllocator:
             return None
         tbl = self.tables.setdefault(req_id, [])
         if cow:
-            # shared partial tail page: copy before writing into it
+            # shared partial tail page: copy before writing into it. The
+            # copy gets its own scale page — the old one stays with the
+            # surviving holders of the old data page.
             old = tbl[-1]
-            new = self._free.pop()
+            new = self._alloc_page()
             self.refcount[old] -= 1
-            self.refcount[new] = 1
             tbl[-1] = new
-            self._cow_events.append((old, new))
+            self._cow_events.append((old, new, self.scale_of[old],
+                                     self.scale_of[new]))
         for _ in range(n):
-            page = self._free.pop()
-            self.refcount[page] = 1
-            tbl.append(page)
+            tbl.append(self._alloc_page())
         self.lens[req_id] = self.lens.get(req_id, 0) + extra_tokens
         return tbl
+
+    def _alloc_page(self) -> int:
+        """Pop a fresh (data, scale) page pair; returns the data page id."""
+        page = self._free.pop()
+        self.refcount[page] = 1
+        self.scale_of[page] = self._free_scales.pop()
+        return page
 
     def fork(self, req_id: int, pages: list[int], n_tokens: int) -> list[int]:
         """Adopt already-populated shared ``pages`` as the table prefix of a
@@ -90,13 +115,15 @@ class BlockAllocator:
         self.refcount[page] += 1
 
     def release_page(self, page: int) -> None:
-        """Drop one reference; the page frees when the last one goes."""
+        """Drop one reference; the page (and its scale page) frees when the
+        last one goes."""
         rc = self.refcount[page] - 1
         if rc:
             self.refcount[page] = rc
         else:
             del self.refcount[page]
             self._free.append(page)
+            self._free_scales.append(self.scale_of.pop(page))
 
     def shrink(self, req_id: int, n_tokens: int) -> None:
         """Undo the tail of an ``extend``: drop ``n_tokens`` reserved tokens
@@ -143,29 +170,41 @@ class BlockAllocator:
         return len(self._free) - before
 
     def pop_cow_events(self) -> list[tuple[int, int]]:
-        """Drain (old_page, new_page) copies the data plane must mirror."""
-        ev, self._cow_events = self._cow_events, []
-        return ev
+        """Drain (old_page, new_page) copies the data plane must mirror.
 
-    def pop_cow_events_batched(self) -> tuple[list[int], list[int]]:
-        """Drain every pending COW copy as parallel (old_pages, new_pages)
-        id lists, so the data plane mirrors the whole step in ONE vectorized
-        gather/scatter instead of one device op per event (DESIGN.md §11).
+        fp32 executors only mirror data pages; quantized ones use
+        ``pop_cow_events_batched`` which also carries the scale-page copies.
+        """
+        ev, self._cow_events = self._cow_events, []
+        return [(old, new) for old, new, _, _ in ev]
+
+    def pop_cow_events_batched(self) -> tuple[list[int], list[int],
+                                              list[int], list[int]]:
+        """Drain every pending COW copy as parallel
+        (old_pages, new_pages, old_scales, new_scales) id lists, so the data
+        plane mirrors the whole step in ONE vectorized gather/scatter instead
+        of one device op per event (DESIGN.md §11). Quantized executors
+        mirror the scale arrays with the scale id lists in the same drain.
         Within a drain the lists never chain (a COW target has refcount 1 and
         is never re-copied), so a single gather from ``old_pages`` is safe."""
         ev, self._cow_events = self._cow_events, []
         if not ev:
-            return [], []
-        old, new = zip(*ev)
-        return list(old), list(new)
+            return [], [], [], []
+        old, new, s_old, s_new = zip(*ev)
+        return list(old), list(new), list(s_old), list(s_new)
 
     def context_len(self, req_id: int) -> int:
         return self.lens.get(req_id, 0)
 
-    def check_invariants(self) -> None:
-        """free + referenced == total, refcounts positive, no free dupes.
+    def scale_table(self, req_id: int) -> list[int]:
+        """The request's scale-page ids, parallel to ``tables[req_id]``."""
+        return [self.scale_of[p] for p in self.tables.get(req_id, ())]
 
-        The conservation law the property tests assert after every op."""
+    def check_invariants(self) -> None:
+        """free + referenced == total, refcounts positive, no free dupes,
+        and the scale↔data page bijection (DESIGN.md §14).
+
+        The conservation laws the property tests assert after every op."""
         assert len(self._free) + len(self.refcount) == self.num_blocks, (
             f"leak/double-free: {len(self._free)} free + "
             f"{len(self.refcount)} live != {self.num_blocks}")
@@ -173,3 +212,14 @@ class BlockAllocator:
         assert all(rc > 0 for rc in self.refcount.values())
         assert not (set(self._free) & set(self.refcount)), \
             "page both free and referenced"
+        # scale pages: exactly one per live data page (no orphans), no two
+        # data pages alias one scale (injective), and scale conservation
+        assert set(self.scale_of) == set(self.refcount), \
+            "scale orphan/missing: scale_of keys must be the live data pages"
+        held = set(self.scale_of.values())
+        assert len(held) == len(self.scale_of), "scale page aliased"
+        assert len(self._free_scales) + len(held) == self.num_blocks, (
+            f"scale leak/double-free: {len(self._free_scales)} free + "
+            f"{len(held)} held != {self.num_blocks}")
+        assert not (set(self._free_scales) & held), \
+            "scale page both free and held"

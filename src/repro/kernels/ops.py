@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from . import ref
 from .mamba2_scan import mamba_chunk_scan
 from .moe_gmm import moe_gmm
-from .paged_attention import paged_attention, paged_attention_ragged
+from .paged_attention import (paged_attention, paged_attention_ragged,
+                              paged_attention_ragged_quant)
 
 
 def _on_tpu() -> bool:
@@ -40,24 +41,84 @@ def paged_attention_op(q, k_pages, v_pages, block_table, context_lens,
                                    context_lens, q_starts, window=window)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "impl"))
+@functools.partial(jax.jit, static_argnames=("window", "impl",
+                                             "pages_per_block", "q_block"))
 def paged_attention_ragged_op(q, k_pages, v_pages, block_tables, context_lens,
                               q_starts, q_lens, pos0, *,
                               window: Optional[int] = None,
-                              impl: str = "auto"):
+                              impl: str = "auto",
+                              pages_per_block: Optional[int] = None,
+                              q_block: Optional[int] = None):
     """Token-packed ragged paged attention — the fused hybrid step's single
-    attention launch (DESIGN.md §11). q: (T, H, D) packed stream."""
+    attention launch (DESIGN.md §11). q: (T, H, D) packed stream.
+    (pages_per_block, q_block) is the autotuned kernel tiling (DESIGN.md
+    §14) — ignored by the jnp oracle backend, which has no grid."""
     if impl == "pallas" or (impl == "auto" and _on_tpu()):
         return paged_attention_ragged(q, k_pages, v_pages, block_tables,
                                       context_lens, q_starts, q_lens, pos0,
-                                      window=window)
+                                      window=window,
+                                      pages_per_block=pages_per_block,
+                                      q_block=q_block)
     if impl == "interpret":
         return paged_attention_ragged(q, k_pages, v_pages, block_tables,
                                       context_lens, q_starts, q_lens, pos0,
-                                      window=window, interpret=True)
+                                      window=window,
+                                      pages_per_block=pages_per_block,
+                                      q_block=q_block, interpret=True)
     return ref.paged_attention_ragged_ref(q, k_pages, v_pages, block_tables,
                                           context_lens, q_starts, q_lens,
                                           pos0, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl"))
+def paged_attention_quant_op(q, k_pages, v_pages, k_scales, v_scales,
+                             block_table, scale_table, context_lens,
+                             q_starts, *, window: Optional[int] = None,
+                             impl: str = "auto"):
+    """Quantized-KV batched paged attention (DESIGN.md §14): int8/fp8 value
+    pages + f32 scale pages, dequantized inside the backend. On TPU the
+    batch is flattened through the ragged quant kernel (one launch); the
+    jnp oracle dequantizes the gathered context."""
+    if impl == "pallas" or impl == "interpret" or (impl == "auto"
+                                                   and _on_tpu()):
+        b, tq, h, d = q.shape
+        packed_starts = jnp.arange(b, dtype=jnp.int32) * tq
+        q_lens = jnp.full((b,), tq, jnp.int32)
+        out = paged_attention_ragged_quant(
+            q.reshape(b * tq, h, d), k_pages, v_pages, k_scales, v_scales,
+            block_table, scale_table, context_lens, packed_starts, q_lens,
+            q_starts, window=window, interpret=(impl == "interpret"))
+        return out.reshape(b, tq, h, d)
+    return ref.paged_attention_quant_ref(q, k_pages, v_pages, k_scales,
+                                         v_scales, block_table, scale_table,
+                                         context_lens, q_starts,
+                                         window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl",
+                                             "pages_per_block", "q_block"))
+def paged_attention_ragged_quant_op(q, k_pages, v_pages, k_scales, v_scales,
+                                    block_tables, scale_tables, context_lens,
+                                    q_starts, q_lens, pos0, *,
+                                    window: Optional[int] = None,
+                                    impl: str = "auto",
+                                    pages_per_block: Optional[int] = None,
+                                    q_block: Optional[int] = None):
+    """Quantized token-packed ragged paged attention (DESIGN.md §14)."""
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return paged_attention_ragged_quant(
+            q, k_pages, v_pages, k_scales, v_scales, block_tables,
+            scale_tables, context_lens, q_starts, q_lens, pos0,
+            window=window, pages_per_block=pages_per_block, q_block=q_block)
+    if impl == "interpret":
+        return paged_attention_ragged_quant(
+            q, k_pages, v_pages, k_scales, v_scales, block_tables,
+            scale_tables, context_lens, q_starts, q_lens, pos0,
+            window=window, pages_per_block=pages_per_block, q_block=q_block,
+            interpret=True)
+    return ref.paged_attention_ragged_quant_ref(
+        q, k_pages, v_pages, k_scales, v_scales, block_tables, scale_tables,
+        context_lens, q_starts, q_lens, pos0, window=window)
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))

@@ -13,8 +13,22 @@ HBM→VMEM. Online softmax accumulates in f32 VMEM scratch across the page
 axis of the grid (sequential on TPU), GQA query heads of one KV head are
 packed into the sublane dim so the MXU sees (Tq·G, D) × (D, page) tiles.
 
-Oracle: ref.paged_attention_ref. Validated with interpret=True over shape/
-dtype sweeps in tests/test_kernels.py.
+Block-shape tuning (DESIGN.md §14): the ragged kernel's grid is tiled by
+``(pages_per_block, q_block)`` — how many KV pages stream through VMEM per
+grid step, and how many packed query rows each output tile covers. The
+analytic autotuner (benchmarks/autotune_attention.py, roofline + HLO byte
+model) sweeps the candidates per (token-bucket, pages-bucket) and records
+winners in the module registry below; the executor consults it per compile
+key. Defaults reproduce the untiled PR 3 kernel exactly.
+
+Quantized variant (DESIGN.md §14): ``paged_attention_ragged_quant`` reads
+int8/fp8 value pages plus per-(token, kv-head) f32 scale pages and
+dequantizes inside the kernel, after the DMA and before the MXU — HBM
+traffic is the quantized byte count.
+
+Oracle: ref.paged_attention_ref / ref.paged_attention_ragged_quant_ref.
+Validated with interpret=True over shape/dtype sweeps in
+tests/test_kernels.py.
 """
 from __future__ import annotations
 
@@ -27,6 +41,27 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+# autotuned (pages_per_block, q_block) per (t_bucket, pages_bucket) — filled
+# by benchmarks/autotune_attention.py (set_ragged_tilings); (1, None) = the
+# untiled PR 3 grid
+_TUNED_TILINGS: dict[tuple[int, int], tuple[int, Optional[int]]] = {}
+
+
+def set_ragged_tilings(table: dict) -> None:
+    """Install autotuned tilings: {(t_bucket, pages_bucket): (kb, tb)}."""
+    _TUNED_TILINGS.clear()
+    for key, val in table.items():
+        t, n_pages = key
+        kb, tb = val
+        _TUNED_TILINGS[(int(t), int(n_pages))] = (
+            int(kb), None if tb is None else int(tb))
+
+
+def get_ragged_tiling(t_bucket: int,
+                      pages_bucket: int) -> tuple[int, Optional[int]]:
+    """(pages_per_block, q_block) for a bucket; (1, None) when untuned."""
+    return _TUNED_TILINGS.get((int(t_bucket), int(pages_bucket)), (1, None))
 
 
 def _kernel(block_table, context_lens, q_starts,   # scalar-prefetch refs
@@ -74,109 +109,249 @@ def _kernel(block_table, context_lens, q_starts,   # scalar-prefetch refs
         o_ref[...] = out.reshape(1, tq, 1, g, -1).astype(o_ref.dtype)
 
 
-def _ragged_kernel(block_tables, context_lens, q_starts, q_lens, pos0,
-                   q_ref, k_ref, v_ref, o_ref,       # VMEM blocks
-                   m_s, l_s, acc_s,                  # scratch
-                   *, page: int, n_pages: int, n_seq: int, t: int, g: int,
-                   window: Optional[int], scale: float):
-    s_idx = pl.program_id(1)
-    p_idx = pl.program_id(2)
+def _ragged_impl(block_tables, context_lens, q_starts, q_lens, pos0, refs,
+                 *, page: int, kb: int, n_pb: int, n_seq: int, tb: int,
+                 g: int, window: Optional[int], scale: float, quant: bool):
+    """Shared tiled ragged kernel body (fp32 and quantized).
 
-    @pl.when((s_idx == 0) & (p_idx == 0))
+    Grid (kv_head, q_block, seq, page_block): each grid step streams ``kb``
+    pages (as ``kb`` separate scalar-prefetch-indexed tiles of the same page
+    pool) against one ``tb``-row query tile; online-softmax scratch spans
+    the query tile and persists across the (seq, page_block) inner loops.
+    When ``quant`` the page tiles are int8/fp8 and per-(token, kv-head) f32
+    scale tiles ride along; dequantization happens here, post-DMA.
+    """
+    qb_idx = pl.program_id(1)
+    s_idx = pl.program_id(2)
+    pb_idx = pl.program_id(3)
+
+    q_ref = refs[0]
+    k_refs = refs[1:1 + kb]
+    v_refs = refs[1 + kb:1 + 2 * kb]
+    if quant:
+        ks_refs = refs[1 + 2 * kb:1 + 3 * kb]
+        vs_refs = refs[1 + 3 * kb:1 + 4 * kb]
+        o_ref, m_s, l_s, acc_s = refs[1 + 4 * kb:]
+    else:
+        o_ref, m_s, l_s, acc_s = refs[1 + 2 * kb:]
+
+    @pl.when((s_idx == 0) & (pb_idx == 0))
     def _init():
         m_s[...] = jnp.full_like(m_s, NEG_INF)
         l_s[...] = jnp.zeros_like(l_s)
         acc_s[...] = jnp.zeros_like(acc_s)
 
-    # early-skip: pad sequences (q_lens == 0) and pages past the sequence's
-    # context contribute nothing — their DMA'd tile is never touched
-    @pl.when((q_lens[s_idx] > 0) & (p_idx * page < context_lens[s_idx]))
+    # early-skip: pad sequences (q_lens == 0), sequences whose packed rows
+    # miss this query tile, and page blocks past the sequence's context
+    # contribute nothing — their DMA'd tiles are never touched
+    row0 = qb_idx * tb
+    overlap = ((row0 < q_starts[s_idx] + q_lens[s_idx])
+               & (row0 + tb > q_starts[s_idx]))
+
+    @pl.when((q_lens[s_idx] > 0) & overlap
+             & (pb_idx * kb * page < context_lens[s_idx]))
     def _compute():
-        q = q_ref[:, 0, :, :].astype(jnp.float32).reshape(t * g, -1)  # (TG, D)
-        k = k_ref[0, :, 0, :].astype(jnp.float32)                     # (page, D)
-        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        q = q_ref[:, 0, :, :].astype(jnp.float32).reshape(tb * g, -1)
+        for j in range(kb):
+            k = k_refs[j][0, :, 0, :].astype(jnp.float32)     # (page, D)
+            v = v_refs[j][0, :, 0, :].astype(jnp.float32)
+            if quant:
+                k = k * ks_refs[j][0, :, 0][:, None]
+                v = v * vs_refs[j][0, :, 0][:, None]
 
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
 
-        tok = jax.lax.broadcasted_iota(jnp.int32, (t * g, page), 0) // g
-        kv_pos = (p_idx * page
-                  + jax.lax.broadcasted_iota(jnp.int32, (t * g, page), 1))
-        q_pos = pos0[s_idx] + tok - q_starts[s_idx]
-        mask = ((tok >= q_starts[s_idx])
-                & (tok < q_starts[s_idx] + q_lens[s_idx])
-                & (kv_pos < context_lens[s_idx]) & (kv_pos <= q_pos))
-        if window is not None:
-            mask &= (q_pos - kv_pos) < window
-        s = jnp.where(mask, s, NEG_INF)
+            tok = (row0 + jax.lax.broadcasted_iota(
+                jnp.int32, (tb * g, page), 0) // g)
+            kv_pos = ((pb_idx * kb + j) * page
+                      + jax.lax.broadcasted_iota(jnp.int32, (tb * g, page), 1))
+            q_pos = pos0[s_idx] + tok - q_starts[s_idx]
+            mask = ((tok >= q_starts[s_idx])
+                    & (tok < q_starts[s_idx] + q_lens[s_idx])
+                    & (kv_pos < context_lens[s_idx]) & (kv_pos <= q_pos))
+            if window is not None:
+                mask &= (q_pos - kv_pos) < window
+            s = jnp.where(mask, s, NEG_INF)
 
-        m_prev = m_s[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)
-        p = jnp.where(mask, p, 0.0)
-        l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
-        acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-        m_s[...] = m_new
+            m_prev = m_s[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new)
+            p = jnp.where(mask, p, 0.0)
+            l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+            acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_s[...] = m_new
 
-    @pl.when((s_idx == n_seq - 1) & (p_idx == n_pages - 1))
+    @pl.when((s_idx == n_seq - 1) & (pb_idx == n_pb - 1))
     def _flush():
         out = acc_s[...] / jnp.maximum(l_s[...], 1e-30)
-        o_ref[...] = out.reshape(t, 1, g, -1).astype(o_ref.dtype)
+        o_ref[...] = out.reshape(tb, 1, g, -1).astype(o_ref.dtype)
+
+
+def _ragged_kernel(block_tables, context_lens, q_starts, q_lens, pos0,
+                   *refs, **kw):
+    _ragged_impl(block_tables, context_lens, q_starts, q_lens, pos0, refs,
+                 quant=False, **kw)
+
+
+def _ragged_quant_kernel(block_tables, context_lens, q_starts, q_lens, pos0,
+                         scale_tables, *refs, **kw):
+    # scale_tables only drives the scale-tile index maps; body never reads it
+    _ragged_impl(block_tables, context_lens, q_starts, q_lens, pos0, refs,
+                 quant=True, **kw)
+
+
+def _resolve_tiling(t: int, n_pages: int, pages_per_block: Optional[int],
+                    q_block: Optional[int]) -> tuple[int, int]:
+    """Clamp the requested (kb, tb) to the launch's shape. ``tb`` must tile
+    the stream exactly (Pallas blocks are uniform) — a non-divisor falls
+    back to the untiled ``tb = t``."""
+    kb = max(1, min(int(pages_per_block or 1), n_pages))
+    tb = t if q_block is None else max(1, min(int(q_block), t))
+    if t % tb:
+        tb = t
+    return kb, tb
 
 
 def paged_attention_ragged(q, k_pages, v_pages, block_tables, context_lens,
                            q_starts, q_lens, pos0,
                            *, window: Optional[int] = None,
                            scale: Optional[float] = None,
+                           pages_per_block: Optional[int] = None,
+                           q_block: Optional[int] = None,
                            interpret: bool = False) -> jnp.ndarray:
     """Token-packed ragged paged attention: one launch for the whole hybrid
     step (DESIGN.md §11). q: (T, H, D) packed stream; block_tables:
     (S, n_pages); context_lens/q_starts/q_lens/pos0: (S,). Returns (T, H, D).
 
-    Grid is (kv_head, seq, page): the online-softmax scratch spans the full
-    packed stream and each (seq, page) step masks to the rows the sequence
-    owns; pages beyond a sequence's context (and pad sequences) early-skip.
+    Grid is (kv_head, q_block, seq, page_block): the online-softmax scratch
+    spans one ``q_block`` query tile and each (seq, page_block) step masks
+    to the rows the sequence owns; pages beyond a sequence's context, pad
+    sequences, and non-overlapping query tiles early-skip. The
+    (pages_per_block, q_block) tiling is the autotuned axis (DESIGN.md §14);
+    the defaults reproduce the untiled grid.
     """
     t, h, d = q.shape
     n_seq, n_pages = block_tables.shape
     _, page, hkv, _ = k_pages.shape
     g = h // hkv
     scale = scale if scale is not None else d ** -0.5
+    kb, tb = _resolve_tiling(t, n_pages, pages_per_block, q_block)
+    n_pb = -(-n_pages // kb)
+    n_qb = t // tb
+    if n_pb * kb != n_pages:   # pad table columns; masked past context
+        block_tables = jnp.pad(block_tables,
+                               ((0, 0), (0, n_pb * kb - n_pages)))
     qr = q.reshape(t, hkv, g, d)
 
-    grid = (hkv, n_seq, n_pages)
-    kernel = functools.partial(_ragged_kernel, page=page, n_pages=n_pages,
-                               n_seq=n_seq, t=t, g=g, window=window,
+    grid = (hkv, n_qb, n_seq, n_pb)
+    kernel = functools.partial(_ragged_kernel, page=page, kb=kb, n_pb=n_pb,
+                               n_seq=n_seq, tb=tb, g=g, window=window,
                                scale=scale)
+
+    def _page_spec(j):
+        return pl.BlockSpec((1, page, 1, d),
+                            lambda hk, qb, s, pb, bt, cl, qs, ql, p0, j=j:
+                                (bt[s, pb * kb + j], 0, hk, 0))
+
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=5,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((t, 1, g, d),
-                             lambda hk, s, p, *_: (0, hk, 0, 0)),
-                pl.BlockSpec((1, page, 1, d),
-                             lambda hk, s, p, bt, cl, qs, ql, p0:
-                                 (bt[s, p], 0, hk, 0)),
-                pl.BlockSpec((1, page, 1, d),
-                             lambda hk, s, p, bt, cl, qs, ql, p0:
-                                 (bt[s, p], 0, hk, 0)),
-            ],
-            out_specs=pl.BlockSpec((t, 1, g, d),
-                                   lambda hk, s, p, *_: (0, hk, 0, 0)),
+            in_specs=(
+                [pl.BlockSpec((tb, 1, g, d),
+                              lambda hk, qb, s, pb, *_: (qb, hk, 0, 0))]
+                + [_page_spec(j) for j in range(kb)]      # k tiles
+                + [_page_spec(j) for j in range(kb)]),    # v tiles
+            out_specs=pl.BlockSpec((tb, 1, g, d),
+                                   lambda hk, qb, s, pb, *_: (qb, hk, 0, 0)),
             scratch_shapes=[
-                pltpu.VMEM((t * g, 1), jnp.float32),
-                pltpu.VMEM((t * g, 1), jnp.float32),
-                pltpu.VMEM((t * g, d), jnp.float32),
+                pltpu.VMEM((tb * g, 1), jnp.float32),
+                pltpu.VMEM((tb * g, 1), jnp.float32),
+                pltpu.VMEM((tb * g, d), jnp.float32),
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((t, hkv, g, d), q.dtype),
         interpret=interpret,
-    )(block_tables, context_lens, q_starts, q_lens, pos0, qr, k_pages,
-      v_pages)
+    )(block_tables, context_lens, q_starts, q_lens, pos0, qr,
+      *([k_pages] * kb), *([v_pages] * kb))
+    return out.reshape(t, h, d)
+
+
+def paged_attention_ragged_quant(q, k_pages, v_pages, k_scales, v_scales,
+                                 block_tables, scale_tables, context_lens,
+                                 q_starts, q_lens, pos0,
+                                 *, window: Optional[int] = None,
+                                 scale: Optional[float] = None,
+                                 pages_per_block: Optional[int] = None,
+                                 q_block: Optional[int] = None,
+                                 interpret: bool = False) -> jnp.ndarray:
+    """Quantized-KV ragged paged attention (DESIGN.md §14).
+
+    Same contract as ``paged_attention_ragged`` plus: k_pages/v_pages hold
+    int8 (or fp8-e4m3) values, k_scales/v_scales: (Ps, page, Hkv) f32 scale
+    pages, scale_tables: (S, n_pages) scale-page ids parallel to
+    block_tables (``BlockAllocator.scale_table``). Dequantization happens
+    inside the kernel after the DMA — HBM reads stay at quantized width.
+    """
+    t, h, d = q.shape
+    n_seq, n_pages = block_tables.shape
+    _, page, hkv, _ = k_pages.shape
+    g = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    kb, tb = _resolve_tiling(t, n_pages, pages_per_block, q_block)
+    n_pb = -(-n_pages // kb)
+    n_qb = t // tb
+    if n_pb * kb != n_pages:
+        pad = ((0, 0), (0, n_pb * kb - n_pages))
+        block_tables = jnp.pad(block_tables, pad)
+        scale_tables = jnp.pad(scale_tables, pad)
+    qr = q.reshape(t, hkv, g, d)
+
+    grid = (hkv, n_qb, n_seq, n_pb)
+    kernel = functools.partial(_ragged_quant_kernel, page=page, kb=kb,
+                               n_pb=n_pb, n_seq=n_seq, tb=tb, g=g,
+                               window=window, scale=scale)
+
+    def _page_spec(j):
+        return pl.BlockSpec((1, page, 1, d),
+                            lambda hk, qb, s, pb, bt, cl, qs, ql, p0, st, j=j:
+                                (bt[s, pb * kb + j], 0, hk, 0))
+
+    def _scale_spec(j):
+        return pl.BlockSpec((1, page, 1),
+                            lambda hk, qb, s, pb, bt, cl, qs, ql, p0, st, j=j:
+                                (st[s, pb * kb + j], 0, hk))
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=6,
+            grid=grid,
+            in_specs=(
+                [pl.BlockSpec((tb, 1, g, d),
+                              lambda hk, qb, s, pb, *_: (qb, hk, 0, 0))]
+                + [_page_spec(j) for j in range(kb)]      # k value tiles
+                + [_page_spec(j) for j in range(kb)]      # v value tiles
+                + [_scale_spec(j) for j in range(kb)]     # k scale tiles
+                + [_scale_spec(j) for j in range(kb)]),   # v scale tiles
+            out_specs=pl.BlockSpec((tb, 1, g, d),
+                                   lambda hk, qb, s, pb, *_: (qb, hk, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((tb * g, 1), jnp.float32),
+                pltpu.VMEM((tb * g, 1), jnp.float32),
+                pltpu.VMEM((tb * g, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((t, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, context_lens, q_starts, q_lens, pos0, scale_tables, qr,
+      *([k_pages] * kb), *([v_pages] * kb),
+      *([k_scales] * kb), *([v_scales] * kb))
     return out.reshape(t, h, d)
 
 

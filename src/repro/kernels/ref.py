@@ -21,23 +21,26 @@ def paged_gather(pages: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
     return g.reshape(b, n * p, h, d)
 
 
-def paged_attention_ref(q, k_pages, v_pages, block_table, context_lens,
-                        q_starts, *, window: Optional[int] = None,
-                        scale: Optional[float] = None) -> jnp.ndarray:
-    """Reference ragged paged attention (decode AND chunked prefill).
+def paged_gather_scales(scale_pages: jnp.ndarray,
+                        scale_table: jnp.ndarray) -> jnp.ndarray:
+    """scale_pages: (P, page, Hkv); scale_table: (B, n_pages)
+    → (B, n_pages*page, Hkv). The scale-row companion of ``paged_gather``
+    (DESIGN.md §14)."""
+    g = scale_pages[scale_table]            # (B, n_pages, page, Hkv)
+    b, n, p, h = g.shape
+    return g.reshape(b, n * p, h)
 
-    q: (B, Tq, H, D)       — Tq = 1 for decode, = chunk for prefill chunks
-    k_pages/v_pages: (P, page, Hkv, D)
-    block_table: (B, n_pages) int32 — page ids per sequence
-    context_lens: (B,) int32 — total tokens in cache (incl. current chunk)
-    q_starts: (B,) int32 — global position of q[:, 0]
+
+def _attend_gathered(q, k, v, context_lens, q_starts, *, window, scale):
+    """Core masked-softmax attention over already-gathered per-seq KV.
+
+    q: (B, Tq, H, D); k/v: (B, L, Hkv, D) f32 gathered context. Shared by
+    the fp32 and the dequantizing quantized oracles so both run the *same*
+    math — the quant refs differ only in how k/v were materialized.
     """
     b, tq, h, d = q.shape
-    hkv = k_pages.shape[2]
+    hkv = k.shape[2]
     g = h // hkv
-    scale = scale if scale is not None else d ** -0.5
-    k = paged_gather(k_pages, block_table)  # (B, S, Hkv, D)
-    v = paged_gather(v_pages, block_table)
     s_len = k.shape[1]
     kv_pos = jnp.arange(s_len)[None, :]                     # (1, S)
     q_pos = q_starts[:, None] + jnp.arange(tq)[None, :]     # (B, Tq)
@@ -53,6 +56,46 @@ def paged_attention_ref(q, k_pages, v_pages, block_table, context_lens,
     p = jnp.where(mask[:, None, None], p, 0.0)
     o = jnp.einsum("bhgts,bshd->bthgd", p, v.astype(jnp.float32))
     return o.reshape(b, tq, h, d).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, context_lens,
+                        q_starts, *, window: Optional[int] = None,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """Reference ragged paged attention (decode AND chunked prefill).
+
+    q: (B, Tq, H, D)       — Tq = 1 for decode, = chunk for prefill chunks
+    k_pages/v_pages: (P, page, Hkv, D)
+    block_table: (B, n_pages) int32 — page ids per sequence
+    context_lens: (B,) int32 — total tokens in cache (incl. current chunk)
+    q_starts: (B,) int32 — global position of q[:, 0]
+    """
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    k = paged_gather(k_pages, block_table)  # (B, L, Hkv, D)
+    v = paged_gather(v_pages, block_table)
+    return _attend_gathered(q, k, v, context_lens, q_starts,
+                            window=window, scale=scale)
+
+
+def paged_attention_quant_ref(q, k_pages, v_pages, k_scales, v_scales,
+                              block_table, scale_table, context_lens,
+                              q_starts, *, window: Optional[int] = None,
+                              scale: Optional[float] = None) -> jnp.ndarray:
+    """Quantized-KV oracle (DESIGN.md §14): dequantize the gathered context
+    with per-(token, kv-head) scales, then run the exact fp32 reference math.
+
+    k_pages/v_pages: (P, page, Hkv, D) int8/fp8; k_scales/v_scales:
+    (Ps, page, Hkv) f32 scale pages; scale_table: (B, n_pages) parallel to
+    block_table (``BlockAllocator.scale_table``).
+    """
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    k = (paged_gather(k_pages, block_table).astype(jnp.float32)
+         * paged_gather_scales(k_scales, scale_table)[..., None])
+    v = (paged_gather(v_pages, block_table).astype(jnp.float32)
+         * paged_gather_scales(v_scales, scale_table)[..., None])
+    return _attend_gathered(q, k, v, context_lens, q_starts,
+                            window=window, scale=scale)
 
 
 def paged_attention_ragged_ref(q, k_pages, v_pages, block_tables,
@@ -75,17 +118,48 @@ def paged_attention_ragged_ref(q, k_pages, v_pages, block_tables,
 
     Rows not owned by any sequence (stream padding) return zeros.
     """
-    t, h, d = q.shape
-    hkv = k_pages.shape[2]
-    g = h // hkv
+    d = q.shape[-1]
     scale = scale if scale is not None else d ** -0.5
+    k = paged_gather(k_pages, block_tables)                # (S, L, Hkv, D)
+    v = paged_gather(v_pages, block_tables)
+    return _attend_ragged_gathered(q, k, v, context_lens, q_starts, q_lens,
+                                   pos0, window=window, scale=scale)
+
+
+def paged_attention_ragged_quant_ref(q, k_pages, v_pages, k_scales, v_scales,
+                                     block_tables, scale_tables, context_lens,
+                                     q_starts, q_lens, pos0,
+                                     *, window: Optional[int] = None,
+                                     scale: Optional[float] = None
+                                     ) -> jnp.ndarray:
+    """Quantized token-packed ragged oracle (DESIGN.md §14): dequantize each
+    sequence's gathered context with its scale pages, then run the exact
+    fp32 ragged reference math. scale_tables: (S, n_pages) parallel to
+    block_tables."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    k = (paged_gather(k_pages, block_tables).astype(jnp.float32)
+         * paged_gather_scales(k_scales, scale_tables)[..., None])
+    v = (paged_gather(v_pages, block_tables).astype(jnp.float32)
+         * paged_gather_scales(v_scales, scale_tables)[..., None])
+    return _attend_ragged_gathered(q, k, v, context_lens, q_starts, q_lens,
+                                   pos0, window=window, scale=scale)
+
+
+def _attend_ragged_gathered(q, k, v, context_lens, q_starts, q_lens, pos0,
+                            *, window, scale):
+    """Ragged attention core over per-sequence gathered KV (S, L, Hkv, D) —
+    shared by the fp32 and quantized oracles (same math, same rounding)."""
+    t, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
     tok = jnp.arange(t)
     owns = ((tok[None, :] >= q_starts[:, None])
             & (tok[None, :] < (q_starts + q_lens)[:, None]))    # (S, T)
     token_seq = jnp.argmax(owns, axis=0)                        # (T,)
     owned = jnp.any(owns, axis=0)                               # (T,)
-    k = paged_gather(k_pages, block_tables)[token_seq]          # (T, L, Hkv, D)
-    v = paged_gather(v_pages, block_tables)[token_seq]
+    k = k[token_seq]                                       # (T, L, Hkv, D)
+    v = v[token_seq]
     s_len = k.shape[1]
     q_pos = pos0[token_seq] + tok - q_starts[token_seq]         # (T,)
     kv_pos = jnp.arange(s_len)[None, :]                         # (1, L)

@@ -105,10 +105,17 @@ def test_fused_matches_sequential_on_mixed_plans(executors, setup, seed):
 
 def test_fused_bitwise_logits_without_jit(executors, setup):
     """Under ``jax.disable_jit()`` the two step bodies are the same math:
-    first-token logits are bit-identical (DESIGN.md §11)."""
-    cfg, _, _ = setup
+    first-token logits are bit-identical (DESIGN.md §11). The pages-bucket
+    trim (§14) is pinned off here: shrinking the gathered context reorders
+    the fp sum (values equal only up to reassociation), and this test's
+    claim is exact-math identity of the two step bodies."""
+    cfg, _, params = setup
+    fused = PagedTransformerExecutor(
+        cfg, params, num_pages=NUM_PAGES, page_size=PAGE,
+        max_pages_per_seq=MAX_PAGES, mode="fused", capture_logits=True,
+        trim_page_tables=False)
     with jax.disable_jit():
-        tok_f, lg_f, _ = _run(executors["fused"], cfg, seed=4, max_steps=60)
+        tok_f, lg_f, _ = _run(fused, cfg, seed=4, max_steps=60)
         tok_s, lg_s, _ = _run(executors["sequential"], cfg, seed=4,
                               max_steps=60)
     assert tok_f == tok_s
@@ -150,6 +157,57 @@ def test_compile_ladder_bound_over_warm_trace(setup):
     n_compiles = execu._fused_fn._cache_size()
     assert n_compiles <= 2 * len(pairs), (n_compiles, pairs)
     assert len(pairs) <= 10, f"bucket ladder too leaky: {sorted(pairs)}"
+
+
+def test_one_dispatch_per_warm_step_across_bucket_ladder(setup):
+    """Dispatch-count regression (ISSUE 6 satellite): exactly ONE forward
+    dispatch per engine step — cold AND warm — while the workload walks
+    multiple cells of the two-axis bucket ladder (so no bucket transition
+    sneaks in an extra launch).
+
+    Context: the BENCH_hybrid_step.json rollup's ``dispatches_per_step``
+    median of 2.0 was investigated and is an artifact of the summary mixing
+    sequential-mode rows (3 launches/step) with fused rows (1/step) in one
+    min/median/max — not a fused-path regression. The fused path's own
+    invariant is pinned here per step, and the bench now also surfaces it
+    unmixed as ``fused_dispatches_per_step``.
+    """
+    cfg, _, params = setup
+    execu = PagedTransformerExecutor(cfg, params, num_pages=512,
+                                     page_size=PAGE,
+                                     max_pages_per_seq=MAX_PAGES)
+    eng = _engine(execu)
+    rng = jax.random.PRNGKey(13)
+    # ramp of prompt lengths + staggered arrivals: step widths sweep the
+    # token-bucket ladder up and (as requests drain) back down, and the
+    # growing tables walk the pages-bucket axis too
+    for i in range(24):
+        plen = 3 + (5 * i) % 60
+        toks = [int(x) for x in jax.random.randint(
+            jax.random.fold_in(rng, i), (plen,), 0, cfg.vocab)]
+        eng.submit(Request(i, arrival=0.02 * i, prompt_len=plen,
+                           max_new_tokens=24, ttft_slo=5.0, tpot_slo=5.0,
+                           tokens=toks))
+    dispatches_per_step = []
+    n = 0
+    while eng.has_work and n < 600:
+        before = execu.n_dispatches
+        steps_before = len(eng.steps)
+        eng.step()
+        n += 1
+        if len(eng.steps) > steps_before:      # a batch actually ran
+            dispatches_per_step.append(execu.n_dispatches - before)
+    assert len(eng.done) == 24, "ladder workload did not complete"
+    bad = [d for d in dispatches_per_step if d != 1]
+    assert not bad, f"steps with != 1 dispatch: {bad[:5]}"
+    assert execu.n_dispatches == len(eng.steps)
+    # the sweep must genuinely cross bucket cells, warm steps included:
+    # every key compiled once, later steps in the same cell reused it
+    fused_keys = {k for k in execu.compile_keys if k[0] == "fused"}
+    assert len(fused_keys) >= 3, \
+        f"ladder not exercised: {sorted(fused_keys)}"
+    assert len(dispatches_per_step) > len(fused_keys), \
+        "no warm (cache-hit) steps ran"
 
 
 def greedy_oracle(model, params, prompt, n_new):

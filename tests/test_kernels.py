@@ -1,13 +1,19 @@
 """Pallas kernels vs jnp oracles — interpret=True shape/dtype sweeps."""
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import quant as kvq
 from repro.kernels.mamba2_scan import mamba_chunk_scan
 from repro.kernels.moe_gmm import moe_gmm
-from repro.kernels.paged_attention import paged_attention, paged_attention_ragged
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_ragged,
+                                           paged_attention_ragged_quant)
 from repro.kernels.ref import (mamba_chunk_scan_ref, moe_gmm_ref,
+                               paged_attention_ragged_quant_ref,
                                paged_attention_ragged_ref, paged_attention_ref)
 
 KEY = jax.random.PRNGKey(0)
@@ -185,6 +191,158 @@ def test_paged_attention_ragged_hypothesis_layouts():
         assert float(jnp.abs(out[used:]).max()) == 0.0
 
     check()
+
+
+# ---------------------------------------------------------------------------
+# quantized-KV numerics (DESIGN.md §14): derived-bound sweep vs fp32 oracle
+# ---------------------------------------------------------------------------
+
+
+def _quant_specs():
+    """Every KV quantization format the backend supports."""
+    specs = [kvq.kv_quant_spec("int8")]
+    if kvq.supports_fp8():
+        specs.append(kvq.kv_quant_spec("fp8_e4m3"))
+    return specs
+
+
+def test_kv_quant_round_trip_bound():
+    """|dequant(quant(x)) − x| ≤ ``row_error_bound`` elementwise — the §14
+    bound everything downstream is derived from — and all-zero rows survive
+    the scale floor without NaNs."""
+    ks = jax.random.split(KEY, 2)
+    # spread row magnitudes over several orders so per-row scaling matters
+    x = jax.random.normal(ks[0], (64, 4, 32)) \
+        * jnp.exp(2.0 * jax.random.normal(ks[1], (64, 4, 1)))
+    for spec in _quant_specs():
+        vals, scales = kvq.quantize_kv(x, spec)
+        assert vals.dtype == spec.dtype and scales.dtype == jnp.float32
+        err = jnp.abs(kvq.dequantize_kv(vals, scales) - x)
+        bound = kvq.row_error_bound(x, spec)[..., None]
+        worst = float(jnp.max(err - bound))
+        assert worst <= 0.0, f"{spec.name}: bound violated by {worst}"
+        v0, s0 = kvq.quantize_kv(jnp.zeros((3, 8)), spec)
+        assert bool(jnp.all(kvq.dequantize_kv(v0, s0) == 0.0)), spec.name
+
+
+def _quant_attention_tol(q, kp, vp, spec, *, scale):
+    """Attention-output tolerance vs the fp32 oracle, derived from the
+    quantization step size (DESIGN.md §14).
+
+    Every k element is off by ≤ its row absmax × half_step, so each masked
+    score moves by at most δ = scale · max‖q_row‖₁ · max|k| · half_step.
+    Perturbing every softmax logit by ≤ δ rescales each probability within
+    [e^{-2δ}, e^{2δ}]; since both distributions sum to 1 the total
+    variation is ≤ e^{2δ} − 1, and the output (a convex combination of v
+    rows, each itself off by ≤ max|v| × half_step) moves by at most
+        (e^{2δ} − 1) · max|v| + max|v| · half_step.
+    """
+    q1 = float(jnp.max(jnp.sum(jnp.abs(q), axis=-1)))
+    kmax = float(jnp.max(jnp.abs(kp)))
+    vmax = float(jnp.max(jnp.abs(vp)))
+    delta = scale * q1 * kmax * spec.half_step
+    return (math.exp(2.0 * delta) - 1.0) * vmax + vmax * spec.half_step + 1e-6
+
+
+def _quant_failure_triple(err, q_starts, q_lens, pos0, bt, page):
+    """Map the worst output element to its (seq, head, page) triple — the
+    §14 failure-report contract for the numerics sweep."""
+    t, h, _ = np.unravel_index(int(jnp.argmax(err)), err.shape)
+    seq = next((s for s in range(len(q_lens))
+                if q_starts[s] <= t < q_starts[s] + q_lens[s]), None)
+    if seq is None:
+        return ("pad-row", int(h), None)
+    q_pos = pos0[seq] + (t - q_starts[seq])
+    return (seq, int(h), int(bt[seq][q_pos // page]))
+
+
+def _quant_layout(q_lens, pos0, H, Hkv, D, page, n_pages, window, seed=0):
+    """Build one quantized ragged-attention workload: fp32 originals plus
+    their quantized pages/scales (scale tables alias the block tables —
+    the kernels only require *parallel* id arrays, exactly what
+    ``BlockAllocator.scale_table`` provides in production)."""
+    P = n_pages * 2 + 1
+    S = len(q_lens)
+    q_starts, T = _packed_layout(q_lens, gap=3)
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 4)
+    q = jax.random.normal(ks[0], (T, H, D))
+    kp = jax.random.normal(ks[1], (P, page, Hkv, D))
+    vp = jax.random.normal(ks[2], (P, page, Hkv, D))
+    bt = jax.random.randint(ks[3], (S, n_pages), 0, P)
+    ctx = jnp.minimum(jnp.asarray([p + n for p, n in zip(pos0, q_lens)],
+                                  jnp.int32), page * n_pages)
+    args = (jnp.asarray(q_starts, jnp.int32), jnp.asarray(q_lens, jnp.int32),
+            jnp.minimum(jnp.asarray(pos0, jnp.int32),
+                        jnp.maximum(ctx - jnp.asarray(q_lens, jnp.int32), 0)))
+    return q, kp, vp, bt, ctx, args, q_starts, T
+
+
+# odd shapes (ISSUE 6 satellite): single-token decode rows, context lens on
+# exact page boundaries, chunks starting at a boundary, empty prefill slots
+QUANT_LAYOUTS = [
+    ([1], [15], 4, 2, 32, 16, 2, None),               # ctx lands on a page end
+    ([1, 1, 1], [15, 31, 7], 4, 2, 32, 16, 2, None),  # decode rows @ bounds
+    ([5, 0, 1, 3], [10, 0, 20, 0], 4, 2, 32, 16, 3, None),  # empty slot
+    ([16], [16], 8, 2, 16, 8, 5, 12),                 # boundary chunk, SWA
+]
+
+
+@pytest.mark.parametrize("q_lens,pos0,H,Hkv,D,page,n_pages,window",
+                         QUANT_LAYOUTS)
+def test_paged_attention_ragged_quant_sweep(q_lens, pos0, H, Hkv, D, page,
+                                            n_pages, window):
+    """Quantized ragged attention vs the fp32 oracle within the derived
+    bound, and the interpret-mode Pallas kernel vs the quantized oracle at
+    kernel tolerance. Failures report the offending (seq, head, page)."""
+    for spec in _quant_specs():
+        q, kp, vp, bt, ctx, (qs, ql, p0), q_starts, T = _quant_layout(
+            q_lens, pos0, H, Hkv, D, page, n_pages, window)
+        kq, ks_ = kvq.quantize_kv(kp, spec)
+        vq, vs_ = kvq.quantize_kv(vp, spec)
+        expect = paged_attention_ragged_ref(q, kp, vp, bt, ctx, qs, ql, p0,
+                                            window=window)
+        got = paged_attention_ragged_quant_ref(
+            q, kq, vq, ks_, vs_, bt, bt, ctx, qs, ql, p0, window=window)
+        tol = _quant_attention_tol(q, kp, vp, spec, scale=D ** -0.5)
+        err = jnp.abs(got.astype(jnp.float32) - expect.astype(jnp.float32))
+        assert float(err.max()) < tol, (
+            f"{spec.name} vs fp32 oracle: err={float(err.max()):.3e} > "
+            f"tol={tol:.3e} at (seq, head, page)="
+            f"{_quant_failure_triple(err, q_starts, q_lens, pos0, bt, page)}")
+        out = paged_attention_ragged_quant(
+            q, kq, vq, ks_, vs_, bt, bt, ctx, qs, ql, p0, window=window,
+            interpret=True)
+        kerr = jnp.abs(out.astype(jnp.float32) - got.astype(jnp.float32))
+        assert float(kerr.max()) < _tol(jnp.float32), (
+            f"{spec.name} kernel vs quant oracle: err={float(kerr.max()):.3e}"
+            f" at (seq, head, page)="
+            f"{_quant_failure_triple(kerr, q_starts, q_lens, pos0, bt, page)}")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kb,tb", [(1, None), (2, None), (4, 1), (2, 4)])
+def test_paged_attention_ragged_quant_tilings_slow(kb, tb):
+    """Heavy half of the numerics sweep (CI slow step): the autotuner's
+    (pages_per_block, q_block) tilings over every odd layout and format,
+    including a non-divisor q_block that must fall back untiled."""
+    for seed, (q_lens, pos0, H, Hkv, D, page, n_pages, window) in \
+            enumerate(QUANT_LAYOUTS):
+        for spec in _quant_specs():
+            q, kp, vp, bt, ctx, (qs, ql, p0), q_starts, T = _quant_layout(
+                q_lens, pos0, H, Hkv, D, page, n_pages, window, seed=seed)
+            kq, ks_ = kvq.quantize_kv(kp, spec)
+            vq, vs_ = kvq.quantize_kv(vp, spec)
+            oracle = paged_attention_ragged_quant_ref(
+                q, kq, vq, ks_, vs_, bt, bt, ctx, qs, ql, p0, window=window)
+            out = paged_attention_ragged_quant(
+                q, kq, vq, ks_, vs_, bt, bt, ctx, qs, ql, p0, window=window,
+                pages_per_block=kb, q_block=tb, interpret=True)
+            err = jnp.abs(out.astype(jnp.float32)
+                          - oracle.astype(jnp.float32))
+            assert float(err.max()) < _tol(jnp.float32), (
+                f"{spec.name} (kb={kb}, tb={tb}): err={float(err.max()):.3e}"
+                f" at (seq, head, page)="
+                f"{_quant_failure_triple(err, q_starts, q_lens, pos0, bt, page)}")
 
 
 def test_paged_attention_ignores_garbage_beyond_context():

@@ -1,0 +1,189 @@
+"""Scale-page lifecycle invariants of the quantized paged KV (DESIGN.md §14).
+
+Every live data page owns exactly one scale page, the pairing follows the
+data page through extend/fork/COW/shrink/evict/release, and both pools
+conserve. Deterministic cases pin each lifecycle edge; a hypothesis sweep
+interleaves the operations randomly and asserts ``check_invariants`` (the
+bijection + conservation laws) after every single op — no interleaving may
+orphan or alias a scale entry.
+"""
+import pytest
+
+from repro.engine.kv_manager import BlockAllocator
+
+
+# ---------------------------------------------------------------------------
+# deterministic lifecycle edges
+# ---------------------------------------------------------------------------
+
+
+def test_scale_pages_allocated_and_freed_with_data():
+    alloc = BlockAllocator(8, 4)
+    tbl = alloc.extend(1, 10)                   # 3 data pages
+    alloc.check_invariants()
+    assert len(tbl) == 3
+    assert all(p in alloc.scale_of for p in tbl)
+    assert len(alloc.scale_table(1)) == 3
+    assert len(alloc._free) == len(alloc._free_scales) == 5
+    alloc.release(1)
+    alloc.check_invariants()
+    assert not alloc.scale_of
+    assert len(alloc._free) == len(alloc._free_scales) == 8
+
+
+def test_trash_page_scale_pinned_to_zero():
+    """The executor's construction order (extend(-1, page_size) on a fresh
+    allocator) must yield data page 0 paired with scale page 0 — pad tokens
+    route both their values and their scales to id 0."""
+    alloc = BlockAllocator(16, 8)
+    assert alloc.extend(-1, 8) == [0]
+    assert alloc.scale_of[0] == 0
+
+
+def test_fork_shares_scales_via_data_page():
+    """A fork adds data-page references only: the scale pool is untouched
+    and the forked request sees the same scale ids through ``scale_table``."""
+    alloc = BlockAllocator(8, 4)
+    tbl = alloc.extend(1, 8)
+    free_scales_before = list(alloc._free_scales)
+    alloc.fork(2, tbl, 8)
+    alloc.check_invariants()
+    assert alloc._free_scales == free_scales_before
+    assert alloc.scale_table(2) == alloc.scale_table(1)
+    # last release frees the shared pair exactly once
+    alloc.release(1)
+    alloc.check_invariants()
+    assert alloc.scale_table(2) == [alloc.scale_of[p] for p in tbl]
+    alloc.release(2)
+    alloc.check_invariants()
+    assert len(alloc._free_scales) == 8
+
+
+def test_cow_event_carries_fresh_scale_page():
+    """COW of a shared partial tail page allocates a *fresh* scale page for
+    the copy; the event carries all four ids so the executor mirrors values
+    and scales in the same drain."""
+    alloc = BlockAllocator(8, 4)
+    tbl = alloc.extend(1, 6)                    # partial tail page
+    alloc.fork(2, tbl, 6)
+    old_tail = tbl[-1]
+    old_scale = alloc.scale_of[old_tail]
+    alloc.extend(2, 1)                          # forces the COW
+    alloc.check_invariants()
+    (olds, news, s_olds, s_news) = alloc.pop_cow_events_batched()
+    assert olds == [old_tail] and s_olds == [old_scale]
+    new_tail = alloc.tables[2][-1]
+    assert news == [new_tail] and new_tail != old_tail
+    assert s_news == [alloc.scale_of[new_tail]]
+    assert alloc.scale_of[new_tail] != old_scale, \
+        "COW copy must not alias the survivor's scale page"
+    assert alloc.scale_of[old_tail] == old_scale, \
+        "survivor keeps its original scale page"
+    # 2-tuple compat view drains the same queue
+    assert alloc.pop_cow_events() == []
+
+
+def test_shrink_releases_scale_pairs():
+    alloc = BlockAllocator(8, 4)
+    alloc.extend(1, 16)                         # 4 pages
+    alloc.shrink(1, 9)                          # back to 7 tokens → 2 pages
+    alloc.check_invariants()
+    assert len(alloc.tables[1]) == 2
+    assert len(alloc._free) == len(alloc._free_scales) == 6
+
+
+def test_evict_request_conserves_shared_scales():
+    alloc = BlockAllocator(16, 4)
+    tbl = alloc.extend(1, 12)
+    alloc.fork(2, tbl[:2], 8)
+    alloc.extend(2, 6)                          # own tail pages
+    shared_scales = [alloc.scale_of[p] for p in tbl[:2]]
+    alloc.evict_request(2)
+    alloc.check_invariants()
+    for p, s in zip(tbl[:2], shared_scales):
+        assert alloc.scale_of[p] == s, "survivor's scale pairing perturbed"
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random op interleavings never break the bijection
+# ---------------------------------------------------------------------------
+
+
+OPS = ("extend", "fork", "release", "evict", "shrink", "adopt", "drain")
+
+
+def _run_program(program, block_size: int, num_blocks: int) -> None:
+    """Interpret an op program against a fresh allocator, asserting the
+    §14 invariants after every single op. Shared by the hypothesis sweep
+    and the seeded deterministic fallback below."""
+    alloc = BlockAllocator(num_blocks, block_size)
+    adopted: list[int] = []                      # radix-style bare references
+    for op, a, b, n in program:
+        if op == "extend":
+            alloc.extend(a, n)                   # None (pool full) is fine
+        elif op == "fork" and a in alloc.tables and b not in alloc.tables:
+            tbl = alloc.tables[a]
+            k = min(n, alloc.lens[a] // block_size)      # full pages only
+            alloc.fork(b, tbl[:k], k * block_size)
+        elif op == "release" and a in alloc.tables:
+            alloc.release(a)
+        elif op == "evict" and a in alloc.tables:
+            alloc.evict_request(a)
+        elif op == "shrink" and a in alloc.tables:
+            alloc.shrink(a, min(n, alloc.lens[a]))
+        elif op == "adopt":
+            if b % 2 and adopted:
+                alloc.release_page(adopted.pop())
+            elif alloc.refcount:
+                page = sorted(alloc.refcount)[a % len(alloc.refcount)]
+                alloc.acquire_page(page)
+                adopted.append(page)
+        elif op == "drain":
+            old, new, s_old, s_new = alloc.pop_cow_events_batched()
+            assert len(old) == len(new) == len(s_old) == len(s_new)
+            assert len(set(new)) == len(new), "COW targets must be fresh"
+            for np_, sn in zip(new, s_new):
+                # the event's scale id must still be the copy's pairing
+                assert alloc.scale_of.get(np_) in (sn, None)
+        alloc.check_invariants()                 # after EVERY op
+    # wind down: every reference path returns its scale pages
+    for rid in list(alloc.tables):
+        alloc.release(rid)
+        alloc.check_invariants()
+    for page in adopted:
+        alloc.release_page(page)
+    alloc.check_invariants()
+    assert not alloc.scale_of and not alloc.refcount
+    assert len(alloc._free) == len(alloc._free_scales) == num_blocks
+
+
+def test_scale_page_invariants_seeded_interleavings():
+    """Deterministic seeded sweep of the same driver (runs even where
+    hypothesis is not installed)."""
+    import random
+    for seed in range(25):
+        rng = random.Random(seed)
+        program = [(rng.choice(OPS), rng.randrange(6), rng.randrange(6),
+                    rng.randint(1, 17)) for _ in range(rng.randint(1, 40))]
+        _run_program(program, rng.randint(1, 8), rng.randint(6, 24))
+
+
+def test_scale_page_invariants_random_interleavings():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @st.composite
+    def programs(draw):
+        n = draw(st.integers(1, 40))
+        return [(draw(st.sampled_from(OPS)),
+                 draw(st.integers(0, 5)),        # request slot
+                 draw(st.integers(0, 5)),        # second slot / page index
+                 draw(st.integers(1, 17)))       # token count
+                for _ in range(n)]
+
+    @hyp.given(programs(), st.integers(1, 8), st.integers(6, 24))
+    @hyp.settings(max_examples=150, deadline=None)
+    def run(program, block_size, num_blocks):
+        _run_program(program, block_size, num_blocks)
+
+    run()

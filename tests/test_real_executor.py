@@ -148,9 +148,11 @@ def test_prefix_reuse_logits_match_cold_prefill(setup):
     toks = jnp.asarray(tail + [0] * (n_tok - len(tail)), jnp.int32)
     execu._extend(1, len(tail))
     tbl = execu._table(1)
-    execu.k_pages, execu.v_pages, logits_warm = execu._chunk_fn(
-        execu.k_pages, execu.v_pages, toks, jnp.int32(cached), tbl,
-        jnp.int32(len(tail)), n_tok=n_tok)
+    execu.k_pages, execu.v_pages, scales, logits_warm = execu._chunk_fn(
+        execu.k_pages, execu.v_pages, execu._scales_in(), toks,
+        jnp.int32(cached), tbl, execu._stable(1), jnp.int32(len(tail)),
+        n_tok=n_tok)
+    execu._set_scales(scales)
     assert jnp.allclose(logits_warm, logits_cold[0], atol=1e-4, rtol=1e-4), \
         float(jnp.max(jnp.abs(logits_warm - logits_cold[0])))
     cache.end_request(1)
