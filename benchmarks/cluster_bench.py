@@ -32,9 +32,9 @@ def _run(lb_name: str, sched: str, admission: bool, dp: int, rps: float,
     return res.summary
 
 
-def run(quick: bool = True) -> list[dict]:
-    dps = (2, 8) if quick else (2, 4, 8)
-    duration = 60.0 if quick else 120.0
+def run(quick: bool = True, smoke: bool = False) -> list[dict]:
+    dps = (2,) if smoke else ((2, 8) if quick else (2, 4, 8))
+    duration = 20.0 if smoke else (60.0 if quick else 120.0)
     rows = []
     for dp in dps:
         for lb_name, sched, adm in COMBOS:
@@ -58,3 +58,36 @@ def run(quick: bool = True) -> list[dict]:
                  "peak_effective_rps": round(s["effective_rps"], 2),
                  "slo": round(s["slo_attainment"], 3)})
     return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale run for CI (asserts the ordering)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    rows = run(quick=not args.full, smoke=args.smoke)
+    for r in rows:
+        print(json.dumps(r))
+    # a repo-root BENCH_ trajectory summary with the driver's own headline
+    # derivation (before the smoke gate, so the artifact survives a
+    # failing bound)
+    from .run import _headline, write_bench_summary
+    path = write_bench_summary("cluster", rows, _headline("cluster", rows))
+    print(f"wrote {path}")
+    if args.smoke:
+        # acceptance (paper Fig. 8 ordering): the FairBatching stack keeps
+        # its peak-goodput edge over vanilla vLLM at cluster scale
+        def peak(sched: str) -> float:
+            return max(r["peak_effective_rps"] for r in rows
+                       if r["scheduler"] == sched)
+        assert peak("fairbatching") >= peak("vllm-vanilla"), \
+            (f"fairbatching cluster peak {peak('fairbatching')} fell below "
+             f"vanilla {peak('vllm-vanilla')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""Disaggregated prefill/decode serving vs monolithic LBs (DESIGN.md §15).
+
+Equal hardware (DP=6 ranks of the 4xH20 70B profile), one mixed workload
+— bursty Gamma arrivals blended with a multi-turn conversation stream on
+a long-context chat profile (3k-token prompts, 900-token replies) — and
+two families of systems:
+
+* **monolithic** — every rank serves prefill + decode; rows cover the
+  count / pab / cache LBs under FairBatching plus the strongest
+  chunked-prefill baseline (sarathi at its auto budget behind the cache
+  LB), each with a per-rank radix cache;
+* **disaggregated** — ``lb="disagg"`` + ``DisaggConfig``: stage-1 routes
+  prompts to the prefill pool, finished prefills hand their KV pages off
+  to the decode pool over a modeled NVLink-class wire (per-source serial
+  link), ``mode`` picks kv / recompute / auto per migration, and
+  saturation sheds (``shed_slack``) rebalance the decode pool.
+
+This regime is where disaggregation genuinely pays in the repo's cost
+model: long prompts under a tight TPOT SLO force every monolithic rank
+to chunk prefill down to the decode envelope (paying the per-step launch
+cost ``a`` once per ~65-token chunk), while a decode-free prefill rank
+runs ~512-token chunks that amortize ``a`` to <3%, and migration keeps
+the resulting interference off the decode pool. Short-prompt / loose-SLO
+mixes do NOT show this win — monolithic FairBatching is the stronger
+system there, which is the paper's own headline.
+
+Headline (asserted under ``--smoke``): the best disagg row beats the
+best monolithic row on p99 TTFT while holding TPOT SLO attainment
+within 0.02. A ``breakeven`` row family sweeps wire bandwidth through
+``migration.breakeven_tokens`` so the transfer-vs-recompute crossover is
+part of the artifact.
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.disagg_bench [--smoke]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.cost_model import LinkModel
+from repro.data.traces import (TRACE_PROFILES, make_gamma_trace,
+                               make_multiturn_trace)
+from repro.disagg import DisaggConfig
+from repro.disagg.migration import breakeven_tokens
+from repro.sim import replay
+
+from .common import HARDWARE, initial_estimate, sarathi_auto_budget
+
+HW = "llama33-70b@4xh20"
+DP = 6
+CACHE_PAGES = 512
+RPS = 2.5
+TTFT_SLO = 20.0           # long-context chat: queueing tolerated ...
+TPOT_SLO = 0.025          # ... but streaming must stay smooth
+MONO_LBS = ("count", "pab", "cache")
+# NVLink-class intra-node wire; at ~170 MB per 3k-token 70B migration the
+# handoff gap must stay well under TPOT_SLO or tpot_max busts at token 1
+NVLINK = LinkModel(latency=100e-6, bandwidth=400e9)
+# 3k-token prompts / 900-token replies: the regime the docstring argues
+LONG = dataclasses.replace(TRACE_PROFILES["qwentrace"], name="longchat",
+                           prompt_avg=3000, prompt_p90=6000,
+                           output_avg=900, output_p90=1500)
+
+
+def _disagg_cfg(n_prefill: int, mode: str) -> DisaggConfig:
+    return DisaggConfig(n_prefill=n_prefill, mode=mode, link=NVLINK,
+                        shed_slack=0.05, max_shed_per_tick=4,
+                        prefill_chunk=512)
+
+
+def _mixed_trace(rps: float, duration: float, seed: int) -> list:
+    """Bursty Gamma arrivals + a multi-turn conversation stream: the §15
+    target mix (prefill bursts AND live decodes with shared prefixes)."""
+    bursty = make_gamma_trace(LONG, rps=0.6 * rps, duration=duration,
+                              seed=seed)
+    turns = make_multiturn_trace(LONG, rps=0.4 * rps, duration=duration,
+                                 seed=seed + 1, max_turns=3)
+    return sorted(bursty + turns, key=lambda t: t.arrival)
+
+
+def _run(trace, hw, *, lb: str, scheduler: str = "fairbatching",
+         sched_kwargs: dict | None = None,
+         disagg: DisaggConfig | None = None, seed: int = 7) -> dict:
+    res = replay(trace, scheduler=scheduler, n_ranks=DP, lb=lb,
+                 admission=True, true_model=hw.model(),
+                 est_model=initial_estimate(hw), seed=seed,
+                 ttft_slo=TTFT_SLO, tpot_slo=TPOT_SLO,
+                 sched_kwargs=sched_kwargs or {},
+                 prefix_cache_pages=CACHE_PAGES, disagg=disagg)
+    s = res.summary
+    served = [m for m in res.metrics if not m.rejected]
+    tpot_att = (sum(m.tpot_ok for m in served) / len(served)) if served \
+        else 0.0
+    row = {"bench": "disagg", "dp": DP,
+           "ttft_p99_ms": round(s["ttft_p99"] * 1e3, 2),
+           "tpot_p99_ms": round(s["tpot_p99"] * 1e3, 2),
+           "tpot_slo_attainment": round(tpot_att, 4),
+           "slo_attainment": round(s["slo_attainment"], 4),
+           "effective_rps": round(s["effective_rps"], 2),
+           "rejected": s["rejected"]}
+    mig = s.get("migrations")
+    if mig:
+        row.update(migrations=mig["completed"], kv_migrations=mig["kv"],
+                   recompute_migrations=mig["recompute"],
+                   sheds=mig["shed"], spills=mig["spill"],
+                   wire_bytes=mig["bytes"], ref_tokens=mig["ref_tokens"])
+    return row
+
+
+def _breakeven_rows(hw) -> list[dict]:
+    """Transfer-vs-recompute crossover vs wire bandwidth (closed form).
+    A 20 ms-setup wire (RDMA over a loaded fabric, not the bench's
+    NVLink) makes the whole curve visible: below ~0.3 GB/s the per-token
+    wire cost exceeds the recompute slope and transfer never wins; above
+    it the breakeven length decays toward the latency-vs-launch-cost
+    floor, so "auto" only differs from "kv" on short-prefix migrations
+    over genuinely slow interconnects."""
+    bpt = DisaggConfig().geometry.bytes_per_token()
+    rows = []
+    for gbps in (0.25, 0.5, 1, 2, 10, 50):
+        link = LinkModel(latency=20e-3, bandwidth=gbps * 1e9)
+        n = breakeven_tokens(link, hw.model(), bpt)
+        rows.append({"bench": "disagg", "mode": "breakeven",
+                     "bandwidth_gbps": gbps,
+                     "breakeven_tokens": (round(n) if n != float("inf")
+                                          else "inf")})
+    return rows
+
+
+def run(quick: bool = True, smoke: bool = False) -> list[dict]:
+    hw = HARDWARE[HW]
+    duration = 40.0 if smoke or quick else 90.0
+    trace = _mixed_trace(RPS, duration, seed=7)
+    rows = []
+    for lb in MONO_LBS:
+        r = _run(trace, hw, lb=lb)
+        r["system"] = f"mono-fb-{lb}"
+        rows.append(r)
+    r = _run(trace, hw, lb="cache", scheduler="sarathi",
+             sched_kwargs={"token_budget": sarathi_auto_budget(hw,
+                                                               TPOT_SLO)})
+    r["system"] = "mono-sarathi-cache"
+    rows.append(r)
+    grid = ((4, "kv"), (4, "auto")) if smoke else \
+        ((3, "kv"), (4, "kv"), (4, "auto"), (4, "recompute"))
+    for n_prefill, mode in grid:
+        r = _run(trace, hw, lb="disagg",
+                 disagg=_disagg_cfg(n_prefill, mode))
+        r["system"] = f"disagg-p{n_prefill}-{mode}"
+        rows.append(r)
+    rows.extend(_breakeven_rows(hw))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI run (reduced grid, asserts the headline)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    rows = run(quick=not args.full, smoke=args.smoke)
+    for r in rows:
+        print(json.dumps(r))
+    mono = [r for r in rows if str(r.get("system", "")).startswith("mono-")]
+    dis = [r for r in rows if str(r.get("system", "")).startswith("disagg-")]
+    best_mono = min(mono, key=lambda r: r["ttft_p99_ms"])
+    best_dis = min(dis, key=lambda r: r["ttft_p99_ms"])
+    # artifact before the gate, so it survives a failing bound
+    from .run import write_bench_summary
+    headline = (f"p99 TTFT {best_dis['system']}="
+                f"{best_dis['ttft_p99_ms']}ms vs {best_mono['system']}="
+                f"{best_mono['ttft_p99_ms']}ms | tpot_att "
+                f"{best_dis['tpot_slo_attainment']} vs "
+                f"{best_mono['tpot_slo_attainment']}")
+    path = write_bench_summary("disagg", rows, headline)
+    print(f"wrote {path}")
+    if args.smoke:
+        # §15 acceptance: equal hardware, disagg+migration beats the best
+        # monolithic LB on p99 TTFT without giving up TPOT attainment
+        assert best_dis["ttft_p99_ms"] < best_mono["ttft_p99_ms"], \
+            (f"disagg p99 TTFT {best_dis['ttft_p99_ms']}ms did not beat "
+             f"monolithic {best_mono['ttft_p99_ms']}ms")
+        assert best_dis["tpot_slo_attainment"] >= \
+            best_mono["tpot_slo_attainment"] - 0.02, \
+            (f"disagg gave up TPOT attainment: "
+             f"{best_dis['tpot_slo_attainment']} vs "
+             f"{best_mono['tpot_slo_attainment']}")
+        assert any(r["migrations"] > 0 for r in dis if "migrations" in r), \
+            "no migrations completed — the disagg path did not engage"
+
+
+if __name__ == "__main__":
+    main()

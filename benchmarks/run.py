@@ -116,6 +116,18 @@ def _headline(name: str, rows: list[dict]) -> str:
                 return (f"dp8 pab-lb={pab['peak_effective_rps']} "
                         f"best_count_lb={base} "
                         f"(+{100*(pab['peak_effective_rps']/base-1):.1f}%)")
+        if name == "disagg":
+            sys_rows = [r for r in rows if "system" in r]
+            dis = min((r for r in sys_rows
+                       if r["system"].startswith("disagg-")),
+                      key=lambda r: r["ttft_p99_ms"])
+            mono = min((r for r in sys_rows
+                        if r["system"].startswith("mono-")),
+                       key=lambda r: r["ttft_p99_ms"])
+            return (f"p99_ttft {dis['system']}={dis['ttft_p99_ms']}ms vs "
+                    f"{mono['system']}={mono['ttft_p99_ms']}ms "
+                    f"tpot_att={dis['tpot_slo_attainment']}"
+                    f"/{mono['tpot_slo_attainment']}")
         if name == "unfairness":
             sa = next(r for r in rows if r["system"] == "sarathi")
             fb = next(r for r in rows if r["system"] == "fairbatching")
@@ -186,10 +198,10 @@ def main() -> None:
     quick = not args.full
 
     from . import (async_pipeline_bench, autotune_attention, breakdown_bench,
-                   cluster_bench, cost_model_bench, fairness_bench,
-                   goodput_bench, hybrid_step_bench, latency_bench,
-                   prefix_cache_bench, roofline_report, slo_grid_bench,
-                   unfairness_bench)
+                   cluster_bench, cost_model_bench, disagg_bench,
+                   fairness_bench, goodput_bench, hybrid_step_bench,
+                   latency_bench, prefix_cache_bench, roofline_report,
+                   slo_grid_bench, unfairness_bench)
     benches = {
         "cost_model": cost_model_bench.run,      # paper §3.2 accuracy claim
         "unfairness": unfairness_bench.run,      # Fig 1/2
@@ -203,6 +215,7 @@ def main() -> None:
         "hybrid_step": hybrid_step_bench.run,    # DESIGN.md §11 fused step
         "async_pipeline": async_pipeline_bench.run,  # DESIGN.md §12
         "fairness": fairness_bench.run,          # DESIGN.md §13 VTC stack
+        "disagg": disagg_bench.run,              # DESIGN.md §15 P/D split
         "roofline": roofline_report.run,         # deliverable (g)
     }
     all_rows = {}

@@ -123,6 +123,44 @@ def main() -> None:
     show_tenants("FCFS admission")
     show_tenants("VTC admission", vtc=True)
 
+    # disaggregated prefill/decode pools (DESIGN.md §15): stage-1 routes
+    # prompts into the prefill pool, finished prefills migrate their KV
+    # pages to the decode pool over a modeled NVLink; the same summary
+    # carries the LB-staleness and pool-occupancy diagnostics plus the
+    # migration counters. On THIS short-prompt mix the monolithic row
+    # wins — disaggregation pays on long-context / tight-TPOT regimes
+    # (benchmarks/disagg_bench.py), not everywhere.
+    print("-- disaggregated P/D pools + KV-page migration --")
+    from repro.core.cost_model import LinkModel
+    from repro.disagg import DisaggConfig
+
+    def show_disagg(name: str, disagg=None, lb: str = "pab"):
+        res = replay(trace, scheduler="fairbatching", n_ranks=args.dp,
+                     true_model=hw.model(), est_model=initial_estimate(hw),
+                     seed=args.seed, lb=lb, admission=True,
+                     prefix_cache_pages=512, disagg=disagg)
+        s = res.summary
+        line = (f"{name:32s} slo={s['slo_attainment']:.3f} "
+                f"ttft_p99={s['ttft_p99']*1e3:.0f}ms "
+                f"staleness={s.get('lb_staleness_mean', 0.0)*1e3:.0f}ms"
+                f"/{s.get('lb_staleness_max', 0.0)*1e3:.0f}ms")
+        if "prefill_pool_occupancy" in s:
+            line += (f" occ(p/d)={s['prefill_pool_occupancy']:.1f}"
+                     f"/{s['decode_pool_occupancy']:.1f}")
+        mig = s.get("migrations")
+        if mig:
+            line += (f" mig={mig['completed']} "
+                     f"(kv={mig['kv']} rec={mig['recompute']} "
+                     f"shed={mig['shed']}) "
+                     f"wire={mig['bytes']/1e9:.1f}GB")
+        print(line)
+
+    show_disagg("monolithic (PAB-LB)")
+    show_disagg("disagg p1/d3 (auto)", lb="disagg",
+                disagg=DisaggConfig(
+                    n_prefill=1, mode="auto",
+                    link=LinkModel(latency=100e-6, bandwidth=400e9)))
+
     # bit-reproducibility: the whole event-driven run is a function of the seed
     again = replay(trace, scheduler="fairbatching", n_ranks=args.dp,
                    lb="pab", admission=True, true_model=hw.model(),

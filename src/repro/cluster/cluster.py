@@ -30,6 +30,8 @@ import math
 from typing import Optional
 
 from ..cache import PrefixCache
+from ..core import slo
+from ..core.batch_formation import FormationConfig
 from ..core.cost_model import LinearCostModel
 from ..core.pab import PABAdmissionController
 from ..core.schedulers import make_scheduler
@@ -70,6 +72,11 @@ class ClusterConfig:
     commit_horizon: int = 1
     predicted_prefill_tokens: int = 0
     seed: int = 0
+    # disaggregated prefill/decode serving (DESIGN.md §15): a
+    # ``repro.disagg.DisaggConfig`` splits the ranks into a prefill pool
+    # and a decode pool with live KV-page migration between them; None
+    # keeps every rank monolithic (bit-identical to before)
+    disagg: Optional[object] = None
 
 
 class Cluster:
@@ -86,6 +93,23 @@ class Cluster:
         # engine-incarnation counter: LB report tick chains are tagged with
         # it so a tick scheduled for a dead incarnation dies on pop
         self.epoch: dict[int, int] = {}
+        # observability accumulators (DESIGN.md §15): routing-time LB
+        # snapshot staleness and per-rank occupancy samples on report ticks
+        self._staleness_sum = 0.0
+        self._staleness_max = 0.0
+        self._staleness_n = 0
+        self._occ: dict[int, tuple[float, int]] = {}
+        if cfg.disagg is not None:
+            if cfg.pipeline_depth > 1:
+                # with queued speculative dispatches a just-completed
+                # prefill is already referenced by the next formed step, so
+                # the handoff export could never find a safe boundary
+                raise ValueError("disaggregation requires pipeline_depth=1 "
+                                 "(handoff exports at step boundaries)")
+            from ..disagg.pools import DisaggController
+            self.disagg = DisaggController(self, cfg.disagg)
+        else:
+            self.disagg = None
         for r in range(cfg.n_ranks):
             self._make_engine(r)
 
@@ -97,11 +121,22 @@ class Cluster:
         true = LinearCostModel(a=cfg.true_model.a,
                                b=cfg.true_model.b * slow,
                                c=cfg.true_model.c * slow)
+        skw = dict(cfg.sched_kwargs)
+        if (cfg.disagg is not None and rank < cfg.disagg.n_prefill
+                and getattr(cfg.disagg, "prefill_chunk", 0) > 0
+                and "formation" not in skw
+                and cfg.scheduler in ("fairbatching", "fb-token-budget",
+                                      "fb-fix-batch")):
+            # prefill-pool rank: cap the decode-free step at a chunk size
+            # that amortizes the launch cost without head-of-line blocking
+            # the prompt queue behind a multi-second one-shot step
+            skw["formation"] = FormationConfig(
+                max_token_budget=cfg.disagg.prefill_chunk)
         sched = make_scheduler(cfg.scheduler,
                                LinearCostModel(cfg.est_model.a,
                                                cfg.est_model.b,
                                                cfg.est_model.c),
-                               **cfg.sched_kwargs)
+                               **skw)
         self.epoch[rank] = self.epoch.get(rank, 0) + 1
         adm = (PABAdmissionController(cfg.ttft_slo, cfg.tpot_slo)
                if cfg.admission else None)
@@ -136,6 +171,14 @@ class Cluster:
         running = len(eng.active) - waiting
         metrics = {"pab": eng.pab(), "waiting": waiting,
                    "running": running + len(eng.pending)}
+        # min TPOT slack over active decodes — FairBatching's per-step load
+        # estimate (capacity.init_time_budget's bound), surfaced so the
+        # disagg router can spot a decode rank losing its envelope race
+        # (DESIGN.md §15 shed trigger); inf when the rank holds no decodes
+        dec = [slo.slack(eng.requests[i].to_sched_task(), eng.now)
+               for i in eng.active
+               if eng.requests[i].state is RequestState.DECODE]
+        metrics["decode_slack"] = min(dec) if dec else math.inf
         # control-plane breakdown rides the report tick (DESIGN.md §12):
         # dispatch count + host-overhead seconds, and the mean scheduling
         # delay over finished requests — a router can spot a rank whose
@@ -160,6 +203,10 @@ class Cluster:
         self.lb.report(rank, metrics)
         if hasattr(self.lb, "note_report"):
             self.lb.note_report(rank, self.now)
+        # per-rank occupancy sample (active + queued) for the pool-level
+        # summary rollup (DESIGN.md §15)
+        s, n = self._occ.get(rank, (0.0, 0))
+        self._occ[rank] = (s + len(eng.active) + len(eng.pending), n + 1)
 
     def _route(self, tr: TraceRequest, req_id: int,
                arrival: float) -> Optional[int]:
@@ -169,6 +216,15 @@ class Cluster:
         tpot = tr.tpot_slo if tr.tpot_slo is not None else self.cfg.tpot_slo
         rank = self.lb.route(tr.prompt_len, tokens=tr.tokens,
                              tenant=tr.tenant)
+        if rank is not None and hasattr(self.lb, "last_report"):
+            # age of the snapshot this routing decision actually used —
+            # the staleness the eventual-consistency regime (§3.4) costs
+            t0 = self.lb.last_report.get(rank)
+            if t0 is not None:
+                age = max(0.0, arrival - t0)
+                self._staleness_sum += age
+                self._staleness_max = max(self._staleness_max, age)
+                self._staleness_n += 1
         req = Request(req_id, arrival, tr.prompt_len, tr.output_len,
                       ttft, tpot,
                       tokens=list(tr.tokens) if tr.tokens else None,
@@ -239,8 +295,44 @@ class Cluster:
                 self.lb.prefixes.append(set())
             if hasattr(self.lb, "tenant_debt"):
                 self.lb.tenant_debt.append({})
+            if hasattr(self.lb, "decode_load"):
+                self.lb.decode_load.append(0.0)
         else:
+            # a REJOINING rank is a fresh incarnation: its caches and
+            # counters died with the old engine, so every stale LB view
+            # must reset to the new-rank defaults. A cold replica still
+            # advertising its predecessor's prefix summary would attract
+            # affinity routing it cannot serve until its first report tick
+            # (the stale-summary regression in tests/test_cluster.py).
             self.lb.set_alive(rank, True)
+            if hasattr(self.lb, "pab"):
+                self.lb.pab[rank] = math.inf
+            if hasattr(self.lb, "counts"):
+                self.lb.counts[rank] = 0.0
+            if hasattr(self.lb, "prefixes"):
+                self.lb.prefixes[rank] = set()
+            if hasattr(self.lb, "tenant_debt"):
+                self.lb.tenant_debt[rank] = {}
+            if hasattr(self.lb, "decode_load"):
+                self.lb.decode_load[rank] = 0.0
+            if hasattr(self.lb, "last_report"):
+                self.lb.last_report.pop(rank, None)
+
+    # ------------------------------------------------------------------
+    # disaggregation hooks (DESIGN.md §15): the replay loop calls these at
+    # step completions / report ticks and on KV_XFER_DONE events
+    # ------------------------------------------------------------------
+
+    def poll_migrations(self, rank: int, now: float,
+                        tick: bool = False) -> list:
+        """Migration tickets detached at this instant ([] when monolithic)."""
+        if self.disagg is None:
+            return []
+        return self.disagg.poll(rank, now, tick=tick)
+
+    def finish_migration(self, ticket, now: float) -> Optional[int]:
+        """Land an arrived migration; returns the rank needing a kick."""
+        return self.disagg.complete(ticket, now)
 
     # ------------------------------------------------------------------
 
@@ -267,4 +359,21 @@ class Cluster:
                                                  for s in stats)
             out["engine_cache_hit_rate"] = \
                 out["engine_cache_hit_tokens"] / max(looked, 1)
+        # LB snapshot staleness at routing time (DESIGN.md §15): how old
+        # the chosen rank's report was when each request was routed
+        if self._staleness_n:
+            out["lb_staleness_mean"] = self._staleness_sum / self._staleness_n
+            out["lb_staleness_max"] = self._staleness_max
+        if self._occ:
+            def occ_mean(ranks) -> float:
+                vals = [s / n for r, (s, n) in self._occ.items()
+                        if r in ranks and n]
+                return sum(vals) / len(vals) if vals else 0.0
+            out["occupancy_mean"] = occ_mean(set(self._occ))
+            if self.disagg is not None:
+                pf = set(self.disagg.prefill_ranks())
+                out["prefill_pool_occupancy"] = occ_mean(pf)
+                out["decode_pool_occupancy"] = occ_mean(set(self._occ) - pf)
+        if self.disagg is not None:
+            out["migrations"] = dict(self.disagg.counters)
         return out

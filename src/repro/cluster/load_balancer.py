@@ -190,7 +190,12 @@ class CacheAwareLB(_Base):
 
     def route(self, prompt_len: int, tokens=None,
               tenant: str = "default") -> Optional[int]:
-        ranks = self._ranks()
+        return self._route_among(self._ranks(), prompt_len, tokens, tenant)
+
+    def _route_among(self, ranks: list, prompt_len: int, tokens,
+                     tenant: str) -> Optional[int]:
+        """The affinity/PAB/debt scoring over an explicit candidate set —
+        ``DisaggRouter`` restricts it to the prefill pool (DESIGN.md §15)."""
         if not ranks:
             return None
         hashes = block_hashes(tokens, self.block_size) if tokens else []
@@ -224,15 +229,21 @@ def make_lb(name: str, n_ranks: int, **kw) -> LoadBalancer:
     """Factory used by ``repro.sim.replay`` and benchmark CLIs.
 
     Names: ``pab`` (paper C5), ``count`` (vLLM DPLB), ``roundrobin``,
-    ``cache`` (cache-affinity + PAB, DESIGN.md §10).
+    ``cache`` (cache-affinity + PAB, DESIGN.md §10), ``disagg`` (two-stage
+    prefill/decode router, DESIGN.md §15).
     The LB classes' ``.name`` attributes ("pab-lb", "vllm-lb", "round-robin",
-    "cache-lb") are also accepted.
+    "cache-lb", "disagg") are also accepted. Unknown names raise a
+    ``ValueError`` listing the valid ones.
     """
+    # late import: repro.disagg.router subclasses CacheAwareLB from this
+    # module, so a top-level import here would be circular
+    from ..disagg.router import DisaggRouter
     aliases = {
         "pab": PABLB, "pab-lb": PABLB,
         "count": RequestCountLB, "vllm-lb": RequestCountLB,
         "roundrobin": RoundRobinLB, "round-robin": RoundRobinLB,
         "cache": CacheAwareLB, "cache-lb": CacheAwareLB,
+        "disagg": DisaggRouter, "disagg-lb": DisaggRouter,
     }
     try:
         return aliases[name](n_ranks, **kw)

@@ -112,6 +112,25 @@ def kv_page_budget(hbm_bytes: int, page_size: int,
     return int(hbm_bytes // (page_size * bytes_per_token))
 
 
+@dataclasses.dataclass
+class LinkModel:
+    """Point-to-point interconnect cost for KV-page migration (DESIGN.md §15).
+
+    ``transfer_time`` is the classic latency + size/bandwidth model: one
+    fixed per-transfer launch cost (RDMA/NCCL setup, control messages) plus
+    the serialized byte stream at effective link bandwidth. Defaults are a
+    conservative intra-pod RDMA NIC (~25 GB/s effective, 100 us launch);
+    the disagg bench sweeps these to trace the transfer-vs-recompute
+    breakeven curve.
+    """
+
+    latency: float = 100e-6        # per-transfer launch cost (seconds)
+    bandwidth: float = 25e9        # effective bytes/second
+
+    def transfer_time(self, n_bytes: int) -> float:
+        return self.latency + max(0, n_bytes) / self.bandwidth
+
+
 def default_buckets(max_tokens: int = 8192) -> list[int]:
     """Power-of-two token buckets, 128-aligned — XLA compiled-shape set."""
     buckets = []

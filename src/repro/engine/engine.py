@@ -855,6 +855,70 @@ class Engine:
                            self.sched.model.c],
         })
 
+    def export_request(self, req_id: int) -> str:
+        """Detach ONE request for live migration (DESIGN.md §15).
+
+        Unlike ``snapshot()`` — which refuses (or drains) the whole
+        pipeline — this only requires that *this request* is not referenced
+        by an in-flight dispatch; the rest of the engine keeps running.
+        Callers needing the KV must capture it BEFORE this call: the
+        request's table is released here (shared prefix-cache pages survive
+        for their other holders via the allocator refcounts). The returned
+        blob feeds ``import_migrated`` on the destination.
+        """
+        req = self.requests[req_id]
+        for inf in self.inflight_q:
+            if any(it.req_id == req_id for it in inf.plan.items):
+                raise RuntimeError(
+                    f"request {req_id} is referenced by an in-flight "
+                    "dispatch; export at its next step boundary")
+        d = dataclasses.asdict(req)
+        d["state"] = req.state.value
+        if req_id in self.active:
+            self.active.remove(req_id)
+        self.deferred_since.pop(req_id, None)
+        del self.requests[req_id]
+        req.state = RequestState.MIGRATED
+        if self.prefix_cache is not None and req.tokens:
+            self.prefix_cache.end_request(req_id)
+        if hasattr(self.executor, "release"):
+            self.executor.release(req_id)
+        return json.dumps(d)
+
+    def import_migrated(self, blob: str,
+                        now: Optional[float] = None) -> Request:
+        """Adopt a migrated-in request (DESIGN.md §15).
+
+        Deliberately bypasses ``_admit_arrivals``: a mid-decode request
+        must not be re-split by ``prefix_cache.begin_request`` (which would
+        reset its prefill progress) nor re-charged by PAB admission — the
+        router already placed it. The caller installs the KV (page
+        transfer) or calls ``requeue_migrated`` (recompute fallback).
+        """
+        r = json.loads(blob)
+        st = RequestState(r.pop("state"))
+        req = Request(**r)
+        req.state = st
+        if now is not None:
+            self.now = max(self.now, now)
+        self.requests[req.req_id] = req
+        self.active.append(req.req_id)
+        return req
+
+    def requeue_migrated(self, req: Request) -> None:
+        """Recompute-on-arrival fallback (DESIGN.md §15): no KV came over
+        the wire, so the request re-prefills its full known prefix via the
+        ``preempt_requeue``/``cached_context`` machinery (DESIGN.md §13) —
+        the destination cache is re-matched so only the locally-uncached
+        tail is recomputed."""
+        req.preempt_requeue()
+        if self.prefix_cache is not None and req.tokens:
+            cached = self.prefix_cache.begin_request(req.req_id, req.tokens,
+                                                     self.now)
+            if cached:
+                req.cached_context = cached
+                req.prefilled = cached
+
     def restore(self, blob: str) -> None:
         d = json.loads(blob)
         self.now = d["now"]

@@ -13,6 +13,11 @@ order. Priority encodes the causal conventions of the replay loop:
     whole point);
   * a rank's step completion lands before arrivals at the same instant, so
     freed capacity and finished requests are visible to routing;
+  * KV migration launches/arrivals (DESIGN.md §15) land after step
+    completions — a transfer can only be cut at a step boundary, and its
+    freed source pages / installed destination pages must be visible to the
+    report ticks and arrivals that share the instant — but before those
+    report ticks and arrivals;
   * LB report ticks land after step completions (a report observes the state
     the engine just committed) but before arrivals (a coinciding arrival is
     routed on the freshest snapshot the LB could legally have);
@@ -33,9 +38,11 @@ class EventKind(enum.IntEnum):
     RANK_JOIN = 1
     STEP_FORM = 2     # pipelined control plane forms the next batch (§12)
     STEP_DONE = 3
-    LB_REPORT = 4
-    ARRIVAL = 5
-    RANK_WAKE = 6
+    KV_XFER = 4       # migration payload hits the wire (DESIGN.md §15)
+    KV_XFER_DONE = 5  # migration payload lands; install on the target
+    LB_REPORT = 6
+    ARRIVAL = 7
+    RANK_WAKE = 8
 
 
 @dataclasses.dataclass(frozen=True)

@@ -113,6 +113,18 @@ def drive(cluster, trace, *, report_interval: float = 0.05,
         for rank in list(cluster.engines):
             kick(rank, now)
 
+    def push_migrations(tickets) -> None:
+        """Schedule a detached migration's wire events (DESIGN.md §15).
+
+        The request left the source synchronously at detach time (before
+        the source could form another step with it); these events model
+        only the link: launch when the per-source link frees, install on
+        the destination at arrival.
+        """
+        for tk in tickets:
+            q.push(tk.t_launch, EventKind.KV_XFER, ticket=tk)
+            q.push(tk.t_arrive, EventKind.KV_XFER_DONE, ticket=tk)
+
     next_id = 0
     n_events = 0
     while q:
@@ -140,6 +152,10 @@ def drive(cluster, trace, *, report_interval: float = 0.05,
                 # once — the hook still fires once per scheduler step
                 for rec in eng.steps[n_steps:]:
                     step_hook(ev.rank, eng, rec)
+            # migrations detach HERE, before the kick can form a new step
+            # that would pin the candidate: prefill→decode handoffs on
+            # prefill ranks, report-triggered sheds on decode ranks (§15)
+            push_migrations(cluster.poll_migrations(ev.rank, eng.now))
             kick(ev.rank, eng.now)
 
         elif ev.kind is EventKind.STEP_FORM:
@@ -170,6 +186,14 @@ def drive(cluster, trace, *, report_interval: float = 0.05,
             q.push(ev.time + report_interval, EventKind.LB_REPORT,
                    rank=ev.rank, epoch=cluster.epoch[ev.rank])
             kick(ev.rank, ev.time)
+
+        elif ev.kind is EventKind.KV_XFER:
+            cluster.disagg.on_wire(ev.ticket, ev.time)
+
+        elif ev.kind is EventKind.KV_XFER_DONE:
+            rank = cluster.finish_migration(ev.ticket, ev.time)
+            if rank is not None:
+                kick(rank, ev.time)
 
         elif ev.kind is EventKind.RANK_WAKE:
             kick(ev.rank, ev.time)
@@ -204,6 +228,7 @@ def replay(trace, scheduler: str = "fairbatching", n_ranks: int = 1,
            prefix_block: int = 128, pipeline_depth: int = 1,
            host_overhead: float = 0.0, commit_horizon: int = 1,
            predicted_prefill_tokens: int = 0, seed: int = 0,
+           disagg=None,
            step_hook: Optional[Callable] = None) -> ReplayResult:
     """One-call event-driven cluster replay — the repo's canonical harness.
 
@@ -217,7 +242,10 @@ def replay(trace, scheduler: str = "fairbatching", n_ranks: int = 1,
     ``host_overhead``-second per-dispatch host cost; ``commit_horizon > 1``
     allows slack-bounded multi-step decode commitment (DESIGN.md §12) —
     with the defaults every engine is the classic synchronous one, bit for
-    bit. All stochasticity (executor jitter, GC pauses) derives from
+    bit. ``disagg`` (a ``repro.disagg.DisaggConfig``) splits the ranks into
+    prefill/decode pools with live KV-page migration between them
+    (DESIGN.md §15) — pair it with ``lb="disagg"`` for the two-stage
+    router. All stochasticity (executor jitter, GC pauses) derives from
     ``seed``: same arguments → identical summary metrics, bit for bit.
     """
     from ..cluster.cluster import Cluster, ClusterConfig
@@ -240,11 +268,20 @@ def replay(trace, scheduler: str = "fairbatching", n_ranks: int = 1,
                         host_overhead=host_overhead,
                         commit_horizon=commit_horizon,
                         predicted_prefill_tokens=predicted_prefill_tokens,
-                        seed=seed, **kw)
+                        seed=seed, disagg=disagg, **kw)
     # the cache-affinity LB must hash prompts at the engines' page size or
     # its prefix estimates never match the reported summaries
-    lb_kw = {"block_size": prefix_block} if lb in ("cache", "cache-lb") \
-        else {}
+    lb_kw = {}
+    if lb in ("cache", "cache-lb"):
+        lb_kw = {"block_size": prefix_block}
+    elif lb in ("disagg", "disagg-lb"):
+        lb_kw = {"block_size": prefix_block}
+        if disagg is not None:
+            lb_kw["n_prefill"] = disagg.n_prefill
+            if disagg.shed_pab > 0:
+                lb_kw["shed_pab"] = disagg.shed_pab
+            if disagg.shed_slack > 0:
+                lb_kw["shed_slack"] = disagg.shed_slack
     cluster = Cluster(cfg, lb if not isinstance(lb, str)
                       else make_lb(lb, n_ranks, **lb_kw))
     for t, rank in failures:

@@ -1,0 +1,483 @@
+"""Disaggregated prefill/decode serving — sim-level protocol (DESIGN.md §15).
+
+Real-model KV-page migration parity lives in ``test_disagg_migration.py``;
+this file covers the control plane: conservation and determinism of the
+event-driven migration protocol, transfer-vs-recompute modes, the
+two-stage router's placement and shedding decisions, the engine
+export/import handshake, and the cold-join summary regression.
+"""
+import math
+
+import pytest
+
+from repro.cluster import Cluster, ClusterConfig
+from repro.cluster.load_balancer import make_lb
+from repro.core import LinearCostModel
+from repro.core.cost_model import LinkModel, kv_bytes_per_token
+from repro.data.traces import make_scenario
+from repro.disagg import (DisaggConfig, DisaggController, DisaggRouter,
+                          KVGeometry, breakeven_tokens)
+from repro.engine import Engine, EngineConfig, Request, SimExecutor
+from repro.engine.request import RequestState
+from repro.sim.replay import replay
+
+MODEL = LinearCostModel(a=0.003, b=190e-6, c=20e-9)
+
+
+def _run(trace, n_ranks=4, n_prefill=2, mode="kv", **kw):
+    return replay(trace, n_ranks=n_ranks, lb="disagg",
+                  disagg=DisaggConfig(n_prefill=n_prefill, mode=mode),
+                  prefix_cache_pages=kw.pop("prefix_cache_pages", 256),
+                  prefix_block=128, **kw)
+
+
+# ---------------------------------------------------------------------------
+# protocol: conservation, determinism, modes
+# ---------------------------------------------------------------------------
+
+
+def test_handoff_conservation_and_summary_fields():
+    """Every request is accounted exactly once, every finished prefill
+    migrated, and the cluster summary surfaces the §15 diagnostics."""
+    trace = make_scenario("bursty-gamma", rps=20.0, duration=2.0, seed=3)
+    res = _run(trace)
+    assert len(res.metrics) == len(trace)
+    m = res.summary["migrations"]
+    assert m["launched"] == m["completed"] > 0
+    assert m["kv"] == m["completed"] and m["recompute"] == 0
+    assert m["rejected"] == 0 and m["bytes"] > 0
+    # decode work happened off the prefill pool: every finished request's
+    # final rank sits in the decode pool
+    ctrl = res.cluster.disagg
+    for rid, rank in res.cluster._rank_of.items():
+        assert not ctrl.is_prefill_rank(rank), \
+            f"request {rid} finished on prefill rank {rank}"
+    s = res.summary
+    for key in ("lb_staleness_mean", "lb_staleness_max", "occupancy_mean",
+                "prefill_pool_occupancy", "decode_pool_occupancy"):
+        assert key in s, f"summary missing {key}"
+    assert s["lb_staleness_max"] >= s["lb_staleness_mean"] >= 0.0
+
+
+def test_replay_bit_deterministic_with_migrations():
+    trace = make_scenario("multi-turn", rps=15.0, duration=2.0, seed=5)
+    a = _run(trace).summary
+    b = _run(trace).summary
+    assert a == b
+
+
+@pytest.mark.parametrize("mode", ["kv", "recompute", "auto"])
+def test_modes_all_complete(mode):
+    trace = make_scenario("bursty-gamma", rps=15.0, duration=1.5, seed=7)
+    res = _run(trace, mode=mode)
+    assert len(res.metrics) == len(trace)
+    m = res.summary["migrations"]
+    assert m["completed"] == m["launched"] > 0
+    if mode == "recompute":
+        assert m["recompute"] == m["completed"] and m["kv"] == 0
+        # recompute ships token ids only — orders of magnitude fewer bytes
+        kv_bytes = _run(trace, mode="kv").summary["migrations"]["bytes"]
+        assert m["bytes"] < kv_bytes / 100
+
+
+def test_recompute_migration_reprefills_on_destination():
+    """A recompute-mode migration must re-run prefill work on the decode
+    rank (visible as moved_tokens == 0 but completed > 0, with every
+    stream still finishing at full length)."""
+    trace = make_scenario("bursty-gamma", rps=10.0, duration=1.0, seed=11)
+    res = _run(trace, mode="recompute")
+    m = res.summary["migrations"]
+    assert m["moved_tokens"] == 0 and m["completed"] > 0
+    # every stream still completes (decode tokens emitted, none rejected)
+    assert all(not mt.rejected and mt.tpot_max is not None
+               for mt in res.metrics)
+
+
+def test_dead_destination_retargets_or_rejects():
+    """A decode rank dying with payloads in flight: the controller
+    retargets to a survivor (as recompute — the pages were cut for the
+    dead rank's cache) and still accounts every request."""
+    trace = make_scenario("multi-turn", rps=15.0, duration=1.5, seed=5)
+    res = _run(trace, n_ranks=4, n_prefill=2, failures=[(0.3, 3)])
+    assert len(res.metrics) == len(trace)
+    m = res.summary["migrations"]
+    assert m["completed"] + m["rejected"] == m["launched"]
+    # rank 3 is dead: every surviving request finished on rank 2
+    for rank in res.cluster._rank_of.values():
+        assert rank == 2
+
+
+def test_serial_link_orders_transfers_per_source():
+    """Back-to-back handoffs from one source rank serialize on its link:
+    launch times are non-decreasing and arrivals never overlap the next
+    launch."""
+    trace = make_scenario("bursty-gamma", rps=25.0, duration=1.0, seed=3)
+    tickets = []
+
+    orig = DisaggController._launch
+
+    def spy(self, eng, req, src, dst, now, reason):
+        t = orig(self, eng, req, src, dst, now, reason)
+        tickets.append(t)
+        return t
+
+    DisaggController._launch = spy
+    try:
+        _run(trace, n_ranks=3, n_prefill=1)
+    finally:
+        DisaggController._launch = orig
+    assert len(tickets) > 2
+    by_src = {}
+    for t in tickets:
+        by_src.setdefault(t.src, []).append(t)
+    for ts in by_src.values():
+        for a, b in zip(ts, ts[1:]):
+            assert b.t_launch >= a.t_arrive - 1e-12
+            assert b.t_arrive > b.t_launch
+
+
+# ---------------------------------------------------------------------------
+# configuration guards
+# ---------------------------------------------------------------------------
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="n_prefill"):
+        Cluster(ClusterConfig(n_ranks=2, disagg=DisaggConfig(n_prefill=2)),
+                make_lb("disagg", 2))
+    with pytest.raises(ValueError, match="mode"):
+        Cluster(ClusterConfig(n_ranks=4,
+                              disagg=DisaggConfig(mode="teleport")),
+                make_lb("disagg", 4))
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        replay(make_scenario("bursty-gamma", rps=5.0, duration=0.5, seed=0),
+               n_ranks=4, lb="disagg", disagg=DisaggConfig(n_prefill=1),
+               pipeline_depth=2)
+    with pytest.raises(ValueError, match="n_prefill"):
+        DisaggRouter(4, n_prefill=4)
+
+
+def test_make_lb_registers_disagg_and_lists_names():
+    lb = make_lb("disagg", 4, n_prefill=2)
+    assert isinstance(lb, DisaggRouter) and lb.n_prefill == 2
+    assert isinstance(make_lb("disagg-lb", 4), DisaggRouter)
+    with pytest.raises(ValueError) as ei:
+        make_lb("no-such-lb", 4)
+    assert "disagg" in str(ei.value) and "pab" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# DisaggRouter: two-stage placement + shedding
+# ---------------------------------------------------------------------------
+
+
+def test_stage1_routes_within_prefill_pool():
+    lb = DisaggRouter(4, n_prefill=2)
+    for r in range(4):
+        lb.report(r, {"pab": 1000.0})
+    for _ in range(8):
+        assert lb.route(64) in (0, 1)
+    # whole prefill pool dead → degrade to any alive rank, never reject
+    lb.set_alive(0, False)
+    lb.set_alive(1, False)
+    assert lb.route(64) in (2, 3)
+
+
+def test_stage2_picks_least_loaded_decode_rank():
+    lb = DisaggRouter(4, n_prefill=1)
+    lb.report(1, {"pab": 100.0, "waiting": 3, "running": 2})   # load 8
+    lb.report(2, {"pab": 100.0, "waiting": 0, "running": 1})   # load 1
+    lb.report(3, {"pab": 100.0, "waiting": 1, "running": 1})   # load 3
+    assert lb.route_decode() == 2
+    assert lb.route_decode(exclude=2) == 3
+    # local bumps shift the choice before the next tick
+    lb.note_migration(2)
+    lb.note_migration(2)
+    lb.note_migration(2)
+    assert lb.route_decode() == 3
+    # tenant debt breaks load ties
+    lb.decode_load = [0.0, 1.0, 1.0, 1.0]
+    lb.tenant_debt[1] = {"batch": 50.0}
+    assert lb.route_decode(tenant="batch") == 2
+
+
+def test_should_shed_hysteresis():
+    lb = DisaggRouter(4, n_prefill=1, shed_pab=100.0, shed_headroom=4.0)
+    lb.report(1, {"pab": 10.0})
+    lb.report(2, {"pab": 500.0})
+    lb.report(3, {"pab": 50.0})
+    assert lb.should_shed(1) == 2           # over floor, target has headroom
+    assert lb.should_shed(2) is None        # healthy rank never sheds
+    assert lb.should_shed(0) is None        # prefill ranks never shed
+    # target loses its headroom → hysteresis holds the request in place
+    lb.report(2, {"pab": 300.0})
+    assert lb.should_shed(1) is None
+    # an unreported (inf) rank is exempt from the headroom gate
+    lb.pab[2] = math.inf
+    assert lb.should_shed(1) == 2
+    # shedding disabled entirely at shed_pab=0
+    off = DisaggRouter(4, n_prefill=1)
+    off.report(1, {"pab": 0.0})
+    assert off.should_shed(1) is None
+
+
+def test_shed_detaches_max_slack_decode_to_budgeted_rank():
+    """Controller path end to end: a decode rank whose reported PAB trips
+    the shed floor detaches its max-slack decode at the next step
+    boundary, and the ticket lands it on the budgeted peer."""
+    lb = make_lb("disagg", 3, n_prefill=1, shed_pab=100.0,
+                 shed_headroom=1.0, block_size=128)
+    cl = Cluster(ClusterConfig(n_ranks=3,
+                               disagg=DisaggConfig(n_prefill=1,
+                                                   shed_pab=100.0)), lb)
+    eng = cl.engines[1]
+    # two decodes with equal progress; req 1 has 4x the TPOT slack
+    eng.submit(Request(0, 0.0, 32, 50, 0.5, 0.05))
+    eng.submit(Request(1, 0.0, 32, 50, 0.5, 0.20))
+    for _ in range(4):
+        eng.step()
+    assert all(eng.requests[i].state is RequestState.DECODE for i in (0, 1))
+    lb.report(1, {"pab": 10.0})
+    lb.report(2, {"pab": 500.0})
+    tickets = cl.poll_migrations(1, eng.now)
+    assert len(tickets) == 1, "max_shed_per_tick=1 must bound the batch"
+    tk = tickets[0]
+    assert tk.reason == "shed" and tk.req_id == 1 and tk.dst == 2
+    assert 1 not in eng.requests           # detached at launch
+    assert 0 in eng.requests               # tight-SLO decode stays put
+    rank = cl.finish_migration(tk, tk.t_arrive)
+    assert rank == 2 and 1 in cl.engines[2].requests
+    assert cl.engines[2].requests[1].state is RequestState.DECODE
+    m = cl.disagg.counters
+    assert m["shed"] == 1 and m["completed"] == 1
+    # healthy reports → no further shedding
+    lb.report(1, {"pab": 500.0})
+    assert cl.poll_migrations(1, eng.now) == []
+
+
+def test_should_shed_slack_trigger_and_spill():
+    """The decode-slack floor is an independent trigger, and a uniformly
+    saturated decode pool spills toward the prefill pool instead of
+    shuffling distress between siblings."""
+    lb = DisaggRouter(4, n_prefill=1, shed_slack=0.05, shed_headroom=4.0)
+    lb.report(1, {"pab": 1e4, "decode_slack": 0.01})
+    lb.report(2, {"pab": 1e4, "decode_slack": 0.5})
+    lb.report(3, {"pab": 1e4, "decode_slack": 0.02})
+    # PAB is healthy everywhere — only the slack floor fires
+    assert lb.should_shed(1) == 2
+    assert lb.should_shed(2) is None
+    # sibling above the floor but under headroom → hysteresis, no spill
+    lb.report(2, {"pab": 1e4, "decode_slack": 0.1})
+    assert lb.should_shed(1) is None
+    # whole decode pool under the floor → spill to the prefill rank
+    lb.report(2, {"pab": 1e4, "decode_slack": 0.03})
+    assert lb.should_shed(1) == 0
+    # an unreported sibling (inf slack) blocks the spill: it is a viable
+    # intra-pool target instead
+    lb.decode_slack[2] = math.inf
+    assert lb.should_shed(1) == 2
+
+
+def test_spill_pins_request_in_prefill_pool():
+    """Controller path: a spilled decode lands on the prefill rank, is
+    counted as a spill, and the handoff poll does not bounce it back."""
+    lb = make_lb("disagg", 3, n_prefill=1, shed_slack=0.05,
+                 shed_headroom=4.0, block_size=128)
+    cl = Cluster(ClusterConfig(n_ranks=3,
+                               disagg=DisaggConfig(n_prefill=1,
+                                                   shed_slack=0.05)), lb)
+    eng = cl.engines[1]
+    eng.submit(Request(0, 0.0, 32, 50, 0.5, 0.05))
+    for _ in range(4):
+        eng.step()
+    assert eng.requests[0].state is RequestState.DECODE
+    # both decode ranks under the slack floor → spill target is rank 0
+    lb.report(1, {"pab": 1e4, "decode_slack": 0.01})
+    lb.report(2, {"pab": 1e4, "decode_slack": 0.02})
+    tickets = cl.poll_migrations(1, eng.now)
+    assert len(tickets) == 1 and tickets[0].dst == 0
+    rank = cl.finish_migration(tickets[0], tickets[0].t_arrive)
+    assert rank == 0 and 0 in cl.engines[0].requests
+    m = cl.disagg.counters
+    assert m["shed"] == 1 and m["spill"] == 1
+    # the prefill rank's handoff poll must NOT ship the spilled decode out
+    assert cl.poll_migrations(0, cl.engines[0].now) == []
+
+
+def test_decode_slack_reported_on_ticks():
+    """Report ticks carry the min-decode-slack load estimate: finite on a
+    rank with live decodes, inf on a decode-free (pure prefill) rank."""
+    lb = make_lb("disagg", 2, n_prefill=1, block_size=128)
+    cl = Cluster(ClusterConfig(n_ranks=2,
+                               disagg=DisaggConfig(n_prefill=1)), lb)
+    eng = cl.engines[1]
+    eng.submit(Request(0, 0.0, 32, 50, 0.5, 0.05))
+    for _ in range(3):
+        eng.step()
+    assert eng.requests[0].state is RequestState.DECODE
+    cl._report(1)
+    cl._report(0)
+    assert lb.decode_slack[1] < math.inf
+    assert lb.decode_slack[0] == math.inf
+
+
+# ---------------------------------------------------------------------------
+# engine handshake: export / import / requeue
+# ---------------------------------------------------------------------------
+
+
+def _engine():
+    from repro.core import make_scheduler
+    return Engine(make_scheduler("fairbatching", MODEL, calibrate=False),
+                  SimExecutor(MODEL, seed=11),
+                  EngineConfig(ttft_slo=0.5, tpot_slo=0.05))
+
+
+def test_export_import_round_trip_preserves_decode_state():
+    src, dst = _engine(), _engine()
+    src.submit(Request(7, 0.0, 64, 12, 0.5, 0.05, tenant="t0"))
+    for _ in range(3):                       # prefill + a couple of decodes
+        src.step()
+    req = src.requests[7]
+    assert req.state is RequestState.DECODE
+    gen_before = list(req.generated_tokens)
+    blob = src.export_request(7)
+    assert 7 not in src.requests and 7 not in src.active
+    adopted = dst.import_migrated(blob, now=src.now)
+    assert adopted.state is RequestState.DECODE
+    assert adopted.generated_tokens == gen_before
+    assert adopted.tenant == "t0" and 7 in dst.active
+    assert dst.now >= src.now
+    dst.run(max_steps=200)
+    assert len(dst.done) == 1 and dst.requests[7].generated == 12
+
+
+def test_export_refuses_inflight_request():
+    eng = _engine()
+    eng.submit(Request(1, 0.0, 32, 4, 0.5, 0.05))
+    inf = eng.begin_step(0.0)
+    assert inf is not None
+    assert any(it.req_id == 1 for it in inf.plan.items)
+    with pytest.raises(RuntimeError, match="in-flight"):
+        eng.export_request(1)
+    eng.complete_step()
+    eng.export_request(1)                    # boundary export succeeds
+    assert 1 not in eng.requests
+
+
+def test_requeue_migrated_resets_prefill_progress():
+    src, dst = _engine(), _engine()
+    src.submit(Request(3, 0.0, 40, 8, 0.5, 0.05,
+                       tokens=list(range(40))))
+    for _ in range(3):
+        src.step()
+    assert src.requests[3].state is RequestState.DECODE
+    prompt = list(src.requests[3].tokens)
+    blob = src.export_request(3)
+    req = dst.import_migrated(blob)
+    dst.requeue_migrated(req)
+    assert req.state is RequestState.PREFILL
+    assert req.prefilled == 0                # no dst cache → full re-prefill
+    # the generated prefix folded into the known context (DESIGN.md §13)
+    assert req.tokens[:40] == prompt
+    assert req.prompt_len > 40
+    dst.run(max_steps=200)
+    assert len(dst.done) == 1
+
+
+# ---------------------------------------------------------------------------
+# cold-join summary regression (the satellite fix in Cluster._join_rank)
+# ---------------------------------------------------------------------------
+
+
+def test_rejoined_rank_summary_is_cold():
+    """A rank that dies and rejoins must come back with an EMPTY LB view —
+    prefix-hash summary, PAB, debt, decode load, report timestamp — so no
+    affinity routing targets it until its first real report tick. Routing
+    on the dead incarnation's summary would send 'cache hits' to an empty
+    cache."""
+    lb = make_lb("disagg", 3, n_prefill=1, block_size=4)
+    cl = Cluster(ClusterConfig(n_ranks=3, prefix_cache_pages=64,
+                               prefix_block=4,
+                               disagg=DisaggConfig(n_prefill=1)), lb)
+    lb.report(2, {"pab": 123.0, "cache_prefixes": [11, 22],
+                  "tenant_debt": {"a": 9.0}, "waiting": 2, "running": 2})
+    lb.note_report(2, 1.0)
+    assert lb.prefixes[2] and lb.pab[2] == 123.0
+    cl._fail_rank(2)
+    cl._join_rank(2)
+    assert lb.alive[2]
+    assert lb.prefixes[2] == set(), "stale prefix summary survived rejoin"
+    assert lb.pab[2] == math.inf
+    assert lb.tenant_debt[2] == {}
+    assert lb.decode_load[2] == 0.0
+    assert 2 not in lb.last_report
+    # with the only-cached rank cold, affinity routing must not pick it on
+    # phantom hits: rank 2 is decode-pool anyway, but even a cache-lb view
+    # of the same event resets (shared _join_rank path)
+    cache_lb = make_lb("cache", 2, block_size=4)
+    cl2 = Cluster(ClusterConfig(n_ranks=2, prefix_cache_pages=64,
+                                prefix_block=4), cache_lb)
+    toks = list(range(16))
+    cache_lb.report(1, {"pab": 1e9, "cache_prefixes":
+                        __import__("repro.cache.radix",
+                                   fromlist=["block_hashes"])
+                        .block_hashes(toks, 4)})
+    cache_lb.report(0, {"pab": 1e9})
+    assert cache_lb.route(16, tokens=toks) == 1      # affinity wins
+    cl2._fail_rank(1)
+    cl2._join_rank(1)
+    cache_lb.report(0, {"pab": 1e9})
+    assert cache_lb._est_hit(1, [11]) == 0
+
+
+# ---------------------------------------------------------------------------
+# breakeven analytics
+# ---------------------------------------------------------------------------
+
+
+def test_breakeven_tokens_closed_form():
+    model = LinearCostModel(a=0.003, b=190e-6, c=20e-9)
+    bpt = kv_bytes_per_token(40, 8, 128, "bf16")
+    # high-latency wire: the crossover is interior (latency > model.a)
+    fast = LinkModel(latency=0.01, bandwidth=25e9)
+    n_star = breakeven_tokens(fast, model, bpt)
+    assert 0 < n_star < math.inf
+    # at the crossover the two cost lines meet
+    xfer = fast.transfer_time(n_star * bpt)
+    rec = model.a + (model.b + model.c) * n_star
+    assert xfer == pytest.approx(rec, rel=1e-6)
+    # transfer strictly wins past the crossover, loses before it
+    n = n_star * 2
+    assert fast.transfer_time(n * bpt) < model.a + (model.b + model.c) * n
+    n = n_star / 2
+    assert fast.transfer_time(n * bpt) > model.a + (model.b + model.c) * n
+    # a wire slower per token than recompute never breaks even
+    slow = LinkModel(latency=0.0, bandwidth=bpt / (model.b + model.c) * 0.5)
+    assert breakeven_tokens(slow, model, bpt) == math.inf
+    # zero-latency fast wire wins at any length
+    free = LinkModel(latency=0.0, bandwidth=1e15)
+    assert breakeven_tokens(free, model, bpt) == 0.0
+
+
+def test_auto_mode_obeys_breakeven():
+    """With a wire slower per token than recompute, auto must choose
+    recompute for every migration; with a fast wire, kv."""
+    trace = make_scenario("bursty-gamma", rps=10.0, duration=1.0, seed=9)
+    geo = KVGeometry()
+    bpt = geo.bytes_per_token()
+    slow = LinkModel(latency=0.0,
+                     bandwidth=bpt / (190e-6 + 20e-9) * 0.5)
+    res = replay(trace, n_ranks=4, lb="disagg",
+                 disagg=DisaggConfig(n_prefill=2, mode="auto", link=slow,
+                                     geometry=geo),
+                 prefix_cache_pages=64, prefix_block=128)
+    m = res.summary["migrations"]
+    assert m["recompute"] == m["completed"] > 0 and m["kv"] == 0
+    fast = LinkModel(latency=1e-6, bandwidth=1e15)
+    res = replay(trace, n_ranks=4, lb="disagg",
+                 disagg=DisaggConfig(n_prefill=2, mode="auto", link=fast,
+                                     geometry=geo),
+                 prefix_cache_pages=64, prefix_block=128)
+    m = res.summary["migrations"]
+    assert m["kv"] == m["completed"] > 0 and m["recompute"] == 0

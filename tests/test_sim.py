@@ -72,7 +72,11 @@ def test_event_driven_matches_lockstep_single_rank():
     # (DESIGN.md §12) — dispatch counts must agree between the drivers too
     lockstep = summarize(done, duration=max(eng.now, 1e-9),
                          host=eng.host_stats())
-    assert res.summary == lockstep
+    # cluster-only diagnostics (LB snapshot staleness, occupancy samples —
+    # DESIGN.md §15) have no lock-step counterpart by construction
+    cluster_only = {"lb_staleness_mean", "lb_staleness_max", "occupancy_mean"}
+    assert {k: v for k, v in res.summary.items()
+            if k not in cluster_only} == lockstep
     sim_eng = res.cluster.engines[0]
     assert len(sim_eng.steps) == len(eng.steps)
     assert [(s.t_start, s.t_end, s.new_tokens) for s in sim_eng.steps] == \
