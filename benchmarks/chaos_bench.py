@@ -1,0 +1,153 @@
+"""Chaos campaign: goodput/latency degradation vs injected fault rate
+(DESIGN.md §16).
+
+One fixed workload (bursty qwentrace arrivals, DP=4 behind the PAB LB,
+per-rank radix caches, periodic engine checkpoints) swept across seeded
+:class:`~repro.chaos.FaultPlan` severities, from a fault-free baseline to
+a heavy campaign (crashes + rejoins, stragglers, transient page-pool
+pressure, flaky KV links, lossy/delayed LB reports). Each row reports the
+terminal-status split (completed / rejected / shed), retries, the fault
+ledger (detections, fenced, redispatched, warm joins) and goodput
+relative to the baseline.
+
+The contract asserted under ``--smoke`` (and checked row-by-row always):
+
+* **conservation** — completed + rejected + shed == offered, at every
+  severity: no fault schedule may lose or double-complete a request;
+* **determinism** — re-running the heaviest campaign with the same seeds
+  is byte-identical (replay-clock fault injection, no hidden RNG);
+* **bounded brownout** — degradation is graceful, not cliff-edge: the
+  light campaign keeps ≥70% of baseline goodput and the heavy one still
+  completes ≥40%, with light-campaign p99 TTFT within 10x baseline.
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.chaos_bench [--smoke]``.
+"""
+from __future__ import annotations
+
+from repro.chaos import FaultPlan
+from repro.sim import replay
+
+from .common import HARDWARE, initial_estimate
+
+HW = "llama31-8b@a800"
+DP = 4
+RPS = 18.0
+CACHE_PAGES = 128
+CKPT_INTERVAL = 0.5
+
+# severity grid: rates are events per second of trace across the fleet
+LEVELS = {
+    "baseline": None,
+    "light": dict(crash_rate=0.05, straggler_rate=0.05, pressure_rate=0.05,
+                  link_flap_rate=0.05, xfer_fail_rate=0.02,
+                  report_drop_rate=0.05, report_delay_rate=0.05),
+    "moderate": dict(crash_rate=0.15, straggler_rate=0.1, pressure_rate=0.1,
+                     link_flap_rate=0.1, xfer_fail_rate=0.05,
+                     report_drop_rate=0.1, report_delay_rate=0.1),
+    "heavy": dict(crash_rate=0.3, straggler_rate=0.2, pressure_rate=0.2,
+                  link_flap_rate=0.2, xfer_fail_rate=0.1,
+                  report_drop_rate=0.2, report_delay_rate=0.2),
+}
+
+
+def _plan(level: str, duration: float) -> FaultPlan | None:
+    rates = LEVELS[level]
+    if rates is None:
+        return None
+    # rank 0 is protected so the fleet never goes dark mid-campaign —
+    # total blackout is a valid chaos test (tests/test_chaos.py runs it)
+    # but makes goodput ratios meaningless as a trajectory metric
+    return FaultPlan.generate(seed=13, duration=duration, n_ranks=DP,
+                              protect=(0,), straggle_factor=4.0,
+                              pressure_frac=0.5, **rates)
+
+
+def _run(trace, hw, plan: FaultPlan | None, seed: int = 3) -> dict:
+    return replay(trace, scheduler="fairbatching", n_ranks=DP, lb="pab",
+                  admission=True, true_model=hw.model(),
+                  est_model=initial_estimate(hw), seed=seed,
+                  prefix_cache_pages=CACHE_PAGES, chaos=plan,
+                  checkpoint_interval=CKPT_INTERVAL).summary
+
+
+def run(quick: bool = True, smoke: bool = False) -> list[dict]:
+    from repro.data.traces import make_trace
+
+    hw = HARDWARE[HW]
+    duration = 12.0 if smoke else (20.0 if quick else 45.0)
+    trace = make_trace("qwentrace", rps=RPS, duration=duration, seed=5)
+    rows, base_completed, heavy_summary = [], None, None
+    for level in LEVELS:
+        plan = _plan(level, duration)
+        s = _run(trace, hw, plan)
+        if level == "heavy":
+            heavy_summary = s
+        assert (s["completed"] + s["rejected"] + s["shed"]
+                == s["n_requests"]), f"conservation violated at {level!r}"
+        if base_completed is None:
+            base_completed = max(s["completed"], 1)
+        f = s.get("faults", {})
+        row = {"bench": "chaos", "mode": level, "dp": DP,
+               "n_requests": s["n_requests"], "completed": s["completed"],
+               "rejected": s["rejected"], "shed": s["shed"],
+               "retried": s["retried"],
+               "goodput_ratio": round(s["completed"] / base_completed, 4),
+               "effective_rps": round(s["effective_rps"], 2),
+               "ttft_p99_ms": round(s["ttft_p99"] * 1e3, 2),
+               "slo_attainment": round(s["slo_attainment"], 4),
+               "crashes": f.get("crashes", 0),
+               "detections": f.get("detections", 0),
+               "fenced": f.get("fenced", 0),
+               "redispatched": f.get("redispatched", 0),
+               "warm_joins": f.get("warm_joins", 0),
+               "demotions": f.get("demotions", 0)}
+        if plan is not None:
+            row["injected_crashes"] = len(plan.crashes)
+        rows.append(row)
+    # same plan + same seed must reproduce the heavy campaign byte-for-byte
+    again = _run(trace, hw, _plan("heavy", duration))
+    rows.append({"bench": "chaos", "mode": "determinism",
+                 "identical": bool(again == heavy_summary)})
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI run (short trace, asserts the contract)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    rows = run(quick=not args.full, smoke=args.smoke)
+    for r in rows:
+        print(json.dumps(r))
+    by = {r["mode"]: r for r in rows}
+    # artifact before the gates, so it survives a failing bound
+    from .run import write_bench_summary
+    headline = (f"goodput_ratio light={by['light']['goodput_ratio']} "
+                f"heavy={by['heavy']['goodput_ratio']} | heavy "
+                f"crashes={by['heavy']['crashes']}"
+                f"/detections={by['heavy']['detections']}"
+                f"/warm_joins={by['heavy']['warm_joins']} "
+                f"retried={by['heavy']['retried']} "
+                f"deterministic={by['determinism']['identical']}")
+    path = write_bench_summary("chaos", rows, headline)
+    print(f"wrote {path}")
+    if args.smoke:
+        assert by["determinism"]["identical"], \
+            "same-seed chaos campaign was not byte-identical"
+        assert by["heavy"]["crashes"] > 0 and by["heavy"]["detections"] > 0, \
+            "heavy campaign injected no detectable faults — sweep is vacuous"
+        assert by["light"]["goodput_ratio"] >= 0.70, \
+            f"light faults cost >30% goodput: {by['light']['goodput_ratio']}"
+        assert by["heavy"]["goodput_ratio"] >= 0.40, \
+            f"heavy faults collapsed goodput: {by['heavy']['goodput_ratio']}"
+        assert by["light"]["ttft_p99_ms"] <= 10 * by["baseline"]["ttft_p99_ms"], \
+            (f"light-campaign p99 TTFT {by['light']['ttft_p99_ms']}ms vs "
+             f"baseline {by['baseline']['ttft_p99_ms']}ms")
+
+
+if __name__ == "__main__":
+    main()

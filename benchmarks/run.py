@@ -31,6 +31,8 @@ _TRAJECTORY_KEYS = (
     "interactive_p99_vs_isolated", "preemptions",
     "fused_dispatches_per_step", "tuning_gain", "tuned_cost_us",
     "default_cost_us",
+    "goodput_ratio", "completed", "shed", "retried", "crashes",
+    "detections", "warm_joins",
 )
 
 
@@ -128,6 +130,14 @@ def _headline(name: str, rows: list[dict]) -> str:
                     f"{mono['system']}={mono['ttft_p99_ms']}ms "
                     f"tpot_att={dis['tpot_slo_attainment']}"
                     f"/{mono['tpot_slo_attainment']}")
+        if name == "chaos":
+            by = {r["mode"]: r for r in rows if "mode" in r}
+            return (f"goodput_ratio light={by['light']['goodput_ratio']} "
+                    f"heavy={by['heavy']['goodput_ratio']} | heavy "
+                    f"crashes={by['heavy']['crashes']}"
+                    f"/warm_joins={by['heavy']['warm_joins']} "
+                    f"retried={by['heavy']['retried']} "
+                    f"deterministic={by['determinism']['identical']}")
         if name == "unfairness":
             sa = next(r for r in rows if r["system"] == "sarathi")
             fb = next(r for r in rows if r["system"] == "fairbatching")
@@ -198,7 +208,7 @@ def main() -> None:
     quick = not args.full
 
     from . import (async_pipeline_bench, autotune_attention, breakdown_bench,
-                   cluster_bench, cost_model_bench, disagg_bench,
+                   chaos_bench, cluster_bench, cost_model_bench, disagg_bench,
                    fairness_bench, goodput_bench, hybrid_step_bench,
                    latency_bench, prefix_cache_bench, roofline_report,
                    slo_grid_bench, unfairness_bench)
@@ -216,6 +226,7 @@ def main() -> None:
         "async_pipeline": async_pipeline_bench.run,  # DESIGN.md §12
         "fairness": fairness_bench.run,          # DESIGN.md §13 VTC stack
         "disagg": disagg_bench.run,              # DESIGN.md §15 P/D split
+        "chaos": chaos_bench.run,                # DESIGN.md §16 fault plane
         "roofline": roofline_report.run,         # deliverable (g)
     }
     all_rows = {}

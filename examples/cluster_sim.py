@@ -161,6 +161,50 @@ def main() -> None:
                     n_prefill=1, mode="auto",
                     link=LinkModel(latency=100e-6, bandwidth=400e9)))
 
+    # chaos-hardened serving (DESIGN.md §16): a seeded FaultPlan injects
+    # crashes (detected by the HealthMonitor from missed report ticks —
+    # no omniscient failure oracle), straggler windows (gray-failure
+    # demotion), transient page-pool pressure, and lossy LB reports.
+    # Every request still terminates exactly once; the terminal-status
+    # split and the fault ledger ride the normal summary.
+    print("-- chaos: seeded faults, detection, brownout --")
+    from repro.chaos import FaultPlan
+
+    def show_chaos(name: str, **kw):
+        res = replay(trace, scheduler="fairbatching", n_ranks=args.dp,
+                     true_model=hw.model(), est_model=initial_estimate(hw),
+                     seed=args.seed, lb="pab", admission=True,
+                     prefix_cache_pages=512, **kw)
+        s = res.summary
+        assert (s["completed"] + s["rejected"] + s["shed"]
+                == s["n_requests"]), "conservation violated"
+        f = s.get("faults", {})
+        print(f"{name:32s} done={s['completed']} rej={s['rejected']} "
+              f"shed={s['shed']} retried={s['retried']} "
+              f"crashes={f.get('crashes', 0)} "
+              f"detect={f.get('detections', 0)} "
+              f"warm_joins={f.get('warm_joins', 0)} "
+              f"demote={f.get('demotions', 0)} "
+              f"brownout={f.get('brownout_epochs', 0)}")
+        return res
+
+    plan = FaultPlan.generate(
+        seed=args.seed, duration=args.duration, n_ranks=args.dp,
+        crash_rate=2.0 / args.duration, straggler_rate=1.0 / args.duration,
+        straggle_factor=4.0, pressure_rate=1.0 / args.duration,
+        report_drop_rate=0.1)
+    show_chaos("fault-free control")
+    chaotic = show_chaos("chaos campaign + checkpoints", chaos=plan,
+                         checkpoint_interval=1.0)
+    # a high floor makes the crash-degraded fleet count as saturated;
+    # sheds stay 0 here because admission already bounds the queue —
+    # brownout only ever cuts work that is doomed to miss its TTFT
+    show_chaos("chaos + brownout floor", chaos=plan,
+               checkpoint_interval=1.0, brownout_pab=500.0)
+    c2 = show_chaos("chaos campaign (same seed)", chaos=plan,
+                    checkpoint_interval=1.0)
+    print(f"deterministic chaos replay: {c2.summary == chaotic.summary}")
+
     # bit-reproducibility: the whole event-driven run is a function of the seed
     again = replay(trace, scheduler="fairbatching", n_ranks=args.dp,
                    lb="pab", admission=True, true_model=hw.model(),

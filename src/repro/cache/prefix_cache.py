@@ -177,6 +177,61 @@ class PrefixCache:
         return freed
 
     # ------------------------------------------------------------------
+    # checkpoints (DESIGN.md §16): warm rejoin after a rank failure
+    # ------------------------------------------------------------------
+
+    def snapshot(self) -> list:
+        """Serializable cache content: one ``(blocks, hashes)`` pair per
+        root-to-leaf path, in deterministic (hash) order. Page ids are
+        deliberately NOT captured — they are meaningless across engine
+        incarnations; ``restore`` allocates fresh ones."""
+        if not self.enabled:
+            return []
+        out: list[tuple[list, list]] = []
+
+        def walk(node, blocks, hashes):
+            blocks = blocks + list(node.key)
+            hashes = hashes + list(node.hashes)
+            if node.is_leaf:
+                if blocks:
+                    out.append((blocks, hashes))
+                return
+            for child in node.children.values():
+                walk(child, blocks, hashes)
+
+        walk(self.tree.root, [], [])
+        out.sort(key=lambda p: p[1])
+        return out
+
+    def restore(self, paths: list, now: float) -> int:
+        """Warm-start an *empty* cache from ``snapshot()`` output.
+
+        Each path gets fresh pages from this incarnation's allocator via a
+        synthetic request id that is released immediately after the radix
+        adoption (so only tree references pin the pages — exactly the state
+        ``insert_request`` leaves behind). Stops early if the pool can't
+        hold more. Returns pages adopted."""
+        if not self.enabled or not self.owns_alloc:
+            return 0
+        n = 0
+        for i, (blocks, hashes) in enumerate(paths):
+            rid = -1000 - i
+            if self.alloc.extend(rid, len(blocks) * self.block_size) is None:
+                self.alloc.release(rid)
+                break
+            tbl = list(self.alloc.tables[rid])
+            adopted = self.tree.insert([tuple(b) for b in blocks], tbl,
+                                       list(hashes), now)
+            for j in adopted:
+                self.alloc.acquire_page(tbl[j])
+            n += len(adopted)
+            self.alloc.release(rid)
+            while self.tree.n_pages > self.capacity_pages:
+                if not self._evict_leaf():
+                    break
+        return n
+
+    # ------------------------------------------------------------------
     # observability
     # ------------------------------------------------------------------
 

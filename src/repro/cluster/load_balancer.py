@@ -48,19 +48,30 @@ class _Base:
     def __init__(self, n_ranks: int):
         self.n_ranks = n_ranks
         self.alive = [True] * n_ranks
+        # ranks the HealthMonitor (DESIGN.md §16) has demoted — silent past
+        # the suspect threshold or gray-failing (straggling). Still alive
+        # and still holding their work, but routing avoids them while any
+        # non-suspect rank is available.
+        self.suspect: set[int] = set()
         # wall-clock (sim time) of the last report per rank; None = never.
         # Routing never reads this — it quantifies snapshot staleness.
         self.last_report: dict[int, float] = {}
 
     def set_alive(self, rank: int, alive: bool) -> None:
         self.alive[rank] = alive
+        self.suspect.discard(rank)
 
     def note_report(self, rank: int, now: Optional[float]) -> None:
         if now is not None:
             self.last_report[rank] = now
 
     def _ranks(self):
-        return [r for r in range(self.n_ranks) if self.alive[r]]
+        up = [r for r in range(self.n_ranks) if self.alive[r]]
+        if self.suspect:
+            ok = [r for r in up if r not in self.suspect]
+            if ok:
+                return ok
+        return up
 
 
 class RoundRobinLB(_Base):

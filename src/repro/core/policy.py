@@ -150,6 +150,10 @@ class VTCAdmission:
         self.counters: dict[str, float] = {}
         self._tenant_of: dict[int, str] = {}   # req_id -> tenant (for refund)
         self._last_present: set = set()        # tenants active last step
+        # net counter charge per request (signed sum of every _charge),
+        # so a brownout shed can return *exactly* what the request cost —
+        # billing stays exact under shedding (DESIGN.md §16)
+        self._net: dict[int, float] = {}
 
     def _w(self, tenant: str) -> float:
         return max(self.weights.get(tenant, 1.0), 1e-9)
@@ -165,6 +169,7 @@ class VTCAdmission:
             live = {t.req_id for t in tasks}
             self._tenant_of = {r: t for r, t in self._tenant_of.items()
                                if r in live}
+            self._net = {r: v for r, v in self._net.items() if r in live}
         present = {t.tenant for t in tasks}
         if len(present) <= 1 and not self.counters:
             self._last_present = present
@@ -207,8 +212,9 @@ class VTCAdmission:
         tenant = self._tenant_of.get(req_id, "default")
         rate = (self.input_weight if kind is TaskKind.PREFILL
                 else self.output_weight)
-        self.counters[tenant] = self.counters.get(tenant, 0.0) \
-            + sign * rate * n_tokens / self._w(tenant)
+        delta = sign * rate * n_tokens / self._w(tenant)
+        self.counters[tenant] = self.counters.get(tenant, 0.0) + delta
+        self._net[req_id] = self._net.get(req_id, 0.0) + delta
 
     def on_schedule(self, plan: BatchPlan, tasks: Sequence[SchedTask],
                     now: float) -> None:
@@ -238,6 +244,19 @@ class VTCAdmission:
             if it.req_id in req_ids and it.kind is TaskKind.DECODE:
                 self._charge(it.req_id, steps, it.kind, 1.0)
 
+    def refund_request(self, req_id: int) -> None:
+        """Return a shed request's *entire* net charge (DESIGN.md §16).
+
+        The brownout stage terminates deadline-infeasible work without
+        service; whatever prefill chunks it was already billed for are
+        reversed in one shot so the tenant's counter reads as if the
+        request never ran — VTC billing stays exact modulo shed work.
+        """
+        delta = self._net.pop(req_id, 0.0)
+        if delta:
+            tenant = self._tenant_of.get(req_id, "default")
+            self.counters[tenant] = self.counters.get(tenant, 0.0) - delta
+
     def debt(self) -> dict:
         """Per-tenant fairness debt: counter excess over the floor.
 
@@ -256,6 +275,73 @@ class VTCAdmission:
             present = list(self.counters)
         floor = min(self.counters[t] for t in present)
         return {t: max(0.0, self.counters[t] - floor) for t in present}
+
+
+# ---------------------------------------------------------------------------
+# brownout / overload shedding (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+
+class BrownoutPolicy:
+    """Graceful-degradation overload shedding (DESIGN.md §16).
+
+    Engaged/disengaged by the cluster's fleet-saturation signal (every
+    routable rank's reported PAB under the floor; hysteresis on release).
+    While engaged, ``victims`` returns never-served prefill tasks that
+    can no longer make their TTFT deadline *even if served alone right
+    now* — work that will burn tokens only to miss its SLO and crowd out
+    requests that could still make theirs ("Optimal Scheduling Algorithms
+    for LLM Inference": under overload, serving doomed work is strictly
+    worse than shedding it). Requests that already emitted a token are
+    never shed — cutting a live stream is worse UX than a slow finish.
+
+    Victim selection is per-tenant fair: round-robin one victim per
+    tenant, tenants ordered by VTC debt (deepest overdraft first), capped
+    at ``max_shed_per_step``. The engine refunds each victim's admission
+    charges (``refund_request``) so billing stays exact.
+    """
+
+    def __init__(self, grace: float = 0.0, max_shed_per_step: int = 2):
+        self.grace = grace
+        self.max_shed_per_step = max_shed_per_step
+        self.engaged = False
+        self.shed_count = 0
+
+    def set_engaged(self, engaged: bool) -> None:
+        self.engaged = engaged
+
+    def victims(self, now: float, tasks: Sequence[SchedTask],
+                model: LinearCostModel, debt: dict) -> list[int]:
+        if not self.engaged:
+            return []
+        doomed = []
+        for t in tasks:
+            if not t.is_prefill or t.next_output_idx > 0:
+                continue
+            eta = now + model.step_time(t.new_tokens, t.cost_context())
+            if eta > t.arrival + t.ttft_slo + self.grace:
+                doomed.append(t)
+        if not doomed:
+            return []
+        by_tenant: dict[str, list[SchedTask]] = {}
+        for t in doomed:
+            by_tenant.setdefault(t.tenant, []).append(t)
+        for ts in by_tenant.values():
+            # most-overdue first within a tenant (deterministic tiebreak)
+            ts.sort(key=lambda t: (t.arrival + t.ttft_slo, t.req_id))
+        queues = [by_tenant[t] for t in
+                  sorted(by_tenant, key=lambda t: (-debt.get(t, 0.0), t))]
+        out: list[int] = []
+        while len(out) < self.max_shed_per_step:
+            progressed = False
+            for q in queues:
+                if q and len(out) < self.max_shed_per_step:
+                    out.append(q.pop(0).req_id)
+                    progressed = True
+            if not progressed:
+                break
+        self.shed_count += len(out)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -403,6 +489,9 @@ class SchedulerStack:
         self.admission = admission or FCFSAdmission()
         self.capacity_policy = capacity_policy or UncappedCapacity()
         self.formation_policy = formation or FairFormation()
+        # optional brownout stage (DESIGN.md §16); attached by
+        # make_scheduler(brownout=True) or assigned directly
+        self.brownout: Optional[BrownoutPolicy] = None
         self._rls: Optional[RecursiveLeastSquares] = None
         if calibrate:
             self._rls = RecursiveLeastSquares(theta0=(model.a, model.b,
@@ -465,3 +554,25 @@ class SchedulerStack:
         """Per-tenant fairness debt from the admission stage ({} for FCFS);
         rides the LB report ticks (DESIGN.md §13)."""
         return self.admission.debt()
+
+    # ------------------------------------------------ brownout (§16)
+
+    def set_brownout(self, engaged: bool) -> None:
+        """Fleet-saturation broadcast from the cluster health tick."""
+        if self.brownout is not None:
+            self.brownout.set_engaged(engaged)
+
+    def poll_shed(self, now: float, tasks: Sequence[SchedTask]) -> list[int]:
+        """Req-ids the brownout stage wants terminated this step ([] when
+        no brownout stage is attached or the fleet is not saturated)."""
+        if self.brownout is None or not self.brownout.engaged:
+            return []
+        return self.brownout.victims(now, tasks, self.model,
+                                     self.tenant_debt())
+
+    def refund_request(self, req_id: int) -> None:
+        """Return a shed request's entire net admission charge (exact
+        VTC billing under shedding — no-op for FCFS admission)."""
+        fn = getattr(self.admission, "refund_request", None)
+        if fn is not None:
+            fn(req_id)

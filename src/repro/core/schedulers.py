@@ -27,10 +27,10 @@ from typing import Optional
 
 from .batch_formation import FormationConfig
 from .cost_model import LinearCostModel
-from .policy import (AdaptiveTimeCapacity, AdmissionPolicy, FairFormation,
-                     FixedBatchCapacity, PrefillFirstFormation, Scheduler,
-                     SchedulerStack, StallFreeFormation, TokenBudgetCapacity,
-                     UncappedCapacity, VTCAdmission)
+from .policy import (AdaptiveTimeCapacity, AdmissionPolicy, BrownoutPolicy,
+                     FairFormation, FixedBatchCapacity, PrefillFirstFormation,
+                     Scheduler, SchedulerStack, StallFreeFormation,
+                     TokenBudgetCapacity, UncappedCapacity, VTCAdmission)
 
 
 class FairBatchingScheduler(SchedulerStack):
@@ -103,7 +103,8 @@ class VLLMVanillaScheduler(SchedulerStack):
 
 def make_scheduler(name: str, model: LinearCostModel, *,
                    vtc: bool = False, vtc_weights: Optional[dict] = None,
-                   vtc_burst_tokens: int = 1024, **kw) -> Scheduler:
+                   vtc_burst_tokens: int = 1024, brownout: bool = False,
+                   brownout_grace: float = 0.0, **kw) -> Scheduler:
     """Factory used by configs/CLI: name in
     {vllm-vanilla, sarathi, fairbatching, fb-token-budget, fb-fix-batch}.
 
@@ -113,18 +114,28 @@ def make_scheduler(name: str, model: LinearCostModel, *,
     virtual counter may run ahead of the floor before its prefills are held.
     Orthogonal to the capacity/formation stages — every named stack accepts
     it.
+
+    ``brownout=True`` attaches the overload-shedding stage (DESIGN.md §16):
+    while the cluster broadcasts fleet saturation, deadline-infeasible
+    prefills are terminated per-tenant-fairly instead of burning budget on
+    guaranteed SLO misses; ``brownout_grace`` extends the deadline test.
+    Also orthogonal — any stack, with or without VTC, can shed.
     """
     if vtc:
         kw["admission"] = VTCAdmission(weights=vtc_weights,
                                        burst_tokens=vtc_burst_tokens)
     if name == "vllm-vanilla":
-        return VLLMVanillaScheduler(model, **kw)
-    if name == "sarathi":
-        return SarathiScheduler(model, **kw)
-    if name == "fairbatching":
-        return FairBatchingScheduler(model, budget_mode="time", **kw)
-    if name == "fb-token-budget":
-        return FairBatchingScheduler(model, budget_mode="token", **kw)
-    if name == "fb-fix-batch":
-        return FairBatchingScheduler(model, budget_mode="fixed", **kw)
-    raise ValueError(f"unknown scheduler: {name!r}")
+        sched = VLLMVanillaScheduler(model, **kw)
+    elif name == "sarathi":
+        sched = SarathiScheduler(model, **kw)
+    elif name == "fairbatching":
+        sched = FairBatchingScheduler(model, budget_mode="time", **kw)
+    elif name == "fb-token-budget":
+        sched = FairBatchingScheduler(model, budget_mode="token", **kw)
+    elif name == "fb-fix-batch":
+        sched = FairBatchingScheduler(model, budget_mode="fixed", **kw)
+    else:
+        raise ValueError(f"unknown scheduler: {name!r}")
+    if brownout:
+        sched.brownout = BrownoutPolicy(grace=brownout_grace)
+    return sched

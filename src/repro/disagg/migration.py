@@ -72,6 +72,9 @@ class MigrationTicket:
     blob: str                  # Engine.export_request host state
     kv: Optional[KVPayload] = None
     tenant: str = "default"
+    # fault-plane retries so far (DESIGN.md §16): a disrupted transfer is
+    # relaunched with exponential backoff, mutating t_launch/t_arrive
+    attempt: int = 0
 
 
 def _data_plane(executor):

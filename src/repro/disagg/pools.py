@@ -96,10 +96,16 @@ class DisaggController:
         self.counters = {"launched": 0, "completed": 0, "kv": 0,
                          "recompute": 0, "shed": 0, "spill": 0,
                          "rejected": 0, "bytes": 0, "ref_tokens": 0,
-                         "moved_tokens": 0, "peak_in_flight": 0}
+                         "moved_tokens": 0, "peak_in_flight": 0,
+                         "xfer_failures": 0, "xfer_retries": 0,
+                         "xfer_gave_up": 0, "dead_source": 0}
         # req ids shed *into* the prefill pool (decode pool saturated);
         # _handoffs must not immediately ship them back out
         self.spilled: set[int] = set()
+        # disrupted transfers rescheduled with backoff (DESIGN.md §16);
+        # the replay loop drains this after every KV_XFER_DONE
+        self.retry_queue: list[MigrationTicket] = []
+        self.retry_hist: dict[str, int] = {}   # attempts → completions
 
     # ------------------------------------------------------------------
 
@@ -218,6 +224,10 @@ class DisaggController:
         if mode == "recompute":
             payload = None
         t_launch = max(now, self.link_free_at.get(src, 0.0))
+        chaos = getattr(self.cluster.cfg, "chaos", None)
+        if chaos is not None:
+            # a partitioned link delays the launch past its down-window
+            t_launch = chaos.link_clear_time(src, t_launch)
         t_arrive = t_launch + link.transfer_time(n_bytes)
         self.link_free_at[src] = t_arrive
         self.counters["launched"] += 1
@@ -242,12 +252,56 @@ class DisaggController:
         self.counters["peak_in_flight"] = max(
             self.counters["peak_in_flight"], self.in_flight)
 
+    def drain_retries(self) -> list:
+        """Tickets rescheduled with backoff since the last drain; the
+        replay loop pushes their fresh KV_XFER/KV_XFER_DONE events."""
+        out, self.retry_queue = self.retry_queue, []
+        return out
+
     def complete(self, ticket: MigrationTicket,
                  now: float) -> Optional[int]:
         """Land an arrived migration; returns the rank to kick (None if
-        the request could not be placed anywhere)."""
+        the request could not be placed anywhere, or the transfer was
+        disrupted and went back on the wire with backoff)."""
         self.in_flight = max(0, self.in_flight - 1)
         cl = self.cluster
+        chaos = getattr(cl.cfg, "chaos", None)
+        if ticket.mode == "kv" and cl.crashed_since(ticket.src,
+                                                    ticket.t_detach):
+            # the source died after detach with the payload still (partly)
+            # on the wire: its pages are void. The host blob's token ids
+            # ride the reliable control channel — recompute on arrival.
+            self.counters["dead_source"] += 1
+            ticket.mode = "recompute"
+            ticket.kv = None
+        elif (ticket.mode == "kv" and chaos is not None
+                and chaos.transfer_disrupted(ticket.src, ticket.t_launch,
+                                             ticket.t_arrive,
+                                             ticket.req_id,
+                                             ticket.attempt)):
+            self.counters["xfer_failures"] += 1
+            if ticket.attempt < chaos.max_retries \
+                    and ticket.src in cl.engines:
+                # retry with seeded exponential backoff (DESIGN.md §16):
+                # mutate the ticket's wire times and re-serialize on the
+                # source link; the replay loop re-pushes its events
+                ticket.attempt += 1
+                self.counters["xfer_retries"] += 1
+                t_launch = max(now + chaos.backoff(ticket.req_id,
+                                                   ticket.attempt),
+                               self.link_free_at.get(ticket.src, 0.0))
+                t_launch = chaos.link_clear_time(ticket.src, t_launch)
+                ticket.t_launch = t_launch
+                ticket.t_arrive = t_launch + self.cfg.link.transfer_time(
+                    ticket.n_bytes)
+                self.link_free_at[ticket.src] = ticket.t_arrive
+                self.retry_queue.append(ticket)
+                return None
+            # retry budget exhausted (or the source just died): guaranteed
+            # termination via the recompute fallback on the control channel
+            self.counters["xfer_gave_up"] += 1
+            ticket.mode = "recompute"
+            ticket.kv = None
         if ticket.dst not in cl.engines:
             # destination died while the payload was in flight: the pages
             # it carried are useless there — recompute on any survivor
@@ -270,7 +324,11 @@ class DisaggController:
             ticket.mode = "recompute"
             ticket.kv = None
         req, mode, _ = migration.install(cl.engines[ticket.dst], ticket, now)
+        req.retries += ticket.attempt     # surface xfer retries in metrics
         cl._rank_of[req.req_id] = ticket.dst
         self.counters["completed"] += 1
         self.counters[mode] += 1
+        if ticket.attempt:
+            self.retry_hist[str(ticket.attempt)] = \
+                self.retry_hist.get(str(ticket.attempt), 0) + 1
         return ticket.dst

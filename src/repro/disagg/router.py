@@ -59,8 +59,15 @@ class DisaggRouter(CacheAwareLB):
     def _pool(self, prefill: bool) -> list[int]:
         lo, hi = (0, self.n_prefill) if prefill \
             else (self.n_prefill, self.n_ranks)
-        return [r for r in range(lo, hi)
-                if r < len(self.alive) and self.alive[r]]
+        up = [r for r in range(lo, hi)
+              if r < len(self.alive) and self.alive[r]]
+        # health demotions (DESIGN.md §16) apply per pool: avoid suspect
+        # ranks unless the whole pool is suspect
+        if self.suspect:
+            ok = [r for r in up if r not in self.suspect]
+            if ok:
+                return ok
+        return up
 
     def route(self, prompt_len: int, tokens=None,
               tenant: str = "default") -> Optional[int]:

@@ -182,6 +182,7 @@ class Engine:
         self.deferred_since: dict[int, float] = {}
         self.preemptions = 0
         self.defer_events = 0       # total item-deferrals observed (§13)
+        self.sheds = 0              # brownout terminations (DESIGN.md §16)
 
     @property
     def inflight(self) -> Optional[InflightStep]:
@@ -237,7 +238,8 @@ class Engine:
                 "host_overhead_s": self.host_time,
                 "engine_steps": len(self.steps),
                 "rollbacks": self.rollbacks,
-                "preemptions": self.preemptions}
+                "preemptions": self.preemptions,
+                "sheds": self.sheds}
 
     def tenant_debt(self) -> dict:
         """Per-tenant fairness debt from the scheduler stack's admission
@@ -320,6 +322,7 @@ class Engine:
         if now is not None:
             self.now = max(self.now, now)
         self._admit_arrivals()
+        self._poll_brownout_sheds()
         proj, active_proj = self._projected_requests()
         if not active_proj:
             return None
@@ -802,6 +805,44 @@ class Engine:
         if self.prefix_cache is not None and req.tokens:
             # drops the request's page refs; cache-adopted pages stay live
             # until evicted (executor.release below is then a no-op)
+            self.prefix_cache.end_request(req.req_id)
+        if hasattr(self.executor, "release"):
+            self.executor.release(req.req_id)
+
+    # ------------------------------------------------------------------
+    # brownout overload shedding (DESIGN.md §16)
+    # ------------------------------------------------------------------
+
+    def _poll_brownout_sheds(self) -> None:
+        """While the cluster broadcasts fleet saturation, terminate the
+        never-served prefills the brownout stage deems deadline-infeasible.
+        Only requests not referenced by an in-flight dispatch are eligible
+        — a launched batch's effects must land on live request objects."""
+        bp = getattr(self.sched, "brownout", None)
+        if bp is None or not bp.engaged or not self.active:
+            return
+        busy = {it.req_id for inf in self.inflight_q
+                for it in inf.plan.items}
+        tasks = [self.requests[i].to_sched_task() for i in self.active
+                 if i not in busy]
+        if not tasks:
+            return
+        for rid in self.sched.poll_shed(self.now, tasks):
+            self._shed(self.requests[rid])
+
+    def _shed(self, req: Request) -> None:
+        """Terminal brownout shed: mirrors ``_finish`` (exactly-once
+        terminal status, pages released, deferral registry cleared) plus
+        the exact-billing admission refund."""
+        req.state = RequestState.SHED
+        self.sheds += 1
+        self.active.remove(req.req_id)
+        self.deferred_since.pop(req.req_id, None)
+        self._record_done(req)
+        refund = getattr(self.sched, "refund_request", None)
+        if refund is not None:
+            refund(req.req_id)
+        if self.prefix_cache is not None and req.tokens:
             self.prefix_cache.end_request(req.req_id)
         if hasattr(self.executor, "release"):
             self.executor.release(req.req_id)

@@ -27,10 +27,16 @@ class RequestMetrics:
     tenant: str = "default"
     # KV evictions this request absorbed (preemption subsystem, §13)
     preemptions: int = 0
+    # brownout overload shedding (DESIGN.md §16): terminated without
+    # service because it could no longer make its deadline fleet-wide
+    shed: bool = False
+    # fault recoveries (re-dispatch off a dead rank / KV-transfer retries)
+    retries: int = 0
 
     @property
     def slo_ok(self) -> bool:
-        return self.ttft_ok and self.tpot_ok and not self.rejected
+        return (self.ttft_ok and self.tpot_ok and not self.rejected
+                and not self.shed)
 
 
 def measure(req: Request) -> RequestMetrics:
@@ -39,7 +45,13 @@ def measure(req: Request) -> RequestMetrics:
                               False, rejected=True,
                               prompt_len=req.prompt_len,
                               cached_tokens=req.cached_context,
-                              tenant=req.tenant)
+                              tenant=req.tenant, retries=req.retries)
+    if req.state is RequestState.SHED:
+        return RequestMetrics(req.req_id, req.arrival, None, None, False,
+                              False, shed=True,
+                              prompt_len=req.prompt_len,
+                              cached_tokens=req.cached_context,
+                              tenant=req.tenant, retries=req.retries)
     ot = req.output_times
     ttft = (ot[0] - req.arrival) if ot else None
     tpot_max = None
@@ -53,7 +65,7 @@ def measure(req: Request) -> RequestMetrics:
                           ttft_ok, tpot_ok, prompt_len=req.prompt_len,
                           cached_tokens=req.cached_context,
                           sched_delay=delay, tenant=req.tenant,
-                          preemptions=req.preemptions)
+                          preemptions=req.preemptions, retries=req.retries)
 
 
 def summarize(metrics: list[RequestMetrics], duration: float,
@@ -92,6 +104,17 @@ def summarize(metrics: list[RequestMetrics], duration: float,
         "sched_delay_mean": float(np.mean(delays)) if len(delays) else
                             float("nan"),
     }
+    # terminal request status (DESIGN.md §16): every request ends exactly
+    # once as completed | rejected | shed — the three always sum to n
+    out["shed"] = sum(m.shed for m in metrics)
+    out["completed"] = n - out["rejected"] - out["shed"]
+    out["retried"] = sum(1 for m in metrics if m.retries > 0)
+    retry_hist: dict[str, int] = {}
+    for m in metrics:
+        if m.retries > 0:
+            retry_hist[str(m.retries)] = retry_hist.get(str(m.retries), 0) + 1
+    if retry_hist:
+        out["retry_hist"] = dict(sorted(retry_hist.items()))
     tenants = sorted({m.tenant for m in metrics})
     if len(tenants) > 1:
         # per-tenant fairness rollup (DESIGN.md §13): only materialized for
@@ -117,4 +140,5 @@ def _tenant_summary(ms: list[RequestMetrics]) -> dict:
         "tpot_p50": pct(tpots, 50), "tpot_p99": pct(tpots, 99),
         "rejected": sum(m.rejected for m in ms),
         "preemptions": sum(m.preemptions for m in ms),
+        "shed": sum(m.shed for m in ms),
     }

@@ -15,6 +15,7 @@ class RequestState(enum.Enum):
     FINISHED = "finished"
     REJECTED = "rejected"     # PAB admission control
     MIGRATED = "migrated"     # re-routed by the cluster LB (fault/overload)
+    SHED = "shed"             # brownout overload shedding (DESIGN.md §16)
 
 
 @dataclasses.dataclass
@@ -57,6 +58,10 @@ class Request:
     # (preemption / failure migration / snapshot restore) — a later requeue
     # must only fold the tokens generated since, never double-count.
     refolded: int = 0
+    # Times this request was recovered after a fault (re-dispatched off a
+    # dead rank, or its KV transfer retried) — the retry histogram in
+    # ``metrics.summarize`` aggregates it (DESIGN.md §16).
+    retries: int = 0
 
     @property
     def active(self) -> bool:

@@ -21,6 +21,10 @@ order. Priority encodes the causal conventions of the replay loop:
   * LB report ticks land after step completions (a report observes the state
     the engine just committed) but before arrivals (a coinciding arrival is
     routed on the freshest snapshot the LB could legally have);
+  * health-monitor sweeps (DESIGN.md §16) land right after the report ticks
+    they judge — the monitor sees the freshest tick at the same instant —
+    but before arrivals, so a coinciding arrival is routed against the
+    post-detection alive-set;
   * wake-ups (idle-rank retry hops) sort last — they are pure fallbacks.
 """
 from __future__ import annotations
@@ -41,8 +45,9 @@ class EventKind(enum.IntEnum):
     KV_XFER = 4       # migration payload hits the wire (DESIGN.md §15)
     KV_XFER_DONE = 5  # migration payload lands; install on the target
     LB_REPORT = 6
-    ARRIVAL = 7
-    RANK_WAKE = 8
+    HEALTH = 7        # failure-detection sweep + brownout control (§16)
+    ARRIVAL = 8
+    RANK_WAKE = 9
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,12 +68,13 @@ class EventQueue:
     """Min-heap of events keyed on (time, kind-priority, insertion seq).
 
     ``pending_work`` counts queued events that can still generate work
-    (everything except LB_REPORT ticks and RANK_WAKE fallbacks) — the replay
+    (everything except LB_REPORT/HEALTH ticks and RANK_WAKE fallbacks) — the replay
     loop uses it to decide when the self-perpetuating report ticks should be
     allowed to die out.
     """
 
-    _SELF_PERPETUATING = (EventKind.LB_REPORT, EventKind.RANK_WAKE)
+    _SELF_PERPETUATING = (EventKind.LB_REPORT, EventKind.HEALTH,
+                          EventKind.RANK_WAKE)
 
     def __init__(self):
         self._heap: list[tuple[float, int, int, Event]] = []

