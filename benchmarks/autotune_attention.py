@@ -171,9 +171,12 @@ def sweep(geom: KernelGeom, t_buckets, pg_buckets):
     return rows, winners
 
 
-def _geom_from_cfg(cfg, kv_dtype: str = "f32",
-                   page: int = 16) -> KernelGeom:
-    return KernelGeom(n_kv_heads=cfg.n_kv_heads,
+def _geom_from_cfg(cfg, kv_dtype: str = "f32", page: int = 16,
+                   tp: int = 1) -> KernelGeom:
+    """Kernel geometry; under TP each shard's launch covers n_kv_heads/TP
+    head groups (DESIGN.md §17), which shifts the roofline balance — the
+    reason the registry is keyed per mesh shape."""
+    return KernelGeom(n_kv_heads=max(1, cfg.n_kv_heads // max(tp, 1)),
                       group=cfg.n_heads // cfg.n_kv_heads,
                       head_dim=cfg.head_dim, page=page, kv_dtype=kv_dtype)
 
@@ -192,26 +195,33 @@ def _bucket_grids(smoke: bool):
 
 
 def tune_and_install(cfg=None, kv_dtype: str = "f32", page: int = 16,
-                     smoke: bool = False,
+                     smoke: bool = False, mesh_key=None,
                      json_path: str = TUNE_JSON) -> tuple[list, dict]:
     """Run the sweep, persist winners, install them into the kernel registry.
 
     Returns (rows, winners). The persisted JSON keys are
-    ``"{t_bucket}x{pg_bucket}"`` (JSON has no tuple keys).
+    ``"{t_bucket}x{pg_bucket}"`` (JSON has no tuple keys). ``mesh_key``
+    (``paged_attention.mesh_tiling_key`` format, None = single device)
+    tunes the per-shard geometry of that mesh shape and installs winners
+    under its registry key only — single-device winners never leak into
+    sharded launches (DESIGN.md §17).
     """
     from repro.kernels.paged_attention import set_ragged_tilings
 
     if cfg is None:
         from repro.configs import get_reduced
         cfg = dataclasses.replace(get_reduced("stablelm-3b"), window=None)
-    geom = _geom_from_cfg(cfg, kv_dtype=kv_dtype, page=page)
+    tp = dict(mesh_key or ()).get("model", 1)
+    geom = _geom_from_cfg(cfg, kv_dtype=kv_dtype, page=page, tp=tp)
     t_buckets, pg_buckets = _bucket_grids(smoke)
     rows, winners = sweep(geom, t_buckets, pg_buckets)
-    set_ragged_tilings(winners)
+    set_ragged_tilings(winners, mesh=mesh_key)
     if json_path:
         os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
         with open(json_path, "w") as f:
             json.dump({"geom": dataclasses.asdict(geom),
+                       "mesh": (None if mesh_key is None
+                                else [list(kv) for kv in mesh_key]),
                        "winners": {f"{t}x{p}": list(v)
                                    for (t, p), v in winners.items()}},
                       f, indent=1)

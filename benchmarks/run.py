@@ -30,7 +30,7 @@ _TRAJECTORY_KEYS = (
     "interactive_ttft_p99", "interactive_tpot_p99",
     "interactive_p99_vs_isolated", "preemptions",
     "fused_dispatches_per_step", "tuning_gain", "tuned_cost_us",
-    "default_cost_us",
+    "default_cost_us", "modeled_step_ms",
     "goodput_ratio", "completed", "shed", "retried", "crashes",
     "detections", "warm_joins",
 )
@@ -179,6 +179,15 @@ def _headline(name: str, rows: list[dict]) -> str:
                     if r["mode"] == "fused"}
             return (f"fused_speedup {sp} dispatches/step "
                     f"{sorted(set(disp.values()))}")
+        if name == "tp_step":
+            sp = {r["mode"]: r["speedup"] for r in rows
+                  if r["mix"] == "prefill-heavy"}
+            ran = sorted(r["tp"] for r in rows
+                         if r["executed"] and r["mix"] == "prefill-heavy")
+            par = all(r.get("parity") == "ok" for r in rows
+                      if r["mix"] == "prefill-heavy" and r["executed"])
+            return (f"modeled_speedup {sp} ran=TP{ran} "
+                    f"parity={'ok' if par else 'FAIL'}")
         if name == "autotune_attention":
             gains = [r["tuning_gain"] for r in rows if r["mode"] == "winner"]
             import statistics
@@ -211,7 +220,7 @@ def main() -> None:
                    chaos_bench, cluster_bench, cost_model_bench, disagg_bench,
                    fairness_bench, goodput_bench, hybrid_step_bench,
                    latency_bench, prefix_cache_bench, roofline_report,
-                   slo_grid_bench, unfairness_bench)
+                   slo_grid_bench, tp_scaling_bench, unfairness_bench)
     benches = {
         "cost_model": cost_model_bench.run,      # paper §3.2 accuracy claim
         "unfairness": unfairness_bench.run,      # Fig 1/2
@@ -223,6 +232,7 @@ def main() -> None:
         "prefix_cache": prefix_cache_bench.run,  # DESIGN.md §10 reuse
         "autotune_attention": autotune_attention.run,  # DESIGN.md §14 tiling
         "hybrid_step": hybrid_step_bench.run,    # DESIGN.md §11 fused step
+        "tp_step": tp_scaling_bench.run,         # DESIGN.md §17 TP scaling
         "async_pipeline": async_pipeline_bench.run,  # DESIGN.md §12
         "fairness": fairness_bench.run,          # DESIGN.md §13 VTC stack
         "disagg": disagg_bench.run,              # DESIGN.md §15 P/D split

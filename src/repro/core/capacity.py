@@ -30,7 +30,7 @@ import math
 from typing import Optional, Sequence
 
 from . import slo
-from .cost_model import LinearCostModel
+from .cost_model import LinearCostModel, per_shard_model
 from .types import SchedTask
 
 
@@ -68,7 +68,7 @@ def commit_horizon(tasks: Sequence[SchedTask], now: float,
                    model: LinearCostModel, *, max_horizon: int,
                    ttft_slo: float, predicted_prefill_tokens: int = 0,
                    safety: float = 1.0, free_pages: Optional[int] = None,
-                   page_size: int = 0) -> int:
+                   page_size: int = 0, n_shards: int = 1) -> int:
     """Safe multi-step decode commitment depth (DESIGN.md §12).
 
     Returns the largest ``H <= max_horizon`` such that committing the
@@ -100,9 +100,17 @@ def commit_horizon(tasks: Sequence[SchedTask], now: float,
 
     ``safety`` mirrors ``FormationConfig.safety``: constraints are checked
     against ``safety × allowance`` to absorb execution jitter.
+
+    ``n_shards`` prices steps with the per-shard cost model (DESIGN.md
+    §17): under n-way tensor parallelism each committed step's marginal
+    coefficients divide by n, so the same slack funds a deeper horizon.
+    The KV page bound is deliberately NOT scaled — page IDs are global
+    under TP (only the per-page head slice is shard-local), so the pool
+    drains at the same page rate regardless of shard count.
     """
     if max_horizon <= 1 or not tasks:
         return 1
+    model = per_shard_model(model, n_shards)
     decodes = [t for t in tasks if t.is_decode]
     if len(decodes) != len(tasks):
         return 1                      # a queued prefill is owed service now

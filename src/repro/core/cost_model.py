@@ -73,6 +73,31 @@ class TokenCostModel(LinearCostModel):
         super().__init__(a=a, b=b, c=0.0)
 
 
+def per_shard_model(model: LinearCostModel, n_shards: int) -> LinearCostModel:
+    """The cost model one shard of an ``n_shards``-way tensor-parallel step
+    sees (DESIGN.md §17).
+
+    Matmul FLOPs and KV HBM traffic partition across the model axis, so the
+    per-token (``b``) and per-context (``c``) coefficients divide by the
+    shard count; the fixed launch overhead ``a`` is paid once per step on
+    every shard, not amortized. Collective time is folded into ``a`` by the
+    online RLS calibration — at serving scale the per-layer all-reduce is
+    latency-bound, so a constant is the right shape.
+
+    Scheduler budgets stay expressed in wall-clock per step; dividing the
+    marginal coefficients is what lets the same SLO budget admit ~n_shards
+    times the compute-bound token load (the TP scaling bench's roofline).
+    Derived classes (``PaddedCostModel``/``TokenCostModel``) keep their type
+    so padding semantics survive sharding.
+    """
+    n = max(int(n_shards), 1)
+    if n == 1:
+        return model
+    if isinstance(model, TokenCostModel):       # custom (a, b) __init__
+        return TokenCostModel(a=model.a, b=model.b / n)
+    return dataclasses.replace(model, b=model.b / n, c=model.c / n)
+
+
 # HBM bytes per stored KV element by storage format (DESIGN.md §14). Kept
 # string-keyed so the scheduler core stays free of array-library imports.
 _KV_ELT_BYTES = {"fp32": 4, "float32": 4, "fp16": 2, "bf16": 2,
@@ -81,7 +106,8 @@ _KV_QUANTIZED = frozenset({"int8", "fp8_e4m3"})
 
 
 def kv_bytes_per_token(n_layers: int, n_kv_heads: int, head_dim: int,
-                       kv_dtype: str = "fp32", scale_bytes: int = 4) -> int:
+                       kv_dtype: str = "fp32", scale_bytes: int = 4,
+                       tp: int = 1) -> int:
     """HBM bytes one cached token occupies across K and V (DESIGN.md §14).
 
     Quantized formats (int8 / fp8-e4m3) store 1 byte per element plus one
@@ -90,11 +116,18 @@ def kv_bytes_per_token(n_layers: int, n_kv_heads: int, head_dim: int,
     4x) byte reduction vs fp32 at head_dim 128. This is the number PAB and
     commit-horizon capacity math must use for the page budget to stay
     correct at ~2-4x quantized capacity.
+
+    ``tp`` asks for ONE shard's bytes under tensor parallelism: the KV
+    pools shard on the kv-head axis (DESIGN.md §17), so each device stores
+    ``n_kv_heads / tp`` head rows (and their scales). Page IDs and counts
+    stay global — only the per-page byte footprint shrinks, which is why
+    ``kv_page_budget`` against a single shard's HBM uses this number.
     """
+    heads = max(1, n_kv_heads // max(int(tp), 1))
     elt = _KV_ELT_BYTES[kv_dtype]
-    per = 2 * n_layers * n_kv_heads * head_dim * elt          # K and V
+    per = 2 * n_layers * heads * head_dim * elt               # K and V
     if kv_dtype in _KV_QUANTIZED:
-        per += 2 * n_layers * n_kv_heads * scale_bytes        # scale rows
+        per += 2 * n_layers * heads * scale_bytes             # scale rows
     return per
 
 

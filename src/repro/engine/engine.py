@@ -64,6 +64,10 @@ class EngineConfig:
     # arriving right after a multi-step dispatch must still make its TTFT
     # SLO. 0 disables the reserve (envelopes alone bound the horizon).
     predicted_prefill_tokens: int = 0
+    # tensor-parallel degree the data plane runs at (DESIGN.md §17): the
+    # horizon guard prices committed steps with the per-shard cost model
+    # (marginal coefficients / cost_shards). 1 = single-device budgets.
+    cost_shards: int = 1
     # -- preemption & aged requeue (DESIGN.md §13) ---------------------
     # evict a running request's KV pages (refcount/COW-aware) to unblock
     # starving deferred work; the victim re-prefills its known prefix on
@@ -437,7 +441,8 @@ class Engine:
             ttft_slo=self.cfg.ttft_slo,
             predicted_prefill_tokens=self.cfg.predicted_prefill_tokens,
             free_pages=None if alloc is None else alloc.free_blocks,
-            page_size=0 if alloc is None else alloc.block_size)
+            page_size=0 if alloc is None else alloc.block_size,
+            n_shards=self.cfg.cost_shards)
         # nobody may finish mid-horizon: a completion changes the batch
         h = min(h, min(proj[i].max_new_tokens - proj[i].generated
                        for i in ids))

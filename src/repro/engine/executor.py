@@ -17,6 +17,7 @@
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import time
@@ -29,12 +30,15 @@ import numpy as np
 from ..configs.base import ArchConfig
 from ..core.cost_model import LinearCostModel
 from ..core.types import BatchPlan, TaskKind
+from ..distributed.sharding import (constrain, param_specs, serving_rules,
+                                    use_rules)
 from ..kernels import quant as kvq
 from ..kernels.ops import (paged_attention_op, paged_attention_quant_op,
                            paged_attention_ragged_op,
                            paged_attention_ragged_quant_op)
-from ..kernels.paged_attention import get_ragged_tiling
+from ..kernels.paged_attention import get_ragged_tiling, mesh_tiling_key
 from ..models.layers import attn_qkv, mlp_apply
+from ..models.moe import moe_capacity, moe_dense_exact
 from ..models.module import rmsnorm
 from .kv_manager import BlockAllocator
 
@@ -94,7 +98,19 @@ class _PackedSeq:
 
 
 class PagedTransformerExecutor:
-    """Real hybrid-step executor over a paged KV cache (dense GQA family)."""
+    """Real hybrid-step executor over a paged KV cache (dense / MoE GQA).
+
+    With ``mesh`` given, the whole step shards over the ``(data, model)``
+    mesh via the logical-axis rule tables (DESIGN.md §17): params are
+    device_put per ``DecoderLM.axes()``, the paged K/V pools (and quant
+    scale pages) shard on their kv-head dim over ``model``, and the step
+    bodies trace under ``use_rules`` so GSPMD partitions QKV/attention/
+    o-proj with one all-reduce per layer (plus the MoE combine). The
+    host-side ``BlockAllocator`` is untouched — page IDs are global and
+    replicated; only each page's head slice is local to a shard — so COW,
+    prefix reuse, and the scale-page bijection survive the split as-is.
+    ``mesh=None`` is byte-for-byte the old single-device executor.
+    """
 
     def __init__(self, cfg: ArchConfig, params, *, num_pages: int = 256,
                  page_size: int = 128, max_pages_per_seq: int = 16,
@@ -102,13 +118,36 @@ class PagedTransformerExecutor:
                  ragged_attention: Optional[bool] = None,
                  capture_logits: bool = False,
                  kv_dtype: str = "fp32",
-                 trim_page_tables: bool = True):
-        assert cfg.family in ("dense",) and cfg.moe is None and cfg.ssm is None
+                 trim_page_tables: bool = True,
+                 mesh=None,
+                 moe_impl: str = "exact"):
+        assert cfg.family in ("dense", "moe") and cfg.ssm is None
         assert mode in ("fused", "sequential")
+        # MoE FFN path: "exact" (dense per-token oracle) keeps the fused ==
+        # sequential bit-parity contract — per-token math is independent of
+        # how the step packs tokens. "capacity" opts into the production
+        # dispatch (expert-parallel all-to-all under the rules table), whose
+        # per-chunk capacity depends on chunk size, so token drops — and
+        # hence parity — vary with packing (DESIGN.md §17).
+        assert moe_impl in ("exact", "capacity")
+        self.moe_impl = moe_impl
         self.cfg = cfg
         self.params = params
         self.page_size = page_size
         self.mode = mode
+        # -- mesh sharding (DESIGN.md §17) -----------------------------
+        self.mesh = mesh
+        self.rules = None
+        self._mesh_key = mesh_tiling_key(mesh)
+        # model-axis shards this data plane divides per-token compute over:
+        # the scale factor for per-shard scheduler budgets
+        # (cost_model.per_shard_model)
+        self.n_shards = 1 if mesh is None else int(mesh.shape.get("model", 1))
+        if mesh is not None:
+            from ..models.lm import DecoderLM
+            self.rules = serving_rules(mesh, cfg)
+            self.params = jax.device_put(
+                params, param_specs(DecoderLM(cfg).axes(), self.rules))
         # quantized paged KV (DESIGN.md §14): values stored int8/fp8 in the
         # data pages, per-(token, kv-head) f32 scales in the allocator's
         # scale pages; None = unquantized fp32 storage
@@ -140,14 +179,22 @@ class PagedTransformerExecutor:
         shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads,
                  cfg.head_dim)
         kv_store = jnp.float32 if self.qspec is None else self.qspec.dtype
-        self.k_pages = jnp.zeros(shape, kv_store)
-        self.v_pages = jnp.zeros(shape, kv_store)
+        # page pools shard on the kv-head dim over `model` (a no-op when the
+        # rules table replicated kv_heads for indivisible head counts);
+        # page/slot dims stay replicated so the host-global page IDs of the
+        # allocator index every shard identically (DESIGN.md §17)
+        self._kv_sharding = (None if mesh is None else self.rules.sharding(
+            (None, None, None, "kv_heads", None)))
+        self._scale_sharding = (None if mesh is None else self.rules.sharding(
+            (None, None, None, "kv_heads")))
+        self.k_pages = self._shard_kv(jnp.zeros(shape, kv_store))
+        self.v_pages = self._shard_kv(jnp.zeros(shape, kv_store))
         if self.qspec is None:
             self.k_scales = self.v_scales = None
         else:
             sshape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads)
-            self.k_scales = jnp.zeros(sshape, jnp.float32)
-            self.v_scales = jnp.zeros(sshape, jnp.float32)
+            self.k_scales = self._shard_scale(jnp.zeros(sshape, jnp.float32))
+            self.v_scales = self._shard_scale(jnp.zeros(sshape, jnp.float32))
             # pad tokens redirect scales to the trash page's scale page,
             # which the construction order above pins to id 0
             assert self.alloc.scale_of[0] == 0
@@ -177,6 +224,30 @@ class PagedTransformerExecutor:
         self._zero_table = jnp.zeros(self.max_pages, jnp.int32)
 
     # ------------------------------------------------------------------
+    # mesh plumbing (DESIGN.md §17)
+    # ------------------------------------------------------------------
+
+    def _shard_kv(self, pages):
+        return pages if self._kv_sharding is None else jax.device_put(
+            pages, self._kv_sharding)
+
+    def _shard_scale(self, scales):
+        return scales if self._scale_sharding is None else jax.device_put(
+            scales, self._scale_sharding)
+
+    @contextlib.contextmanager
+    def _step_ctx(self):
+        """Trace/launch context for the jitted step bodies: activates the
+        mesh and the logical-axis rules so ``constrain`` lowers to sharding
+        constraints. A plain no-op when ``mesh is None`` — the single-device
+        graphs are unchanged."""
+        if self.mesh is None:
+            yield
+        else:
+            with self.mesh, use_rules(self.rules):
+                yield
+
+    # ------------------------------------------------------------------
     # jitted step bodies
     # ------------------------------------------------------------------
 
@@ -186,7 +257,32 @@ class PagedTransformerExecutor:
     def _head(self, h_last):
         p = self.params
         h = rmsnorm(h_last, p["ln_f"], self.cfg.norm_eps)
-        return h @ p["head"]
+        logits = h @ p["head"]
+        return constrain(logits, (None,) * (logits.ndim - 1) + ("vocab",))
+
+    def _layer_ffn(self, lp, x):
+        """Residual FFN block: gated MLP, or the MoE path for moe-family
+        archs (``moe_impl``: exact per-token oracle vs capacity dispatch —
+        the latter is the expert-parallel path, its `constrain` calls give
+        the all-to-all dispatch/combine under the rules table)."""
+        cfg = self.cfg
+        h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            b, t, d = h.shape
+            moe_fn = (moe_capacity if self.moe_impl == "capacity"
+                      else moe_dense_exact)
+            y = moe_fn(h.reshape(b * t, d), lp["moe"], cfg.moe)
+            return x + y.reshape(b, t, d)
+        return x + mlp_apply(lp["mlp"], h)
+
+    def _constrain_qkv(self, q, k, v):
+        """Pin the packed stream's activation layout: q on the (sharded)
+        query-head dim, k/v on the kv-head dim matching the page pools —
+        identity when no rules context is active."""
+        q = constrain(q, (None, None, "q_heads", None))
+        k = constrain(k, (None, None, "kv_heads", None))
+        v = constrain(v, (None, None, "kv_heads", None))
+        return q, k, v
 
     def _write_pages(self, k_pages, v_pages, scales, layer, k, v, table,
                      stable, positions, valid=None):
@@ -241,14 +337,16 @@ class PagedTransformerExecutor:
         for l in range(cfg.n_layers):
             lp = jax.tree.map(lambda a: a[l], self.params["layers"])
             h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
-            q, k, v = attn_qkv(lp["attn"], h, positions, cfg)
+            q, k, v = self._constrain_qkv(*attn_qkv(lp["attn"], h, positions,
+                                                    cfg))
             k_pages, v_pages, scales = self._write_pages(
                 k_pages, v_pages, scales, l, k, v, table, stable, positions,
                 valid)
             o = self._attend(q, k_pages, v_pages, scales, l, table, stable,
                              ctx_lens, positions[:, 0])
             x = x + o.reshape(*x.shape[:2], cfg.q_dim) @ lp["attn"]["wo"]
-            x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
+            x = constrain(x, (None, None, "embed"))
+            x = self._layer_ffn(lp, x)
         return k_pages, v_pages, scales, x
 
     def _chunk_step(self, k_pages, v_pages, scales, tokens, pos0, table,
@@ -339,13 +437,16 @@ class PagedTransformerExecutor:
         cfg = self.cfg
         x = self._embed(tokens)[None]                     # (1, T, d)
         pos2d = positions[None]
-        # autotuned kernel tiling for this bucket (DESIGN.md §14); install
-        # tilings before serving — the jit cache keys on bucket, not tiling
-        kb, tb = get_ragged_tiling(t_bucket, pg_bucket)
+        # autotuned kernel tiling for this bucket (DESIGN.md §14), keyed by
+        # the mesh shape too (§17) — single-device winners never silently
+        # apply to sharded launches; install tilings before serving, the
+        # jit cache keys on bucket, not tiling
+        kb, tb = get_ragged_tiling(t_bucket, pg_bucket, mesh=self._mesh_key)
         for l in range(cfg.n_layers):
             lp = jax.tree.map(lambda a: a[l], self.params["layers"])
             h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
-            q, k, v = attn_qkv(lp["attn"], h, pos2d, cfg)
+            q, k, v = self._constrain_qkv(*attn_qkv(lp["attn"], h, pos2d,
+                                                    cfg))
             k_pages, v_pages, scales = self._scatter_packed(
                 k_pages, v_pages, scales, l, k[0], v[0], tok_pages,
                 tok_slots, tok_spages)
@@ -368,7 +469,8 @@ class PagedTransformerExecutor:
                 o = ov.reshape(s_bucket * tq_bucket,
                                *ov.shape[2:])[pack_gather]
             x = x + o.reshape(1, t_bucket, cfg.q_dim) @ lp["attn"]["wo"]
-            x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
+            x = constrain(x, (None, None, "embed"))
+            x = self._layer_ffn(lp, x)
         h_last = x[0][last_idx]                           # (S, d)
         return k_pages, v_pages, scales, self._head(h_last)
 
@@ -474,11 +576,12 @@ class PagedTransformerExecutor:
         stables += [stables[0] * 0] * pad
         self.n_dispatches += 1
         self.compile_keys.add(("multi", bsz, horizon))
-        self.k_pages, self.v_pages, scales, out = self._multi_fn(
-            self.k_pages, self.v_pages, self._scales_in(),
-            jnp.asarray(toks, jnp.int32), jnp.asarray(pos, jnp.int32),
-            jnp.stack(tables), jnp.stack(stables),
-            jnp.asarray(ctx, jnp.int32), bsz=bsz, horizon=horizon)
+        with self._step_ctx():
+            self.k_pages, self.v_pages, scales, out = self._multi_fn(
+                self.k_pages, self.v_pages, self._scales_in(),
+                jnp.asarray(toks, jnp.int32), jnp.asarray(pos, jnp.int32),
+                jnp.stack(tables), jnp.stack(stables),
+                jnp.asarray(ctx, jnp.int32), bsz=bsz, horizon=horizon)
         self._set_scales(scales)
         toks_np = np.asarray(out)                          # (horizon, bsz)
         dt = time.perf_counter() - t0
@@ -618,18 +721,20 @@ class PagedTransformerExecutor:
         self.n_dispatches += 1
         self.compile_keys.add(("fused", t_bucket, s_bucket, tq_bucket,
                                pg_bucket))
-        self.k_pages, self.v_pages, scales, logits = self._fused_fn(
-            self.k_pages, self.v_pages, self._scales_in(),
-            jnp.asarray(st["tokens"]), jnp.asarray(st["positions"]),
-            jnp.asarray(st["tok_pages"]), jnp.asarray(st["tok_slots"]),
-            jnp.asarray(st["tok_spages"]),
-            jnp.asarray(st["tables"]), jnp.asarray(st["stables"]),
-            jnp.asarray(st["ctx"]),
-            jnp.asarray(st["q_starts"]), jnp.asarray(st["q_lens"]),
-            jnp.asarray(st["pos0"]), jnp.asarray(st["last_idx"]),
-            jnp.asarray(st["seq_gather"]), jnp.asarray(st["pack_gather"]),
-            t_bucket=t_bucket, s_bucket=s_bucket, tq_bucket=tq_bucket,
-            pg_bucket=pg_bucket)
+        with self._step_ctx():
+            self.k_pages, self.v_pages, scales, logits = self._fused_fn(
+                self.k_pages, self.v_pages, self._scales_in(),
+                jnp.asarray(st["tokens"]), jnp.asarray(st["positions"]),
+                jnp.asarray(st["tok_pages"]), jnp.asarray(st["tok_slots"]),
+                jnp.asarray(st["tok_spages"]),
+                jnp.asarray(st["tables"]), jnp.asarray(st["stables"]),
+                jnp.asarray(st["ctx"]),
+                jnp.asarray(st["q_starts"]), jnp.asarray(st["q_lens"]),
+                jnp.asarray(st["pos0"]), jnp.asarray(st["last_idx"]),
+                jnp.asarray(st["seq_gather"]),
+                jnp.asarray(st["pack_gather"]),
+                t_bucket=t_bucket, s_bucket=s_bucket, tq_bucket=tq_bucket,
+                pg_bucket=pg_bucket)
         self._set_scales(scales)
         emitted: dict[int, int] = {}
         if any(s.emits for s in seqs):
@@ -665,10 +770,11 @@ class PagedTransformerExecutor:
             table = self._table(it.req_id)
             self.n_dispatches += 1
             self.compile_keys.add(("chunk", n_tok))
-            self.k_pages, self.v_pages, scales, logits = self._chunk_fn(
-                self.k_pages, self.v_pages, self._scales_in(), toks,
-                jnp.int32(req.prefilled), table, self._stable(it.req_id),
-                jnp.int32(len(chunk)), n_tok=n_tok)
+            with self._step_ctx():
+                self.k_pages, self.v_pages, scales, logits = self._chunk_fn(
+                    self.k_pages, self.v_pages, self._scales_in(), toks,
+                    jnp.int32(req.prefilled), table, self._stable(it.req_id),
+                    jnp.int32(len(chunk)), n_tok=n_tok)
             self._set_scales(scales)
             if req.prefilled + it.n_tokens == req.prompt_len:
                 emitted[it.req_id] = int(jnp.argmax(logits))
@@ -702,11 +808,12 @@ class PagedTransformerExecutor:
             stables += [stables[0] * 0] * pad
             self.n_dispatches += 1
             self.compile_keys.add(("decode", bsz))
-            self.k_pages, self.v_pages, scales, logits = self._decode_fn(
-                self.k_pages, self.v_pages, self._scales_in(),
-                jnp.asarray(toks, jnp.int32), jnp.asarray(pos, jnp.int32),
-                jnp.stack(tables), jnp.stack(stables),
-                jnp.asarray(ctx, jnp.int32), bsz=bsz)
+            with self._step_ctx():
+                self.k_pages, self.v_pages, scales, logits = self._decode_fn(
+                    self.k_pages, self.v_pages, self._scales_in(),
+                    jnp.asarray(toks, jnp.int32), jnp.asarray(pos, jnp.int32),
+                    jnp.stack(tables), jnp.stack(stables),
+                    jnp.asarray(ctx, jnp.int32), bsz=bsz)
             self._set_scales(scales)
             nxt = np.asarray(jnp.argmax(logits, -1))
             lg = np.asarray(logits) if self.capture_logits else None

@@ -42,26 +42,50 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
-# autotuned (pages_per_block, q_block) per (t_bucket, pages_bucket) — filled
-# by benchmarks/autotune_attention.py (set_ragged_tilings); (1, None) = the
-# untiled PR 3 grid
-_TUNED_TILINGS: dict[tuple[int, int], tuple[int, Optional[int]]] = {}
+# autotuned (pages_per_block, q_block) per (mesh_key, t_bucket,
+# pages_bucket) — filled by benchmarks/autotune_attention.py
+# (set_ragged_tilings); (1, None) = the untiled PR 3 grid. Keying by mesh
+# shape matters under TP (DESIGN.md §17): a sharded kernel sees
+# n_kv_heads/TP head groups and per-shard VMEM working sets, so a winner
+# tuned single-device is NOT a winner for the sharded launch — lookups for
+# an untuned mesh fall back to the safe default instead of silently reusing
+# single-device tilings.
+_TUNED_TILINGS: dict[tuple, tuple[int, Optional[int]]] = {}
 
 
-def set_ragged_tilings(table: dict) -> None:
-    """Install autotuned tilings: {(t_bucket, pages_bucket): (kb, tb)}."""
-    _TUNED_TILINGS.clear()
+def mesh_tiling_key(mesh) -> Optional[tuple]:
+    """Registry key for a mesh (or None = single-device): the ordered
+    (axis_name, size) shape — what actually changes the per-shard kernel
+    footprint — not device identities."""
+    if mesh is None:
+        return None
+    return tuple((name, int(size)) for name, size
+                 in zip(mesh.axis_names, mesh.devices.shape))
+
+
+def set_ragged_tilings(table: dict, mesh=None) -> None:
+    """Install autotuned tilings {(t_bucket, pages_bucket): (kb, tb)} for
+    one mesh shape (None = single-device). Other meshes' entries persist —
+    each shard shape is tuned and cleared independently."""
+    mk = mesh if (mesh is None or isinstance(mesh, tuple)) \
+        else mesh_tiling_key(mesh)
+    for key in [k for k in _TUNED_TILINGS if k[0] == mk]:
+        del _TUNED_TILINGS[key]
     for key, val in table.items():
         t, n_pages = key
         kb, tb = val
-        _TUNED_TILINGS[(int(t), int(n_pages))] = (
+        _TUNED_TILINGS[(mk, int(t), int(n_pages))] = (
             int(kb), None if tb is None else int(tb))
 
 
-def get_ragged_tiling(t_bucket: int,
-                      pages_bucket: int) -> tuple[int, Optional[int]]:
-    """(pages_per_block, q_block) for a bucket; (1, None) when untuned."""
-    return _TUNED_TILINGS.get((int(t_bucket), int(pages_bucket)), (1, None))
+def get_ragged_tiling(t_bucket: int, pages_bucket: int,
+                      mesh=None) -> tuple[int, Optional[int]]:
+    """(pages_per_block, q_block) for a bucket on a mesh shape; (1, None)
+    when that mesh shape is untuned (no cross-mesh fallback)."""
+    mk = mesh if (mesh is None or isinstance(mesh, tuple)) \
+        else mesh_tiling_key(mesh)
+    return _TUNED_TILINGS.get((mk, int(t_bucket), int(pages_bucket)),
+                              (1, None))
 
 
 def _kernel(block_table, context_lens, q_starts,   # scalar-prefetch refs

@@ -1,8 +1,8 @@
 """Production meshes.
 
 Functions, not module constants: importing this module must never touch jax
-device state (device count locks on first backend init — dryrun.py sets
-XLA_FLAGS before importing anything).
+device state (device count locks on first backend init — dryrun.py and
+tests/conftest.py set XLA_FLAGS before importing anything).
 """
 from __future__ import annotations
 
@@ -17,7 +17,26 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
-    """Reduced mesh for unit tests (requires enough host devices)."""
+    """Reduced mesh for unit tests.
+
+    Fails loudly when the backend holds fewer devices than the requested
+    shape needs — ``jax.make_mesh`` would otherwise raise a shape-mismatch
+    deep in device assignment that reads like a bug, when the actual fix is
+    provisioning fake host devices before jax initializes. Tests get them
+    from ``tests/conftest.py``; standalone scripts set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` at module top
+    the way ``launch/dryrun.py`` does.
+    """
+    need = max(pod, 1) * data * model
+    have = jax.device_count()
+    if have < need:
+        raise RuntimeError(
+            f"make_test_mesh(data={data}, model={model}, pod={pod}) needs "
+            f"{need} devices but the {jax.default_backend()} backend has "
+            f"{have}. Set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need} BEFORE jax initializes (tests inherit it from "
+            "tests/conftest.py; scripts set it at module top like "
+            "launch/dryrun.py).")
     if pod:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,48 @@
+"""Shared test fixtures: multi-device host platform provisioning.
+
+XLA locks the device count at first backend initialization, so the fake
+host devices that the sharding/TP suites need (DESIGN.md §17) must be
+requested *before* any test module runs ``import jax`` at collection time.
+conftest.py is imported ahead of every test module, which makes this the
+one place the flag can be set reliably under plain ``pytest`` (previously
+only ``launch/dryrun.py`` set it, so multi-device paths were untestable).
+
+The flag is appended, never clobbered: callers that already exported their
+own ``XLA_FLAGS`` (dryrun's 512-device topology, a TPU run's tuning flags)
+keep them.
+"""
+import os
+
+N_TEST_DEVICES = 8
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        f"{_flags} --xla_force_host_platform_device_count={N_TEST_DEVICES}"
+    ).strip()
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def host_devices():
+    """The session's device list; skips (never errors) when the platform
+    could not provision the ``N_TEST_DEVICES`` fake host devices — e.g. a
+    runner that initialized jax before pytest imported this conftest."""
+    import jax
+
+    devices = jax.devices()
+    if len(devices) < N_TEST_DEVICES:
+        pytest.skip(f"needs {N_TEST_DEVICES} host devices, have "
+                    f"{len(devices)} (xla_force_host_platform_device_count "
+                    "was set too late)")
+    return devices
+
+
+@pytest.fixture(scope="session")
+def tp_meshes(host_devices):
+    """``{tp_degree: 1×tp mesh}`` for the TP parity suites (model-axis
+    tensor parallelism over fake host devices, DESIGN.md §17)."""
+    from repro.launch.mesh import make_test_mesh
+
+    return {tp: make_test_mesh(data=1, model=tp) for tp in (1, 2, 4)}

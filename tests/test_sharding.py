@@ -1,0 +1,167 @@
+"""Logical-axis sharding rules + mesh-keyed tiling registry (DESIGN.md §17).
+
+``ShardingRules.spec`` edge cases: a mesh axis may appear only once in a
+PartitionSpec, so later logical axes mapping to an already-used axis (or to a
+tuple overlapping one) must resolve to None. The arch-aware ``serving_rules``
+tables are pinned for the two MoE production configs — mixtral's 1-D expert
+parallelism and kimi-k2's 2-D (experts→model, expert_ff→data) weight
+sharding — plus the divisibility guards that replicate what the model axis
+can't divide. The ragged-attention tiling registry is keyed per mesh shape:
+single-device winners must never silently apply to sharded launches.
+"""
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get, get_reduced
+from repro.distributed.sharding import ShardingRules, serving_rules
+from repro.kernels import paged_attention as pa
+from repro.launch.mesh import make_test_mesh
+
+
+# ---------------------------------------------------------------------------
+# make_test_mesh provisioning contract (tests/conftest.py provides 8 devices)
+# ---------------------------------------------------------------------------
+
+
+def test_make_test_mesh_fails_loudly_when_underprovisioned(host_devices):
+    with pytest.raises(RuntimeError,
+                       match="xla_force_host_platform_device_count"):
+        make_test_mesh(data=4, model=4)        # 16 > the 8 fake host devices
+
+
+def test_make_test_mesh_shapes(host_devices):
+    m = make_test_mesh(data=1, model=4)
+    assert m.axis_names == ("data", "model") and m.shape["model"] == 4
+    m3 = make_test_mesh(data=2, model=2, pod=2)
+    assert m3.axis_names == ("pod", "data", "model")
+
+
+# ---------------------------------------------------------------------------
+# ShardingRules.spec edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_spec_suppresses_duplicate_mesh_axis(host_devices):
+    mesh = make_test_mesh(data=1, model=2)
+    rules = ShardingRules(mesh=mesh, table={"a": "model", "b": "model"})
+    assert rules.spec(("a", "b")) == P("model", None)
+    assert rules.spec(("b", "a")) == P("model", None)   # first use wins
+
+
+def test_spec_tuple_axis_membership_overlap(host_devices):
+    mesh = make_test_mesh(data=2, model=2, pod=2)
+    rules = ShardingRules(mesh=mesh,
+                          table={"batch": ("pod", "data"), "x": "data"})
+    # tuple claims both axes; "x" then overlaps the used set
+    assert rules.spec(("batch", "x")) == P(("pod", "data"), None)
+    # reversed: "data" is taken, so the tuple (overlapping it) is suppressed
+    assert rules.spec(("x", "batch")) == P("data", None)
+
+
+def test_spec_none_logical_axes(host_devices):
+    mesh = make_test_mesh(data=1, model=2)
+    rules = ShardingRules(mesh=mesh, table={"embed": None})
+    assert rules.spec((None, "embed", "missing")) == P(None, None, None)
+
+
+# ---------------------------------------------------------------------------
+# serving_rules tables for the MoE production configs
+# ---------------------------------------------------------------------------
+
+
+def test_mixtral_expert_parallel_table(host_devices):
+    """mixtral-8x7b (8 experts, ~90 GB): 1-D expert parallelism — experts
+    shard over model, per-expert FFN hidden replicated, dispatch buffer over
+    the batch axes."""
+    mesh = make_test_mesh(data=2, model=4)
+    t = serving_rules(mesh, get("mixtral-8x7b")).table
+    assert t["expert"] == "model"
+    assert t["expert_ff"] is None
+    assert t["dispatch"] == "data"
+    assert t["kv_heads"] == "model"            # 8 kv heads % 4 == 0
+
+
+def test_kimi_big_config_gets_2d_expert_table(host_devices):
+    """kimi-k2-1t-a32b (384 experts, ~2 TB bf16): weights must shard over
+    BOTH mesh axes — experts→model and expert_ff→data — leaving the
+    dispatch dim no axis (DESIGN.md §6/§17)."""
+    mesh = make_test_mesh(data=2, model=4)
+    rules = serving_rules(mesh, get("kimi-k2-1t-a32b"))
+    t = rules.table
+    assert t["expert"] == "model"
+    assert t["expert_ff"] == "data"
+    assert t["dispatch"] is None
+    # the resulting w_gate spec is genuinely 2-D over the mesh
+    assert rules.spec(("expert", "embed", "expert_ff")) == \
+        P("model", None, "data")
+
+
+def test_kv_head_divisibility_guard_replicates(host_devices):
+    """kimi smoke has 2 kv heads: model=4 can't divide them, so the KV
+    cache replicates rather than producing a ragged shard."""
+    mesh = make_test_mesh(data=1, model=4)
+    t = serving_rules(mesh, get_reduced("kimi-k2-1t-a32b")).table
+    assert t["kv_heads"] is None
+    assert t["expert"] == "model"              # 8 smoke experts % 4 == 0
+
+
+# ---------------------------------------------------------------------------
+# mesh-keyed ragged-attention tiling registry
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def clean_registry():
+    saved = dict(pa._TUNED_TILINGS)
+    pa._TUNED_TILINGS.clear()
+    yield
+    pa._TUNED_TILINGS.clear()
+    pa._TUNED_TILINGS.update(saved)
+
+
+def test_mesh_tiling_key_is_shape_not_devices(host_devices):
+    assert pa.mesh_tiling_key(None) is None
+    key = pa.mesh_tiling_key(make_test_mesh(data=1, model=2))
+    assert key == (("data", 1), ("model", 2))
+    # same shape, freshly built mesh -> same key (device ids don't matter)
+    assert key == pa.mesh_tiling_key(make_test_mesh(data=1, model=2))
+
+
+def test_tilings_keyed_per_mesh_no_fallback(clean_registry, host_devices):
+    tp2 = pa.mesh_tiling_key(make_test_mesh(data=1, model=2))
+    pa.set_ragged_tilings({(8, 4): (2, 4)})              # single-device
+    pa.set_ragged_tilings({(8, 4): (4, 8)}, mesh=tp2)
+    assert pa.get_ragged_tiling(8, 4) == (2, 4)
+    assert pa.get_ragged_tiling(8, 4, mesh=tp2) == (4, 8)
+    # an untuned mesh shape gets the safe default — never another mesh's
+    # winners (the silent-reuse bug this registry keying exists to prevent)
+    tp4 = pa.mesh_tiling_key(make_test_mesh(data=1, model=4))
+    assert pa.get_ragged_tiling(8, 4, mesh=tp4) == (1, None)
+
+
+def test_set_tilings_clears_only_its_own_mesh(clean_registry, host_devices):
+    tp2 = pa.mesh_tiling_key(make_test_mesh(data=1, model=2))
+    pa.set_ragged_tilings({(8, 4): (2, 4)})
+    pa.set_ragged_tilings({(8, 4): (4, 8)}, mesh=tp2)
+    pa.set_ragged_tilings({(16, 8): (8, 4)}, mesh=tp2)   # re-tune tp2 only
+    assert pa.get_ragged_tiling(8, 4) == (2, 4)          # untouched
+    assert pa.get_ragged_tiling(8, 4, mesh=tp2) == (1, None)  # cleared
+    assert pa.get_ragged_tiling(16, 8, mesh=tp2) == (8, 4)
+
+
+def test_autotuner_installs_under_mesh_key(clean_registry, host_devices,
+                                           tmp_path):
+    """The analytic autotuner prices the per-shard geometry and installs
+    winners under that mesh's registry key only (DESIGN.md §17)."""
+    from benchmarks.autotune_attention import tune_and_install
+
+    tp2 = pa.mesh_tiling_key(make_test_mesh(data=1, model=2))
+    _, w_single = tune_and_install(smoke=True,
+                                   json_path=str(tmp_path / "a.json"))
+    _, w_tp2 = tune_and_install(smoke=True, mesh_key=tp2,
+                                json_path=str(tmp_path / "b.json"))
+    assert w_single and w_tp2
+    for (t, p), kbtb in w_single.items():
+        assert pa.get_ragged_tiling(t, p) == kbtb
+    for (t, p), kbtb in w_tp2.items():
+        assert pa.get_ragged_tiling(t, p, mesh=tp2) == kbtb
