@@ -173,13 +173,12 @@ def run(quick: bool = True, smoke: bool = False) -> list[dict]:
             "dispatch_ratio": round(
                 per_mode["sequential"]["dispatches_per_step"]
                 / max(per_mode["fused"]["dispatches_per_step"], 1e-9), 2),
-            # the fused mode's own dispatches/step, surfaced per speedup row
-            # so the summary's metrics block pins it at exactly 1.0: the
-            # rolled-up "dispatches_per_step" min/median/max mixes the
-            # sequential rows (3 launches/step) with the fused ones — its
-            # median 2.0 is that mixing, NOT a fused-path regression
-            # (tests/test_fused_executor.py asserts 1 dispatch/warm step
-            # across the bucket ladder)
+            # the fused mode's own dispatches/step, surfaced per speedup
+            # row so the summary pins it at exactly 1.0. (Historically the
+            # summary pooled sequential rows' 3 launches/step with fused
+            # rows' 1/step into a "median 2.0" artifact; rollups are now
+            # segmented by label, and tests/test_fused_executor.py asserts
+            # 1 dispatch/warm step across the bucket ladder)
             "fused_dispatches_per_step":
                 per_mode["fused"]["dispatches_per_step"],
             "tilings": tilings,

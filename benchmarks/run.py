@@ -33,6 +33,7 @@ _TRAJECTORY_KEYS = (
     "default_cost_us", "modeled_step_ms",
     "goodput_ratio", "completed", "shed", "retried", "crashes",
     "detections", "warm_joins",
+    "modeled_tokens_per_s", "spec_speedup", "acceptance", "tokens_per_round",
 )
 
 
@@ -42,29 +43,43 @@ def write_bench_summary(name: str, rows: list[dict],
 
     Per numeric trajectory column present in ``rows``: min/median/max over
     the rows that carry it, plus a per-mode/system breakdown when rows are
-    labeled — small, stable, and diffable across commits.
+    labeled. Metric rollups are SEGMENTED BY LABEL: a key carried by rows of
+    more than one label (mode/system) is reported only per label — pooling
+    incomparable populations into one median produced artifacts like the
+    BENCH_hybrid_step.json "median 2.0 dispatches/step" (sequential rows'
+    N-dispatch steps averaged against the fused path's 1.0). Keys carried by
+    a single population still land in the top-level ``metrics``.
     """
     import statistics
 
     def numeric(v):
         return isinstance(v, (int, float)) and not isinstance(v, bool)
 
+    def stats(vals):
+        return {"min": min(vals), "median": statistics.median(vals),
+                "max": max(vals)}
+
+    def label_of(r):
+        # unlabeled rows form their own pseudo-population
+        lab = r.get("mode") or r.get("system")
+        return str(lab) if lab else None
+
     metrics = {}
     for key in _TRAJECTORY_KEYS:
-        vals = [r[key] for r in rows if numeric(r.get(key))]
-        if vals:
-            metrics[key] = {"min": min(vals),
-                            "median": statistics.median(vals),
-                            "max": max(vals)}
-    by_label = {}
-    for r in rows:
-        label = r.get("mode") or r.get("system")
-        if not label:
+        carriers = [r for r in rows if numeric(r.get(key))]
+        if not carriers:
             continue
-        entry = by_label.setdefault(str(label), {})
-        for key in _TRAJECTORY_KEYS:
-            if numeric(r.get(key)) and key not in entry:
-                entry[key] = r[key]
+        if len({label_of(r) for r in carriers}) == 1:
+            metrics[key] = stats([r[key] for r in carriers])
+    by_label = {}
+    for key in _TRAJECTORY_KEYS:
+        groups: dict = {}
+        for r in rows:
+            lab = label_of(r)
+            if lab is not None and numeric(r.get(key)):
+                groups.setdefault(lab, []).append(r[key])
+        for lab, vals in groups.items():
+            by_label.setdefault(lab, {})[key] = stats(vals)
     out = {"bench": name, "n_rows": len(rows), "headline": headline,
            "metrics": metrics}
     if by_label:
@@ -203,6 +218,14 @@ def _headline(name: str, rows: list[dict]) -> str:
                     f"{seq['dispatches']} -> {multi['dispatches']} "
                     f"(real h8: {by['real-h8']['steps_per_dispatch']} "
                     f"steps/dispatch)")
+        if name == "spec_decode":
+            hd = next(r for r in rows if r.get("mode") == "headline")
+            fg = next(r for r in rows if r.get("mode") == "fairness-guard")
+            return (f"decode tok/s x{hd['spec_speedup']} @gamma="
+                    f"{hd['gamma']} acc={hd['acceptance']} | vtc "
+                    f"interactive_p99_vs_isolated spec="
+                    f"{fg['interactive_p99_vs_isolated']}x "
+                    f"base={fg['baseline_p99_vs_isolated']}x")
     except (StopIteration, KeyError, ZeroDivisionError):
         pass
     return f"rows={len(rows)}"
@@ -220,7 +243,8 @@ def main() -> None:
                    chaos_bench, cluster_bench, cost_model_bench, disagg_bench,
                    fairness_bench, goodput_bench, hybrid_step_bench,
                    latency_bench, prefix_cache_bench, roofline_report,
-                   slo_grid_bench, tp_scaling_bench, unfairness_bench)
+                   slo_grid_bench, spec_decode_bench, tp_scaling_bench,
+                   unfairness_bench)
     benches = {
         "cost_model": cost_model_bench.run,      # paper §3.2 accuracy claim
         "unfairness": unfairness_bench.run,      # Fig 1/2
@@ -234,6 +258,7 @@ def main() -> None:
         "hybrid_step": hybrid_step_bench.run,    # DESIGN.md §11 fused step
         "tp_step": tp_scaling_bench.run,         # DESIGN.md §17 TP scaling
         "async_pipeline": async_pipeline_bench.run,  # DESIGN.md §12
+        "spec_decode": spec_decode_bench.run,    # DESIGN.md §18 speculation
         "fairness": fairness_bench.run,          # DESIGN.md §13 VTC stack
         "disagg": disagg_bench.run,              # DESIGN.md §15 P/D split
         "chaos": chaos_bench.run,                # DESIGN.md §16 fault plane

@@ -73,6 +73,16 @@ class ClusterConfig:
     host_overhead: float = 0.0
     commit_horizon: int = 1
     predicted_prefill_tokens: int = 0
+    # speculative decode (DESIGN.md §18): γ drafts per sequence per round on
+    # all-decode batches; 0 disables (bit-identical to before). The sim data
+    # plane models acceptance as a truncated geometric with per-draft rate
+    # ``spec_acceptance`` and prices drafting at ``spec_draft_frac`` of a
+    # same-shape target step; ``spec_floor`` seeds the capacity layer's
+    # pessimistic acceptance estimator.
+    speculate: int = 0
+    spec_acceptance: float = 0.7
+    spec_draft_frac: float = 0.15
+    spec_floor: float = 0.0
     seed: int = 0
     # disaggregated prefill/decode serving (DESIGN.md §15): a
     # ``repro.disagg.DisaggConfig`` splits the ranks into a prefill pool
@@ -186,8 +196,13 @@ class Cluster:
             pipeline_depth=cfg.pipeline_depth,
             host_overhead=cfg.host_overhead,
             commit_horizon=cfg.commit_horizon,
-            predicted_prefill_tokens=cfg.predicted_prefill_tokens)
-        executor = SimExecutor(true, seed=cfg.seed * 131 + rank)
+            predicted_prefill_tokens=cfg.predicted_prefill_tokens,
+            speculate=cfg.speculate,
+            spec_draft_frac=cfg.spec_draft_frac,
+            spec_floor=cfg.spec_floor)
+        executor = SimExecutor(true, seed=cfg.seed * 131 + rank,
+                               spec_acceptance=cfg.spec_acceptance,
+                               spec_draft_frac=cfg.spec_draft_frac)
         if cfg.chaos is not None:
             # stragglers + transient page pressure injected at the
             # executor boundary (DESIGN.md §16) — the engine above is

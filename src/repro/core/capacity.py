@@ -68,7 +68,9 @@ def commit_horizon(tasks: Sequence[SchedTask], now: float,
                    model: LinearCostModel, *, max_horizon: int,
                    ttft_slo: float, predicted_prefill_tokens: int = 0,
                    safety: float = 1.0, free_pages: Optional[int] = None,
-                   page_size: int = 0, n_shards: int = 1) -> int:
+                   page_size: int = 0, n_shards: int = 1,
+                   speculate: int = 0, acceptance: float = 0.0,
+                   draft_frac: float = 0.0) -> int:
     """Safe multi-step decode commitment depth (DESIGN.md §12).
 
     Returns the largest ``H <= max_horizon`` such that committing the
@@ -107,6 +109,21 @@ def commit_horizon(tasks: Sequence[SchedTask], now: float,
     The KV page bound is deliberately NOT scaled — page IDs are global
     under TP (only the per-page head slice is shard-local), so the pool
     drains at the same page rate regardless of shard count.
+
+    ``speculate`` = γ prices *speculative* committed rounds (DESIGN.md
+    §18): each round drafts γ candidates and verifies γ+1 positions per
+    sequence, so a round computes ``n·(γ+1) + ceil(n·γ·draft_frac)``
+    token-equivalents (``draft_frac`` = draft-pass cost as a fraction of
+    a target-pass token) while *emitting* an expected ``1 + acceptance·γ``
+    tokens per sequence. The emission allowance each round earns grows at
+    that expected rate, so the caller must pass a pessimistic
+    ``acceptance`` (the engine uses an EWMA floored at its cold-start
+    value): overstating acceptance is the only way a TPOT envelope can be
+    busted, understating only shrinks H. The KV page bound is
+    reservation-based — every round reserves γ+1 slots per sequence
+    regardless of acceptance, so a cold-start acceptance collapse can
+    never outrun the page pool. ``speculate=0`` is bitwise the
+    non-speculative arithmetic above.
     """
     if max_horizon <= 1 or not tasks:
         return 1
@@ -119,19 +136,32 @@ def commit_horizon(tasks: Sequence[SchedTask], now: float,
     ctx0 = sum(contexts)
     slacks = [slo.slack(t, now) for t in decodes]
     tpots = [t.tpot_slo for t in decodes]
+    gamma = max(int(speculate), 0)
+    if gamma:
+        # per-round token-equivalents, reserved KV slots, and pessimistic
+        # context growth (every drafted slot counted, as if all accepted)
+        emit_rate = 1.0 + max(min(acceptance, 1.0), 0.0) * gamma
+        round_tokens = n * (gamma + 1) + math.ceil(n * gamma * draft_frac)
+        slots = gamma + 1
+    else:
+        emit_rate = 1.0
+        round_tokens = n
+        slots = 1
     reserve = (model.step_time(predicted_prefill_tokens, 0)
                if predicted_prefill_tokens > 0 else 0.0)
     cum = 0.0
     h = 0
     while h < max_horizon:
         if (free_pages is not None and page_size > 0
-                and _pages_needed(contexts, h + 1, page_size) > free_pages):
+                and _pages_needed(contexts, (h + 1) * slots,
+                                  page_size) > free_pages):
             return max(h, 1)          # step h+1 would outrun the page pool
         # contexts grow by one token per decode per committed step
-        dt = model.step_time(n, ctx0 + h * n)
+        # (γ+1 reserved slots per round under speculation — pessimistic)
+        dt = model.step_time(round_tokens, ctx0 + h * n * slots)
         cum += dt
         for s, tp in zip(slacks, tpots):
-            if cum > safety * (s + h * tp):
+            if cum > safety * (s + h * emit_rate * tp):
                 return max(h, 1)      # h-th token would leave its envelope
         if reserve and cum + reserve > safety * ttft_slo:
             return max(h, 1)          # would bust a predicted prefill's TTFT

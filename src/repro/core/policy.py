@@ -244,6 +244,22 @@ class VTCAdmission:
             if it.req_id in req_ids and it.kind is TaskKind.DECODE:
                 self._charge(it.req_id, steps, it.kind, 1.0)
 
+    def charge_accepted_tokens(self, plan: BatchPlan, extras) -> None:
+        """Bill a speculative dispatch's *accepted* tokens exactly
+        (DESIGN.md §18): ``extras[req_id]`` is the token count the run
+        emitted beyond the plan's nominal 1-token grant — only verified
+        emissions, never rejected drafts (whose compute rides the measured
+        step time, priced by ``commit_horizon``'s draft_frac term, not the
+        fairness counters). Negative values reverse the top-up on rollback.
+        Iterates in plan order, charging each request's whole extra as ONE
+        delta — the same float ops as ``charge_extra_decode`` when every
+        extra equals ``steps``, which is what keeps committed counters
+        byte-equal to a never-speculating run at acceptance 0."""
+        for it in plan.items:
+            e = extras.get(it.req_id, 0)
+            if e and it.kind is TaskKind.DECODE:
+                self._charge(it.req_id, e, it.kind, 1.0)
+
     def refund_request(self, req_id: int) -> None:
         """Return a shed request's *entire* net charge (DESIGN.md §16).
 
@@ -522,9 +538,10 @@ class SchedulerStack:
     def probe(self, now: float, tasks: Sequence[SchedTask]) -> BatchPlan:
         """Side-effect-free schedule preview: the plan ``schedule`` would
         form, without charging the admission stage. The engine's
-        commit-horizon oracle (DESIGN.md §12) probes per internal step to
-        ask what lock-step would form next; billing those probes would
-        double-charge tenants for tokens the horizon top-up already covers.
+        commit-horizon oracle (DESIGN.md §12) and the speculative-round sim
+        oracle (§18) probe per internal step/round to ask what lock-step
+        would form next; billing those probes would double-charge tenants
+        for tokens the horizon/accepted-token top-ups already cover.
         Skips the admission filter — sound for the all-decode task sets the
         horizon probe passes (no shipped admission stage ever excludes a
         decode), but a custom decode-filtering admission policy would need
@@ -549,6 +566,14 @@ class SchedulerStack:
         fn = getattr(self.admission, "charge_extra_decode", None)
         if fn is not None and req_ids and steps:
             fn(plan, req_ids, steps)
+
+    def charge_accepted_tokens(self, plan: BatchPlan, extras) -> None:
+        """Bill (or, negative, reverse) the accepted tokens a speculative
+        dispatch emitted beyond the nominal grants (DESIGN.md §18). No-op
+        for admission stages without counters (FCFS)."""
+        fn = getattr(self.admission, "charge_accepted_tokens", None)
+        if fn is not None and extras:
+            fn(plan, extras)
 
     def tenant_debt(self) -> dict:
         """Per-tenant fairness debt from the admission stage ({} for FCFS);

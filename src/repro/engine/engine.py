@@ -41,6 +41,7 @@ from ..core.schedulers import Scheduler
 from ..core.types import BatchPlan, TaskKind
 from .metrics import RequestMetrics, measure
 from .request import Request, RequestState
+from .spec_decode import AcceptanceEWMA
 
 
 @dataclasses.dataclass
@@ -68,6 +69,17 @@ class EngineConfig:
     # horizon guard prices committed steps with the per-shard cost model
     # (marginal coefficients / cost_shards). 1 = single-device budgets.
     cost_shards: int = 1
+    # -- speculative decode (DESIGN.md §18) ----------------------------
+    # draft γ candidate tokens per sequence per committed round and verify
+    # them in one target pass; 0 disables speculation. Real executors need
+    # set_draft() installed; sim executors model acceptance stochastically.
+    speculate: int = 0
+    # draft-pass cost as a fraction of a target-pass token, for the horizon
+    # guard's round pricing (self-speculative ≈ draft layers / total layers)
+    spec_draft_frac: float = 0.15
+    # cold-start acceptance the EWMA floors at; 0.0 = fully pessimistic
+    # (speculative rounds earn no extra emission allowance until measured)
+    spec_floor: float = 0.0
     # -- preemption & aged requeue (DESIGN.md §13) ---------------------
     # evict a running request's KV pages (refcount/COW-aware) to unblock
     # starving deferred work; the victim re-prefills its known prefix on
@@ -118,6 +130,10 @@ class InflightStep:
     # scheduler.observe already applied at begin time (async forming keeps
     # the calibration in lock-step order even before completion)
     observed: bool = False
+    # speculative dispatch (DESIGN.md §18): req_id -> total tokens the run
+    # emitted (accepted drafts + verified fallbacks). None = not speculative.
+    # Internal steps then carry per-round token LISTS in ``emitted``.
+    spec: Optional[dict] = None
 
     @property
     def horizon(self) -> int:
@@ -187,6 +203,12 @@ class Engine:
         self.preemptions = 0
         self.defer_events = 0       # total item-deferrals observed (§13)
         self.sheds = 0              # brownout terminations (DESIGN.md §16)
+        # pessimistic acceptance estimator the horizon guard prices
+        # speculative rounds with (DESIGN.md §18)
+        self._spec_ewma = AcceptanceEWMA(cfg.spec_floor)
+        self.spec_rounds = 0        # speculative rounds committed
+        self.spec_accepted = 0      # drafts accepted across all rounds
+        self.spec_drafted = 0       # drafts proposed across all rounds
 
     @property
     def inflight(self) -> Optional[InflightStep]:
@@ -293,9 +315,17 @@ class Engine:
                     if req.state is RequestState.FINISHED:
                         continue
                     tok = ist.emitted.get(it.req_id)
-                    if tok is not None:
-                        req.generated_tokens.append(tok)
-                    req.advance(it.n_tokens if k == 0 else 1, t)
+                    if isinstance(tok, list):
+                        # speculative round (§18): a per-round accepted run;
+                        # an empty list is a capped round (no progress)
+                        if tok:
+                            req.generated_tokens.extend(
+                                x for x in tok if x is not None)
+                            req.advance(len(tok), t)
+                    else:
+                        if tok is not None:
+                            req.generated_tokens.append(tok)
+                        req.advance(it.n_tokens if k == 0 else 1, t)
                     if req.state is RequestState.FINISHED:
                         active.remove(it.req_id)   # predicted completion
         return proj, active
@@ -340,8 +370,17 @@ class Engine:
         if not plan.items:
             return None
 
-        horizon = self._plan_horizon(plan, tasks, active_proj, proj, t_launch)
-        if horizon > 1 and hasattr(self.executor, "execute_multi"):
+        gamma = self._spec_gamma(plan, active_proj)
+        horizon = self._plan_horizon(plan, tasks, active_proj, proj, t_launch,
+                                     gamma)
+        spec_extras = None
+        if gamma > 0 and hasattr(self.executor, "execute_multi"):
+            internal, deferred, spec_extras = self._execute_spec(
+                plan, proj, t_launch, horizon, gamma)
+        elif gamma > 0:
+            internal, deferred, spec_extras = self._run_spec_sim(
+                plan, proj, t_launch, horizon, gamma)
+        elif horizon > 1 and hasattr(self.executor, "execute_multi"):
             internal, deferred = self._execute_multi(plan, proj, t_launch,
                                                      horizon)
         elif horizon > 1:
@@ -357,7 +396,16 @@ class Engine:
             refund = getattr(self.sched, "refund", None)
             if refund is not None:
                 refund(plan, deferred)
-        if len(internal) > 1:
+        if spec_extras is not None:
+            # VTC bills ACCEPTED tokens exactly (DESIGN.md §18): top up each
+            # request by its emissions beyond the plan's 1-token grant.
+            # Rejected drafts bill nothing here — their compute rides the
+            # measured step times the calibration observes.
+            top_up = getattr(self.sched, "charge_accepted_tokens", None)
+            if top_up is not None:
+                top_up(plan, {rid: e - 1 for rid, e in spec_extras.items()
+                              if rid not in deferred and e > 1})
+        elif len(internal) > 1:
             # a committed horizon serves len(internal) tokens per decode
             # item but on_schedule billed only the plan's 1-token grants —
             # top up the admission counters (DESIGN.md §13)
@@ -367,7 +415,8 @@ class Engine:
                               if it.req_id not in deferred},
                        len(internal) - 1)
 
-        observed = horizon > 1 and not hasattr(self.executor, "execute_multi")
+        observed = ((horizon > 1 or gamma > 0)
+                    and not hasattr(self.executor, "execute_multi"))
         if depth > 1 and not observed:
             # async forming: feed the calibration now so the next plan —
             # formed before this dispatch completes — sees the same model
@@ -384,9 +433,27 @@ class Engine:
         self.n_dispatches += 1
         self.host_time += self.cfg.host_overhead
         inf = InflightStep(plan, t_launch, t_form, tuple(internal), deferred,
-                           observed)
+                           observed, spec=spec_extras)
         self.inflight_q.append(inf)
         return inf
+
+    def _spec_gamma(self, plan: BatchPlan, active_proj) -> int:
+        """γ for this plan: ``cfg.speculate`` when the batch is a pure
+        all-active decode batch and the executor can speculate (a draft
+        adapter installed, or the sim's stochastic acceptance model); 0
+        otherwise — prefill-bearing and partial batches run the classic
+        paths (DESIGN.md §18)."""
+        g = self.cfg.speculate
+        if g <= 0:
+            return 0
+        ids = {it.req_id for it in plan.items}
+        if (any(it.kind is not TaskKind.DECODE for it in plan.items)
+                or ids != set(active_proj)):
+            return 0
+        if hasattr(self.executor, "execute_multi"):
+            return g if getattr(self.executor, "draft", None) is not None \
+                else 0
+        return g if hasattr(self.executor, "execute_spec") else 0
 
     def _stamp_deferred(self, tasks: list, now: float) -> list:
         """Age deferred tasks; hold back fresh prefills once one starves.
@@ -422,9 +489,16 @@ class Engine:
         return [t for t in tasks if not held(t)]
 
     def _plan_horizon(self, plan: BatchPlan, tasks, active_proj, proj,
-                      t_launch: float) -> int:
-        """Slack-bounded decode commitment depth for this plan (§12)."""
-        if self.cfg.commit_horizon <= 1:
+                      t_launch: float, gamma: int = 0) -> int:
+        """Slack-bounded decode commitment depth for this plan (§12).
+
+        With ``gamma > 0`` the returned depth counts speculative ROUNDS:
+        ``commit_horizon`` prices each round at γ+1 verify tokens plus the
+        draft fraction and grows the per-round emission allowance by the
+        pessimistic EWMA acceptance estimate (§18) — a single round
+        (depth 1) is still a speculative dispatch.
+        """
+        if self.cfg.commit_horizon <= 1 and gamma == 0:
             return 1
         ids = {it.req_id for it in plan.items}
         if (any(it.kind is not TaskKind.DECODE for it in plan.items)
@@ -437,13 +511,20 @@ class Engine:
         alloc = getattr(self.executor, "alloc", None)
         h = capacity.commit_horizon(
             tasks, t_launch, self.sched.model,
-            max_horizon=self.cfg.commit_horizon,
+            max_horizon=max(self.cfg.commit_horizon, 1),
             ttft_slo=self.cfg.ttft_slo,
             predicted_prefill_tokens=self.cfg.predicted_prefill_tokens,
             free_pages=None if alloc is None else alloc.free_blocks,
             page_size=0 if alloc is None else alloc.block_size,
-            n_shards=self.cfg.cost_shards)
-        # nobody may finish mid-horizon: a completion changes the batch
+            n_shards=self.cfg.cost_shards,
+            speculate=gamma,
+            acceptance=self._spec_ewma.value if gamma else 0.0,
+            draft_frac=self.cfg.spec_draft_frac if gamma else 0.0)
+        # nobody may finish mid-horizon: a completion changes the batch.
+        # (Speculative rounds emit >= 1 token each, so this also guarantees
+        # a run at acceptance 0 never clamps — counter parity with the
+        # never-speculating engine, §18; higher acceptance finishes are
+        # capped in-loop by the executor's max_emit budget.)
         h = min(h, min(proj[i].max_new_tokens - proj[i].generated
                        for i in ids))
         if h > 1 and hasattr(self.executor, "execute_multi"):
@@ -454,10 +535,13 @@ class Engine:
                       float("inf"), self.arrival_hint)
             if nxt < float("inf"):
                 n = len(ids)
+                slots = gamma + 1
+                per_round = n * slots
                 ctx0 = sum(t.cost_context() for t in tasks)
                 cum, fit = 0.0, 0
                 while fit < h:
-                    cum += self.sched.model.step_time(n, ctx0 + fit * n)
+                    cum += self.sched.model.step_time(
+                        per_round, ctx0 + fit * per_round)
                     if t_launch + cum > nxt:
                         break
                     fit += 1
@@ -536,6 +620,93 @@ class Engine:
                     for k, (dt, nt, ctx) in enumerate(steps)]
         return internal, deferred
 
+    def _execute_spec(self, plan: BatchPlan, proj, t_launch: float,
+                      rounds: int, gamma: int) -> tuple[list, frozenset, dict]:
+        """Real data plane: ONE device dispatch for ``rounds`` speculative
+        draft/verify rounds (DESIGN.md §18). Returns (internal, deferred,
+        extras) where extras maps req_id -> total emitted tokens."""
+        steps, emitted_rounds = self.executor.execute_multi(
+            plan, proj, t_launch, rounds, speculate=gamma)
+        deferred = frozenset(getattr(self.executor, "last_deferred", ()))
+        internal = [InternalStep(dt, nt, ctx, plan.predicted_time,
+                                 emitted_rounds[k] if k < len(emitted_rounds)
+                                 else {})
+                    for k, (dt, nt, ctx) in enumerate(steps)]
+        extras: dict[int, int] = {}
+        for em in emitted_rounds:
+            for rid, toks in em.items():
+                extras[rid] = extras.get(rid, 0) + len(toks)
+        acc = getattr(self.executor, "last_spec_accepted", 0)
+        drf = getattr(self.executor, "last_spec_drafted", 0)
+        self._spec_ewma.update(acc, drf)
+        self.spec_rounds += len(steps)
+        self.spec_accepted += acc
+        self.spec_drafted += drf
+        return internal, deferred, extras
+
+    def _run_spec_sim(self, plan: BatchPlan, proj, t_launch: float,
+                      rounds: int, gamma: int) -> tuple[list, frozenset, dict]:
+        """Commit up to ``rounds`` speculative rounds against the sim
+        executor's stochastic acceptance world model (DESIGN.md §18).
+
+        Mirrors ``_run_horizon_sim``: after each round the engine re-checks
+        what lock-step would do next (a completion, an arrival, the
+        scheduler re-forming) and truncates there — that is what pins the
+        pipelined engine's committed counters byte-equal to the lock-step
+        oracle's. Emitted token ids are unknown in sim, so internal steps
+        carry ``[None] × e`` placeholders (the counts are what the fairness
+        accounting and SLO metrics consume).
+        """
+        order = [it.req_id for it in plan.items]
+        local = {rid: proj[rid].speculative_copy() for rid in order}
+        internal: list[InternalStep] = []
+        extras = {rid: 0 for rid in order}
+        accepted = drafted = 0
+        cur = plan
+        t = t_launch
+        for k in range(rounds):
+            dt, acc = self.executor.execute_spec(cur, local, t, gamma)
+            nt = len(cur.items) * (gamma + 1)
+            ctx = sum(local[it.req_id].to_sched_task().cost_context()
+                      for it in cur.items)
+            t += dt
+            emitted: dict[int, list] = {}
+            for it in cur.items:
+                rid = it.req_id
+                req = local[rid]
+                e = min(acc[rid], req.max_new_tokens - req.generated)
+                emitted[rid] = [None] * e
+                extras[rid] += e
+                drafted += gamma
+                accepted += max(e - 1, 0)
+                if e:
+                    req.advance(e, t)
+            internal.append(InternalStep(dt, nt, ctx, cur.predicted_time,
+                                         emitted))
+            self.sched.observe(nt, ctx, dt)
+            if k == rounds - 1:
+                break
+            if any(local[rid].state is not RequestState.DECODE
+                   for rid in order):
+                break                 # a completion re-forms the batch
+            if ((self.pending and self.pending[0].arrival <= t)
+                    or self.arrival_hint <= t):
+                break                 # lock-step would admit it next round
+            # side-effect-free preview: billing a probe would double-charge
+            # the admission stage on top of charge_accepted_tokens (§13/§18)
+            probe = getattr(self.sched, "probe", self.sched.schedule)
+            nxt = probe(t, [local[r].to_sched_task() for r in order])
+            if ({it.req_id for it in nxt.items} != set(order)
+                    or any(it.kind is not TaskKind.DECODE or it.n_tokens != 1
+                           for it in nxt.items)):
+                break                 # scheduler would re-form the batch
+            cur = nxt
+        self._spec_ewma.update(accepted, drafted)
+        self.spec_rounds += len(internal)
+        self.spec_accepted += accepted
+        self.spec_drafted += drafted
+        return internal, frozenset(), extras
+
     def complete_step(self) -> StepRecord:
         """Apply the oldest in-flight dispatch; advance the clock to its end.
 
@@ -559,6 +730,17 @@ class Engine:
                     continue
                 req = self.requests[it.req_id]
                 tok = ist.emitted.get(it.req_id)
+                if isinstance(tok, list):
+                    # speculative round (§18): all-decode by construction;
+                    # an empty list is a capped round (no progress)
+                    if tok:
+                        req.generated_tokens.extend(
+                            x for x in tok if x is not None)
+                        req.advance(len(tok), t)
+                        ran_d += 1
+                    if req.state is RequestState.FINISHED:
+                        self._finish(req)
+                    continue
                 if tok is not None:
                     req.generated_tokens.append(tok)
                 was_prefill = req.state in (RequestState.QUEUED,
@@ -743,6 +925,17 @@ class Engine:
                         bad = i
                         break
                     req = proj[it.req_id] = base.speculative_copy()
+                if inf.spec is not None:
+                    # speculative dispatch (§18): the grant is the run's
+                    # actual emission count, applied at dispatch end
+                    grant = inf.spec.get(it.req_id, 0)
+                    if (req.state is not RequestState.DECODE
+                            or req.generated + grant > req.max_new_tokens):
+                        bad = i
+                        break
+                    if grant:
+                        req.advance(grant, inf.t_end)
+                    continue
                 grant = (it.n_tokens if it.kind is TaskKind.PREFILL
                          else inf.horizon)
                 if it.kind is TaskKind.PREFILL:
@@ -781,16 +974,28 @@ class Engine:
             ran = {it.req_id for it in inf.plan.items
                    if it.req_id not in inf.deferred}
             refund(inf.plan, ran)
-            top_up = getattr(self.sched, "charge_extra_decode", None)
-            if top_up is not None and inf.horizon > 1:
-                top_up(inf.plan, ran, -(inf.horizon - 1))
+            if inf.spec is not None:
+                # reverse the accepted-token top-up exactly (§18)
+                top_up = getattr(self.sched, "charge_accepted_tokens", None)
+                if top_up is not None:
+                    top_up(inf.plan, {rid: -(e - 1)
+                                      for rid, e in inf.spec.items()
+                                      if rid in ran and e > 1})
+            else:
+                top_up = getattr(self.sched, "charge_extra_decode", None)
+                if top_up is not None and inf.horizon > 1:
+                    top_up(inf.plan, ran, -(inf.horizon - 1))
         if hasattr(self.executor, "rollback_tokens"):
             for it in inf.plan.items:
                 if it.req_id in inf.deferred:
                     continue
-                n = (it.n_tokens if it.kind is TaskKind.PREFILL
-                     else inf.horizon)
-                self.executor.rollback_tokens(it.req_id, n)
+                if inf.spec is not None:
+                    n = inf.spec.get(it.req_id, 0)
+                else:
+                    n = (it.n_tokens if it.kind is TaskKind.PREFILL
+                         else inf.horizon)
+                if n:
+                    self.executor.rollback_tokens(it.req_id, n)
 
     def step(self) -> Optional[StepRecord]:
         """Lock-step driver: begin and complete one dispatch atomically."""

@@ -51,6 +51,11 @@ class SimExecutor:
     gc_pause_every: float = 0.0        # seconds of sim time between GC STWs
     gc_pause_len: float = 0.25
     seed: int = 0
+    # speculative decode world model (DESIGN.md §18): per-draft acceptance
+    # probability and the draft pass's cost as a fraction of a target-pass
+    # token (self-speculative ≈ truncated-layer depth / full depth)
+    spec_acceptance: float = 0.7
+    spec_draft_frac: float = 0.3
 
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
@@ -68,6 +73,39 @@ class SimExecutor:
             t += self.gc_pause_len          # stop-the-world GC (paper §4)
             self._next_gc = now + t + self.gc_pause_every
         return t, {}
+
+    def execute_spec(self, plan: BatchPlan, requests, now: float,
+                     gamma: int) -> tuple[float, dict]:
+        """ONE speculative round: γ drafts + one γ+1-wide verify pass.
+
+        Returns ``(dt, accepted)`` where ``accepted[req_id]`` is the round's
+        emitted-token count (1 verified fallback + leading accepted drafts,
+        a truncated-geometric draw at ``spec_acceptance``). The verify pass
+        prices like a Tq=γ+1 target step; drafting adds
+        ``spec_draft_frac × step_time(n·γ, ctx)``. RNG draw order is fixed
+        (jitter, then per-item acceptance in plan order) so lock-step and
+        pipelined engines replay identical worlds (DESIGN.md §18).
+        """
+        items = plan.decode_items
+        n = len(items)
+        if n == 0:
+            return 0.0, {}
+        ctx = sum(requests[it.req_id].to_sched_task().cost_context()
+                  for it in items)
+        t = (self.true_model.step_time(n * (gamma + 1), ctx)
+             + self.spec_draft_frac * self.true_model.step_time(n * gamma,
+                                                                ctx))
+        t *= float(self._rng.lognormal(0.0, self.noise_sigma))
+        if now + t >= self._next_gc:
+            t += self.gc_pause_len          # stop-the-world GC (paper §4)
+            self._next_gc = now + t + self.gc_pause_every
+        accepted = {}
+        for it in items:
+            a = 0
+            while a < gamma and self._rng.random() < self.spec_acceptance:
+                a += 1
+            accepted[it.req_id] = a + 1     # +1: the verified fallback token
+        return t, accepted
 
 
 def _bucket(n: int, lo: int = 8) -> int:
@@ -207,6 +245,14 @@ class PagedTransformerExecutor:
                                                   "tq_bucket", "pg_bucket"))
         self._multi_fn = jax.jit(self._multi_decode_step,
                                  static_argnames=("bsz", "horizon"))
+        # speculative decode (DESIGN.md §18): a draft adapter installed via
+        # set_draft() enables execute_multi(speculate=γ); force_reject
+        # zeroes every acceptance in-graph (the parity edge-case switch)
+        self.draft = None
+        self._spec_fn = None
+        self.spec_force_reject = False
+        self.last_spec_accepted = 0
+        self.last_spec_drafted = 0
         # items the last execute() could not serve (out of KV blocks); the
         # engine skips their progress so the scheduler retries them
         self.last_deferred: frozenset[int] = frozenset()
@@ -332,9 +378,11 @@ class PagedTransformerExecutor:
             window=self.cfg.window)
 
     def _forward(self, k_pages, v_pages, scales, x, positions, table, stable,
-                 ctx_lens, valid=None):
+                 ctx_lens, valid=None, n_layers=None):
+        """Paged forward. ``n_layers`` truncates the stack (early-exit
+        draft pass, DESIGN.md §18); None runs the full model."""
         cfg = self.cfg
-        for l in range(cfg.n_layers):
+        for l in range(cfg.n_layers if n_layers is None else n_layers):
             lp = jax.tree.map(lambda a: a[l], self.params["layers"])
             h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
             q, k, v = self._constrain_qkv(*attn_qkv(lp["attn"], h, positions,
@@ -397,6 +445,78 @@ class PagedTransformerExecutor:
             tokens = jnp.argmax(logits, -1).astype(jnp.int32)
             emitted.append(tokens)
         return k_pages, v_pages, scales, jnp.stack(emitted)
+
+    def _spec_multi_step(self, k_pages, v_pages, scales, dstate, tokens,
+                         positions, tables, stables, ctx_lens, max_emit,
+                         *, bsz, rounds, gamma, force_reject):
+        """``rounds`` speculative draft/verify rounds as ONE dispatch
+        (DESIGN.md §18).
+
+        Per round: γ draft steps (argmax fed forward) build the candidate
+        run; one Tq=γ+1 target pass — the chunked-prefill ragged-attention
+        contract — verifies the fed-back token plus every draft at once;
+        ``n_acc`` leading draft/target matches accept, the verified argmax
+        covers the rejection slot, and per-sequence state (token, position,
+        context) advances by ``eff = min(n_acc+1, remaining)`` in-graph.
+        A sequence whose emission budget (``max_emit``) is exhausted
+        freezes: eff=0, its rewrites are byte-idempotent, its state holds.
+        Emission is bit-identical to sequential greedy decode by
+        construction — the emitted tokens are always target argmaxes over
+        exactly the sequential pass's visible key set. ``force_reject``
+        zeroes every match (parity edge case: pure verified fallback).
+
+        Returns ``(k_pages, v_pages, scales, dstate, emitted (B, R·(γ+1)),
+        counts (B,), accs (R, B))`` — ``emitted[i, :counts[i]]`` is sequence
+        i's token stream, ``accs[r]`` its per-round emission.
+        """
+        draft = self.draft
+        G = gamma + 1
+        cur_tok, cur_pos, cur_ctx = tokens, positions, ctx_lens
+        counts = jnp.zeros(bsz, jnp.int32)
+        emitted = jnp.zeros((bsz, rounds * G), jnp.int32)
+        rows = jnp.arange(bsz)
+        accs = []
+        for _ in range(rounds):
+            feed = [cur_tok]
+            tok = cur_tok
+            for j in range(gamma):
+                k_pages, v_pages, scales, dstate, logits = draft.step(
+                    k_pages, v_pages, scales, dstate, tok, cur_pos + j,
+                    tables, stables, cur_ctx + j)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                feed.append(tok)
+            if draft.needs_sync_pass:
+                # write the last draft token's own draft-KV so a fully-
+                # accepting sequence enters the next round with complete
+                # draft context (logits discarded)
+                k_pages, v_pages, scales, dstate, _ = draft.step(
+                    k_pages, v_pages, scales, dstate, tok, cur_pos + gamma,
+                    tables, stables, cur_ctx + gamma)
+            feed = jnp.stack(feed, axis=1)                    # (B, G)
+            vpos = cur_pos[:, None] + jnp.arange(G)[None]
+            x = self._embed(feed)
+            k_pages, v_pages, scales, x = self._forward(
+                k_pages, v_pages, scales, x, vpos, tables, stables,
+                cur_ctx + gamma)
+            tgt = jnp.argmax(self._head(x), -1).astype(jnp.int32)  # (B, G)
+            match = (feed[:, 1:] == tgt[:, :-1]).astype(jnp.int32)
+            if force_reject:
+                match = match * 0
+            n_acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+            eff = jnp.minimum(n_acc + 1, jnp.maximum(max_emit - counts, 0))
+            idx = counts[:, None] + jnp.arange(G)[None]
+            idx = jnp.where(jnp.arange(G)[None] < eff[:, None], idx,
+                            rounds * G)                        # OOB → drop
+            emitted = emitted.at[rows[:, None], idx].set(tgt, mode="drop")
+            accs.append(eff)
+            counts = counts + eff
+            live = eff > 0
+            cur_tok = jnp.where(live, tgt[rows, jnp.maximum(eff - 1, 0)],
+                                cur_tok)
+            cur_pos = cur_pos + eff
+            cur_ctx = cur_ctx + eff
+        return (k_pages, v_pages, scales, dstate, emitted, counts,
+                jnp.stack(accs))
 
     def _scatter_packed(self, k_pages, v_pages, scales, layer, k, v,
                         tok_pages, tok_slots, tok_spages):
@@ -517,6 +637,9 @@ class PagedTransformerExecutor:
                     self.k_scales[:, s_old])
                 self.v_scales = self.v_scales.at[:, s_new].set(
                     self.v_scales[:, s_old])
+            if self.draft is not None:
+                # draft pools index the same global page ids (DESIGN.md §18)
+                self.draft.mirror_cow(old, new)
 
     def execute(self, plan: BatchPlan, requests, now: float) -> tuple[float, dict]:
         if self.mode == "sequential":
@@ -527,8 +650,17 @@ class PagedTransformerExecutor:
     # slack-bounded multi-step decode commitment (DESIGN.md §12)
     # ------------------------------------------------------------------
 
+    def set_draft(self, draft) -> None:
+        """Install a draft adapter (spec_decode) and build the jitted
+        speculative round body; enables ``execute_multi(speculate=γ)``."""
+        draft.bind(self)
+        self.draft = draft
+        self._spec_fn = jax.jit(
+            self._spec_multi_step,
+            static_argnames=("bsz", "rounds", "gamma", "force_reject"))
+
     def execute_multi(self, plan: BatchPlan, requests, now: float,
-                      horizon: int) -> tuple[list, dict]:
+                      horizon: int, *, speculate: int = 0) -> tuple[list, dict]:
         """Run ``horizon`` committed decode steps as ONE device dispatch.
 
         The engine only commits all-decode plans (``capacity.commit_horizon``
@@ -540,9 +672,24 @@ class PagedTransformerExecutor:
         observation stream) and ``emitted_seq`` maps req_id to its
         ``horizon`` output tokens. Out-of-blocks sequences defer whole
         (``last_deferred``), exactly like the single-step paths.
-        ``capture_logits`` is not supported here — the per-step logits
-        never leave the device.
+
+        ``speculate=γ > 0`` routes to the speculative draft/verify path
+        (``horizon`` becomes the round count; requires ``set_draft``); its
+        second return value is then one dict PER ROUND mapping req_id to
+        that round's emitted tokens (DESIGN.md §18).
+
+        ``capture_logits`` is not supported on any multi-step path — the
+        per-step logits never leave the device — and raises loudly rather
+        than silently returning stale ``last_logits``.
         """
+        if self.capture_logits:
+            raise ValueError(
+                "capture_logits is not supported on the multi-step/"
+                "speculative decode path: per-step logits never leave the "
+                "device (run with commit_horizon=1/speculate=0, or disable "
+                "capture_logits)")
+        if speculate > 0:
+            return self._execute_spec(plan, requests, now, horizon, speculate)
         assert not plan.prefill_items, "multi-step commitment is decode-only"
         t0 = time.perf_counter()
         deferred: set[int] = set()
@@ -595,6 +742,103 @@ class PagedTransformerExecutor:
                  for h in range(horizon)]
         return steps, emitted_seq
 
+    def _execute_spec(self, plan: BatchPlan, requests, now: float,
+                      rounds: int, gamma: int) -> tuple[list, list]:
+        """``rounds`` speculative draft/verify rounds as ONE dispatch.
+
+        Reserves the optimistic ``rounds·(γ+1)`` KV slots per sequence up
+        front (a mid-run dispatch cannot defer), launches the jitted round
+        loop, then reclaims every rejected slot with the slot-granular
+        ``shrink_to`` — post-run each sequence holds exactly
+        ``context - 1 + emitted`` slots, byte-identical to what a
+        non-speculative run emitting the same stream would hold. Returns
+        ``(steps, emitted_rounds)``: one §3.2 observation triple and one
+        {req_id: [tokens]} dict per round.
+        """
+        assert not plan.prefill_items, "speculative rounds are decode-only"
+        assert self.draft is not None, \
+            "execute_multi(speculate=γ) requires set_draft()"
+        t0 = time.perf_counter()
+        G = gamma + 1
+        deferred: set[int] = set()
+        ids, pre_lens = [], {}
+        for it in plan.decode_items:
+            pre = self.alloc.context_len(it.req_id)
+            if self._extend(it.req_id, rounds * G) is None:
+                deferred.add(it.req_id)   # out of KV blocks: defer & retry
+                continue
+            ids.append(it.req_id)
+            pre_lens[it.req_id] = pre
+        self.last_deferred = frozenset(deferred)
+        self.last_logits = {}
+        self.last_spec_accepted = self.last_spec_drafted = 0
+        if not ids:
+            return [(time.perf_counter() - t0, 0, 0)], [{}]
+        dstate = self.draft.prepare(ids, requests)
+        bsz = _bucket(len(ids), 4)
+        toks, pos, tables, ctx, memit = [], [], [], [], []
+        for rid in ids:
+            req = requests[rid]
+            last = req.generated_tokens[-1] if req.generated_tokens else 0
+            toks.append(last)
+            # the fed-back token's position: context counts it as emitted,
+            # but its K/V enters the cache only now
+            pos.append(req.context - 1)
+            tables.append(self._table(rid))
+            ctx.append(req.context)
+            memit.append(req.max_new_tokens - req.generated)
+        pad = bsz - len(ids)
+        toks += [0] * pad
+        pos += [0] * pad
+        ctx += [1] * pad
+        memit += [0] * pad                # padded rows never emit
+        tables += [tables[0] * 0] * pad
+        stables = [self._stable(rid) for rid in ids]
+        stables += [stables[0] * 0] * pad
+        self.n_dispatches += 1
+        self.compile_keys.add(("spec", bsz, rounds, gamma))
+        with self._step_ctx():
+            (self.k_pages, self.v_pages, scales, dstate, emitted, counts,
+             accs) = self._spec_fn(
+                self.k_pages, self.v_pages, self._scales_in(), dstate,
+                jnp.asarray(toks, jnp.int32), jnp.asarray(pos, jnp.int32),
+                jnp.stack(tables), jnp.stack(stables),
+                jnp.asarray(ctx, jnp.int32), jnp.asarray(memit, jnp.int32),
+                bsz=bsz, rounds=rounds, gamma=gamma,
+                force_reject=self.spec_force_reject)
+        self._set_scales(scales)
+        self.draft.finish(dstate)
+        em = np.asarray(emitted)                          # (bsz, R·G)
+        acc = np.asarray(accs)                            # (R, bsz)
+        cnt = np.asarray(counts)
+        dt = time.perf_counter() - t0
+        emitted_rounds: list[dict] = [{} for _ in range(rounds)]
+        for i, rid in enumerate(ids):
+            e = int(cnt[i])
+            off = 0
+            for r in range(rounds):
+                k = int(acc[r, i])
+                emitted_rounds[r][rid] = [int(x) for x in em[i, off:off + k]]
+                off += k
+            # reclaim rejected reservation: keep exactly the accepted run
+            self.alloc.shrink_to(rid, pre_lens[rid] + e)
+            self.draft.note_progress(rid, pre_lens[rid] + e)
+            self.last_spec_accepted += sum(
+                max(int(acc[r, i]) - 1, 0) for r in range(rounds))
+        self.last_spec_drafted = rounds * len(ids) * gamma
+        # per-round §3.2 observations: the verify pass computes n·(γ+1)
+        # target tokens per round (draft cost is folded into the measured
+        # dt — the calibration absorbs it as per-token overhead) over
+        # contexts grown by each round's actual acceptance, window-capped
+        base = [(requests[rid].context, requests[rid].window) for rid in ids]
+        steps, grown = [], np.zeros(len(ids), np.int64)
+        for r in range(rounds):
+            c = sum(min(b + int(g), w) if w else b + int(g)
+                    for (b, w), g in zip(base, grown))
+            steps.append((dt / rounds, len(ids) * G, c))
+            grown += acc[r, :len(ids)]
+        return steps, emitted_rounds
+
     def rollback_tokens(self, req_id: int, n_tokens: int) -> None:
         """Return a rolled-back dispatch's reserved KV slots (DESIGN.md §12).
 
@@ -603,6 +847,8 @@ class PagedTransformerExecutor:
         reservation is the whole rollback.
         """
         self.alloc.shrink(req_id, n_tokens)
+        if self.draft is not None:
+            self.draft.clamp(req_id, self.alloc.context_len(req_id))
 
     # ------------------------------------------------------------------
     # fused path: pack the whole plan, launch once
@@ -854,3 +1100,5 @@ class PagedTransformerExecutor:
 
     def release(self, req_id: int) -> None:
         self.alloc.release(req_id)
+        if self.draft is not None:
+            self.draft.release(req_id)

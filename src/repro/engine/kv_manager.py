@@ -142,6 +142,23 @@ class BlockAllocator:
         while len(tbl) > keep:
             self.release_page(tbl.pop())
 
+    def shrink_to(self, req_id: int, n_tokens: int) -> None:
+        """Slot-granular absolute truncation: keep exactly ``n_tokens``
+        reserved slots, freeing whole trailing pages past the new length
+        (speculative accept/reject, DESIGN.md §18).
+
+        ``shrink`` is relative (undo N reserved tokens); the speculative
+        path instead knows the *final* accepted length after a
+        variable-acceptance round — a round reserves γ+1 slots per
+        sequence optimistically and keeps only the accepted prefix.
+        Partially-filled tail pages stay mapped; the stale K/V in slots
+        past ``n_tokens`` is unreachable (attention masks by context
+        length) and is overwritten before it could ever be read.
+        """
+        have = self.lens.get(req_id, 0)
+        assert 0 <= n_tokens <= have, (req_id, n_tokens, have)
+        self.shrink(req_id, have - n_tokens)
+
     def release(self, req_id: int) -> None:
         for p in self.tables.pop(req_id, ()):
             self.release_page(p)

@@ -159,8 +159,13 @@ class Request:
             else:
                 self.state = RequestState.PREFILL
         else:
-            assert n_tokens == 1
-            self.generated += 1
-            self.output_times.append(finish_time)
+            # n_tokens > 1 is a speculative round's accepted run (DESIGN.md
+            # §18): all tokens of the round surface at the same step end, so
+            # they share one emission timestamp (matches how a non-speculating
+            # multi-step horizon stamps its per-step finish times at dt/H
+            # granularity — the SLO accounting stays per-token).
+            assert n_tokens >= 1
+            self.generated += n_tokens
+            self.output_times.extend([finish_time] * n_tokens)
             if self.generated >= self.max_new_tokens:
                 self.state = RequestState.FINISHED

@@ -272,7 +272,9 @@ def replay(trace, scheduler: str = "fairbatching", n_ranks: int = 1,
            report_interval: float = 0.05, prefix_cache_pages: int = 0,
            prefix_block: int = 128, pipeline_depth: int = 1,
            host_overhead: float = 0.0, commit_horizon: int = 1,
-           predicted_prefill_tokens: int = 0, seed: int = 0,
+           predicted_prefill_tokens: int = 0, speculate: int = 0,
+           spec_acceptance: float = 0.7, spec_draft_frac: float = 0.15,
+           spec_floor: float = 0.0, seed: int = 0,
            disagg=None, chaos=None, health=None, brownout_pab: float = 0.0,
            checkpoint_interval: float = 0.0,
            step_hook: Optional[Callable] = None) -> ReplayResult:
@@ -288,7 +290,11 @@ def replay(trace, scheduler: str = "fairbatching", n_ranks: int = 1,
     ``host_overhead``-second per-dispatch host cost; ``commit_horizon > 1``
     allows slack-bounded multi-step decode commitment (DESIGN.md §12) —
     with the defaults every engine is the classic synchronous one, bit for
-    bit. ``disagg`` (a ``repro.disagg.DisaggConfig``) splits the ranks into
+    bit. ``speculate > 0`` arms γ-draft speculative decode rounds on
+    all-decode batches (DESIGN.md §18) under the sim's stochastic
+    acceptance model (``spec_acceptance`` per draft, drafting priced at
+    ``spec_draft_frac`` of a target pass, ``spec_floor`` seeding the
+    capacity layer's pessimistic estimator). ``disagg`` (a ``repro.disagg.DisaggConfig``) splits the ranks into
     prefill/decode pools with live KV-page migration between them
     (DESIGN.md §15) — pair it with ``lb="disagg"`` for the two-stage
     router. ``chaos`` (a ``repro.chaos.FaultPlan``) arms the seeded fault
@@ -320,6 +326,8 @@ def replay(trace, scheduler: str = "fairbatching", n_ranks: int = 1,
                         host_overhead=host_overhead,
                         commit_horizon=commit_horizon,
                         predicted_prefill_tokens=predicted_prefill_tokens,
+                        speculate=speculate, spec_acceptance=spec_acceptance,
+                        spec_draft_frac=spec_draft_frac, spec_floor=spec_floor,
                         seed=seed, disagg=disagg, chaos=chaos, health=health,
                         brownout_pab=brownout_pab,
                         checkpoint_interval=checkpoint_interval, **kw)

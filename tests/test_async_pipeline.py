@@ -76,6 +76,78 @@ def test_commit_horizon_never_busts_an_envelope():
                        for t in tasks), f"h={h} under-commits"
 
 
+def test_commit_horizon_joint_bounds_property():
+    """Hypothesis sweep of the FULL constraint product — n_shards ×
+    free_pages × predicted_prefill_tokens × heterogeneous per-task
+    tpot_slo × speculative (γ, acceptance, draft_frac) — asserting the
+    returned H satisfies every documented constraint *independently*
+    (each check reimplemented here from the docstring, not shared with
+    the implementation): per-task envelopes under per-shard step pricing,
+    the acceptance-blind KV page reservation, and the predicted-prefill
+    TTFT reserve."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    from repro.core.cost_model import per_shard_model
+
+    task_st = st.tuples(st.floats(0.01, 0.5), st.sampled_from(
+        [0.02, 0.05, 0.15, 0.5]), st.integers(16, 4000))
+
+    @hyp.given(st.lists(task_st, min_size=1, max_size=8),
+               st.sampled_from([1, 2, 4, 8]),          # n_shards
+               st.one_of(st.none(), st.integers(0, 64)),  # free_pages
+               st.sampled_from([8, 16]),               # page_size
+               st.sampled_from([0, 256, 1024]),        # predicted prefill
+               st.integers(0, 4),                      # gamma
+               st.floats(0.0, 1.0),                    # acceptance
+               st.floats(0.0, 0.5))                    # draft_frac
+    @hyp.settings(max_examples=120, deadline=None)
+    def check(specs, n_shards, free_pages, page_size, predicted, gamma,
+              acceptance, draft_frac):
+        tasks = [_decode_task(i, slack_s=s, tpot=tp, ctx=c)
+                 for i, (s, tp, c) in enumerate(specs)]
+        h = commit_horizon(tasks, 0.0, TRUE, max_horizon=32, ttft_slo=0.5,
+                           predicted_prefill_tokens=predicted,
+                           free_pages=free_pages, page_size=page_size,
+                           n_shards=n_shards, speculate=gamma,
+                           acceptance=acceptance, draft_frac=draft_frac)
+        assert 1 <= h <= 32
+        model = per_shard_model(TRUE, n_shards)
+        n = len(tasks)
+        contexts = [t.cost_context() for t in tasks]
+        ctx0 = sum(contexts)
+        if gamma:
+            emit = 1.0 + acceptance * gamma
+            round_tokens = n * (gamma + 1) + math.ceil(n * gamma
+                                                       * draft_frac)
+            slots = gamma + 1
+        else:
+            emit, round_tokens, slots = 1.0, n, 1
+
+        def cum(rounds):
+            return sum(model.step_time(round_tokens, ctx0 + k * n * slots)
+                       for k in range(rounds))
+        # (1) every task's own envelope, per-shard pricing (k=0 mandatory)
+        for k in range(1, h):
+            for t in tasks:
+                assert cum(k + 1) <= slack(t, 0.0) + k * emit * t.tpot_slo \
+                    + 1e-12, f"H={h}: round {k + 1} busts {t.req_id}"
+        # (2) KV page reservation, γ+1 slots/seq/round, acceptance-blind
+        if h > 1 and free_pages is not None:
+            need = 0
+            for c in contexts:
+                tail = (-c) % page_size
+                grow = h * slots
+                if grow > tail:
+                    need += -(-(grow - tail) // page_size)
+            assert need <= free_pages, f"H={h} outruns the page pool"
+        # (3) predicted-prefill TTFT reserve
+        if h > 1 and predicted:
+            assert cum(h) + model.step_time(predicted, 0) <= 0.5 + 1e-12, \
+                f"H={h} busts the predicted prefill's TTFT"
+
+    check()
+
+
 def test_commit_horizon_monotone_in_slack():
     # tpot below per-step time: each committed step *consumes* slack, so the
     # initial slack is what bounds the horizon

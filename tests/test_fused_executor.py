@@ -166,11 +166,13 @@ def test_one_dispatch_per_warm_step_across_bucket_ladder(setup):
     sneaks in an extra launch).
 
     Context: the BENCH_hybrid_step.json rollup's ``dispatches_per_step``
-    median of 2.0 was investigated and is an artifact of the summary mixing
+    median of 2.0 was an artifact of ``write_bench_summary`` mixing
     sequential-mode rows (3 launches/step) with fused rows (1/step) in one
-    min/median/max — not a fused-path regression. The fused path's own
-    invariant is pinned here per step, and the bench now also surfaces it
-    unmixed as ``fused_dispatches_per_step``.
+    min/median/max. The summary now segments metric rollups by label (a key
+    spanning several modes/systems is reported only per label), so the
+    pooled median is gone at the source; the fused path's own invariant is
+    pinned here per step and surfaced per label in the summary's
+    ``by_label`` stats.
     """
     cfg, _, params = setup
     execu = PagedTransformerExecutor(cfg, params, num_pages=512,

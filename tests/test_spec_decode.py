@@ -1,0 +1,348 @@
+"""Speculative decode inside the commit horizon (DESIGN.md §18).
+
+Pins the section's three contracts:
+
+* **Stream identity by construction**: the speculative engine's emitted
+  token streams are bit-identical to the non-speculating sequential oracle
+  — for the truncated-layer self-draft and the small-model draft, fp32 and
+  int8 KV, γ ∈ {1, 2, 4}, and the forced-rejection / acceptance-0 edge
+  cases. Draft quality moves the acceptance rate, never the tokens.
+* **Fairness-exact accounting**: VTC bills *accepted* tokens exactly, so a
+  speculative run at acceptance 0 leaves the committed per-tenant counters
+  byte-equal to a never-speculating run, and the pipelined (depth-2)
+  speculative engine replays the lock-step speculative engine bit for bit.
+* **One-dispatch horizon**: R speculative rounds run as ONE device dispatch
+  (compile key ``("spec", bsz, R, γ)``), optimistically reserved KV slots
+  are reclaimed per-sequence at slot granularity (``BlockAllocator
+  .shrink_to``), and the pool drains to zero leak after completion.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import LinearCostModel, commit_horizon, make_scheduler
+from repro.core.types import SchedTask, TaskKind
+from repro.engine import (BlockAllocator, Engine, EngineConfig,
+                          PagedTransformerExecutor, Request, SimExecutor)
+from repro.engine.spec_decode import (AcceptanceEWMA, SmallModelDraft,
+                                      TruncatedSelfDraft)
+from repro.models import ModelOpts, build_model
+
+KEY = jax.random.PRNGKey(0)
+PAGE, NUM_PAGES, MAX_PAGES = 16, 64, 8
+N_NEW = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_reduced("stablelm-3b"), window=None)
+    model = build_model(cfg, ModelOpts(attn_impl="dense"))
+    params = model.init(KEY)
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def draft_setup(setup):
+    """A genuinely smaller dense draft arch sharing the target's vocab."""
+    cfg, _, _ = setup
+    dcfg = dataclasses.replace(cfg, n_layers=2)
+    dmodel = build_model(dcfg, ModelOpts(attn_impl="dense"))
+    return dcfg, dmodel.init(jax.random.PRNGKey(42))
+
+
+def greedy_oracle(model, params, prompt, n_new):
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    logits, cache = model.prefill(params, toks, max_len=256)
+    out = [int(jnp.argmax(logits, -1)[0])]
+    for _ in range(n_new - 1):
+        logits, cache = model.decode_step(
+            params, jnp.asarray([out[-1]], jnp.int32), cache)
+        out.append(int(jnp.argmax(logits, -1)[0]))
+    return out
+
+
+def _requests(cfg, seed=3, n=3, n_new=N_NEW):
+    rng = jax.random.PRNGKey(seed)
+    reqs = []
+    for i in range(n):
+        plen = 5 + 9 * i
+        toks = [int(x) for x in jax.random.randint(
+            jax.random.fold_in(rng, i), (plen,), 0, cfg.vocab)]
+        reqs.append(Request(i, arrival=0.0, prompt_len=plen,
+                            max_new_tokens=n_new, ttft_slo=5.0,
+                            tpot_slo=5.0, tokens=toks))
+    return reqs
+
+
+def _drive(cfg, params, gamma, draft=None, kv_dtype="fp32",
+           force_reject=False, n_new=N_NEW):
+    ex = PagedTransformerExecutor(cfg, params, num_pages=NUM_PAGES,
+                                  page_size=PAGE,
+                                  max_pages_per_seq=MAX_PAGES,
+                                  kv_dtype=kv_dtype)
+    if draft is not None:
+        ex.set_draft(draft)
+        ex.spec_force_reject = force_reject
+    sched = make_scheduler("fairbatching",
+                           LinearCostModel(a=1e-4, b=1e-6, c=1e-10))
+    eng = Engine(sched, ex, EngineConfig(5.0, 5.0, speculate=gamma))
+    reqs = _requests(cfg, n_new=n_new)
+    for r in reqs:
+        eng.submit(r)
+    n = 0
+    while eng.has_work and n < 400:
+        eng.step()
+        n += 1
+    assert not eng.has_work
+    return eng, ex, reqs
+
+
+# ----------------------------------------------------------------------
+# real data plane: bit-identical streams by construction
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("gamma", [1, 2, 4])
+def test_self_draft_stream_bit_identical(setup, gamma):
+    """Truncated-layer self-draft speculation emits the sequential greedy
+    stream exactly — rejections fall back to the verified argmax."""
+    cfg, model, params = setup
+    eng, ex, reqs = _drive(cfg, params, gamma,
+                           TruncatedSelfDraft(max(cfg.n_layers // 2, 1)))
+    for r in reqs:
+        assert (list(eng.requests[r.req_id].generated_tokens)
+                == greedy_oracle(model, params, r.tokens, r.max_new_tokens))
+    assert eng.spec_drafted > 0
+
+
+def test_forced_rejection_stream_identical(setup):
+    """acceptance = 0 edge: every draft rejected, every round still emits
+    the verified argmax — stream unchanged, progress 1 token/round."""
+    cfg, model, params = setup
+    eng, ex, reqs = _drive(cfg, params, 2,
+                           TruncatedSelfDraft(max(cfg.n_layers // 2, 1)),
+                           force_reject=True)
+    assert eng.spec_accepted == 0 and eng.spec_drafted > 0
+    for r in reqs:
+        assert (list(eng.requests[r.req_id].generated_tokens)
+                == greedy_oracle(model, params, r.tokens, r.max_new_tokens))
+
+
+@pytest.mark.slow
+def test_small_model_draft_stream_bit_identical(setup, draft_setup):
+    """A separate small draft model behind the same interface: its own KV
+    pools (global page ids), host coverage map, and chunked backfill —
+    stream still bit-identical regardless of what it proposes."""
+    cfg, model, params = setup
+    dcfg, dparams = draft_setup
+    eng, ex, reqs = _drive(cfg, params, 2, SmallModelDraft(dcfg, dparams))
+    for r in reqs:
+        assert (list(eng.requests[r.req_id].generated_tokens)
+                == greedy_oracle(model, params, r.tokens, r.max_new_tokens))
+    # coverage gaps (admission after target prefill) were backfilled by
+    # draft-side dispatches, NOT billed to the target plane's counter
+    assert ex.draft.n_backfill_dispatches > 0
+
+
+@pytest.mark.slow
+def test_spec_int8_kv_matches_sequential_int8(setup):
+    """Quantized paged KV rides along: the int8 speculative stream equals
+    the int8 NON-speculating stream (the oracle for quantized numerics),
+    scale pages rolled back with their data pages."""
+    cfg, _, params = setup
+    base, _, breqs = _drive(cfg, params, gamma=0, kv_dtype="int8")
+    spec, _, sreqs = _drive(cfg, params, 2,
+                            TruncatedSelfDraft(max(cfg.n_layers // 2, 1)),
+                            kv_dtype="int8")
+    for r in sreqs:
+        assert (list(spec.requests[r.req_id].generated_tokens)
+                == list(base.requests[r.req_id].generated_tokens))
+
+
+def test_one_dispatch_per_run_and_no_page_leak(setup):
+    """R rounds = ONE device dispatch under the ("spec", bsz, R, γ) compile
+    key; optimistic H·(γ+1) page reservations are reclaimed at slot
+    granularity — the pool returns to its initial free count."""
+    cfg, _, params = setup
+    eng, ex, reqs = _drive(cfg, params, 2,
+                           TruncatedSelfDraft(max(cfg.n_layers // 2, 1)))
+    assert any(k[0] == "spec" and k[3] == 2 for k in ex.compile_keys
+               if isinstance(k, tuple)), ex.compile_keys
+    # every engine step was exactly one device dispatch (spec included)
+    assert ex.n_dispatches == eng.n_dispatches
+    # all pages back except the trash page
+    assert ex.alloc.free_blocks == NUM_PAGES - 1
+
+
+def test_capture_logits_raises_on_multistep(setup):
+    """Regression: ``execute_multi`` used to silently ignore
+    ``capture_logits`` — per-step logits never left the device. It must
+    raise loudly on both the multi-step and speculative paths."""
+    cfg, _, params = setup
+    ex = PagedTransformerExecutor(cfg, params, num_pages=NUM_PAGES,
+                                  page_size=PAGE,
+                                  max_pages_per_seq=MAX_PAGES,
+                                  capture_logits=True)
+    ex.set_draft(TruncatedSelfDraft(1))
+    sched = make_scheduler("fairbatching",
+                           LinearCostModel(a=1e-4, b=1e-6, c=1e-10))
+    eng = Engine(sched, ex, EngineConfig(5.0, 5.0, speculate=2))
+    for r in _requests(cfg, n=2):
+        eng.submit(r)
+    with pytest.raises(ValueError, match="capture_logits"):
+        n = 0
+        while eng.has_work and n < 50:
+            eng.step()
+            n += 1
+
+
+# ----------------------------------------------------------------------
+# slot-granular KV reclamation
+# ----------------------------------------------------------------------
+
+def test_block_allocator_shrink_to():
+    alloc = BlockAllocator(16, 4)
+    alloc.extend(7, 10)                  # 3 pages, 10 slots
+    free_after_grow = alloc.free_blocks
+    assert alloc.context_len(7) == 10
+    alloc.shrink_to(7, 10)               # no-op at the boundary
+    assert alloc.context_len(7) == 10
+    assert alloc.free_blocks == free_after_grow
+    alloc.shrink_to(7, 5)                # drops into page 2: frees page 3
+    assert alloc.context_len(7) == 5
+    assert alloc.free_blocks == free_after_grow + 1
+    alloc.shrink_to(7, 0)
+    assert alloc.context_len(7) == 0
+    with pytest.raises(AssertionError):
+        alloc.shrink_to(7, 1)            # cannot grow
+
+
+# ----------------------------------------------------------------------
+# sim data plane: fairness-exact accounting + pipelined parity
+# ----------------------------------------------------------------------
+
+TRUE = LinearCostModel(a=0.003, b=190e-6, c=20e-9)
+EST = LinearCostModel(a=0.003, b=150e-6, c=10e-9)
+
+
+def _sim_engine(spec, *, floor=0.0, acc=0.7, depth=1, seed=7):
+    from repro.data.traces import make_gamma_trace
+
+    cfg = EngineConfig(0.5, 0.05, pipeline_depth=depth, speculate=spec,
+                       spec_floor=floor)
+    ex = SimExecutor(TRUE, seed=seed, spec_acceptance=acc)
+    eng = Engine(make_scheduler("fairbatching",
+                                LinearCostModel(EST.a, EST.b, EST.c),
+                                vtc=True),
+                 ex, cfg)
+    trace = make_gamma_trace("qwentrace", rps=1.2, duration=40, seed=3)
+    for i, tr in enumerate(sorted(trace, key=lambda t: t.arrival)):
+        # batch arrivals: every tenant stays continuously present, so VTC
+        # counters are pure service totals (no path-dependent idle lift)
+        eng.submit(Request(i, 0.0, tr.prompt_len, tr.output_len,
+                           0.5, 0.05, tenant=f"t{i % 3}"))
+    eng.run()
+    return eng
+
+
+def test_acceptance_zero_vtc_counters_byte_equal():
+    """A speculative run whose every draft is rejected commits exactly the
+    tokens the never-speculating run commits — per-tenant VTC counters are
+    byte-equal floats (same deltas in the same per-request order)."""
+    base = _sim_engine(0)
+    zero = _sim_engine(3, floor=0.0, acc=0.0)
+    assert base.sched.admission.counters == zero.sched.admission.counters
+    assert len(base.done) == len(zero.done)
+    assert zero.spec_accepted == 0 and zero.spec_drafted > 0
+
+
+def test_pipelined_spec_matches_lockstep_spec():
+    """Depth-2 projected-state forming over speculative dispatches replays
+    the lock-step speculative engine bit for bit — list-emission grants
+    project exactly like scalar ones."""
+    a = _sim_engine(3, floor=0.7, acc=0.7, depth=1)
+    b = _sim_engine(3, floor=0.7, acc=0.7, depth=2)
+    assert (sorted((m.req_id, m.ttft, m.tpot_max, m.slo_ok) for m in a.done)
+            == sorted((m.req_id, m.ttft, m.tpot_max, m.slo_ok)
+                      for m in b.done))
+    assert a.sched.admission.counters == b.sched.admission.counters
+
+
+def test_spec_cuts_dispatches_at_high_acceptance():
+    base = _sim_engine(0)
+    spec = _sim_engine(3, floor=0.7, acc=0.7)
+    assert len(spec.done) == len(base.done)
+    assert spec.n_dispatches < base.n_dispatches
+    assert spec.spec_accepted > 0
+
+
+# ----------------------------------------------------------------------
+# capacity pricing + the pessimistic estimator
+# ----------------------------------------------------------------------
+
+def _decode_task(i, *, slack_s, tpot, ctx=1000, now=0.0):
+    j = 5
+    arrival = now + slack_s - 0.5 - tpot * j
+    return SchedTask(req_id=i, arrival=arrival, ttft_slo=0.5, tpot_slo=tpot,
+                     next_output_idx=j, new_tokens=1, context=ctx,
+                     kind=TaskKind.DECODE)
+
+
+def test_commit_horizon_spec_gamma_zero_is_bitwise_classic():
+    tasks = [_decode_task(i, slack_s=2.0, tpot=0.05) for i in range(4)]
+    classic = commit_horizon(tasks, 0.0, TRUE, max_horizon=64, ttft_slo=0.5)
+    spec0 = commit_horizon(tasks, 0.0, TRUE, max_horizon=64, ttft_slo=0.5,
+                           speculate=0, acceptance=0.9, draft_frac=0.5)
+    assert classic == spec0
+
+
+def test_commit_horizon_spec_pricing_is_pessimistic():
+    """Cold-start acceptance (0) prices each round at γ+1 verify tokens
+    plus drafting but earns only 1 emitted token of allowance — the
+    horizon must shrink vs both the classic depth and a measured-high
+    acceptance; rising acceptance may only deepen it."""
+    tasks = [_decode_task(i, slack_s=2.0, tpot=0.05) for i in range(4)]
+    classic = commit_horizon(tasks, 0.0, TRUE, max_horizon=64, ttft_slo=0.5)
+    cold = commit_horizon(tasks, 0.0, TRUE, max_horizon=64, ttft_slo=0.5,
+                          speculate=3, acceptance=0.0, draft_frac=0.15)
+    warm = commit_horizon(tasks, 0.0, TRUE, max_horizon=64, ttft_slo=0.5,
+                          speculate=3, acceptance=1.0, draft_frac=0.15)
+    assert cold <= classic
+    assert cold <= warm
+
+
+def test_commit_horizon_spec_page_reservation_is_acceptance_blind():
+    """KV pages are reserved at γ+1 slots per sequence per round no matter
+    the acceptance estimate: an optimistic estimate can never let the
+    horizon outrun the free pool."""
+    tasks = [_decode_task(i, slack_s=100.0, tpot=10.0, ctx=16)
+             for i in range(2)]
+    kw = dict(max_horizon=64, ttft_slo=0.5, free_pages=4, page_size=16,
+              speculate=3, draft_frac=0.15)
+    h_hi = commit_horizon(tasks, 0.0, TRUE, acceptance=1.0, **kw)
+    h_lo = commit_horizon(tasks, 0.0, TRUE, acceptance=0.0, **kw)
+    assert h_hi == h_lo
+    # 2 seqs × (h+1) rounds × 4 slots from page-aligned ctx=16: each round
+    # costs ceil(4k/16) pages per seq; 4 free pages cap the depth well
+    # below the envelope-funded 64
+    assert h_hi < 64
+
+
+def test_acceptance_ewma_is_one_sided():
+    ewma = AcceptanceEWMA(floor=0.2, alpha=0.3)
+    assert ewma.value == 0.2                     # cold start at the floor
+    ewma.update(70, 100)
+    assert ewma.value == pytest.approx(0.7)      # first sample adopted
+    ewma.update(10, 100)                         # collapse: adopt instantly
+    assert ewma.value == pytest.approx(0.2, abs=1e-9)
+    v = ewma.value
+    ewma.update(90, 100)                         # improvement: smooth in
+    assert v < ewma.value < 0.9
+    v = ewma.value
+    ewma.update(0, 0)                            # no drafts: no-op
+    assert ewma.value == v
+    floor = AcceptanceEWMA(floor=0.5)
+    floor.update(0, 100)
+    assert floor.value == 0.5                    # value never below floor
